@@ -1,0 +1,75 @@
+"""Shared benchmark machinery.
+
+Timing convention (paper §7.1): jit + warm-up call, then ``reps`` timed
+calls, report mean microseconds. The paper uses 200 async calls; on this
+1-core CPU container reps are adaptive (big cases get 3, small get 50) —
+reps are printed so the CSV is self-describing. Strategies are the pure-JAX
+schedule bodies (the Pallas kernels are TPU-targeted and validated in
+interpret mode; timing interpret mode would benchmark the interpreter).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (CellListEngine, Domain, make_lennard_jones,
+                        suggest_m_c)
+
+
+def time_fn(fn: Callable, *args, reps: int | None = None,
+            budget_s: float = 3.0) -> Tuple[float, int]:
+    """-> (mean_seconds, reps). First call compiles (excluded)."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    once = time.perf_counter() - t0
+    if reps is None:
+        reps = max(2, min(50, int(budget_s / max(once, 1e-6))))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps, reps
+
+
+def paper_case(division: int, ppc: int, seed: int = 0,
+               strategy: str = "xpencil", kernel=None,
+               batch_size: int = 64):
+    """One paper benchmark case: division^3 cells, ppc particles/cell avg,
+    uniform positions (paper §7.1)."""
+    dom = Domain.cubic(division, cutoff=1.0)
+    n = division ** 3 * ppc
+    pos = dom.sample_uniform(jax.random.PRNGKey(seed), n)
+    m_c = suggest_m_c(dom, pos)
+    eng = CellListEngine(dom, kernel or make_lennard_jones(), m_c=m_c,
+                         strategy=strategy, batch_size=batch_size)
+    return dom, pos, eng
+
+
+_COUNT_KERNEL = None
+
+
+def count_kernel():
+    """Pair kernel whose potential channel counts interactions (x-axis of
+    the paper's figures is measured, not estimated)."""
+    global _COUNT_KERNEL
+    if _COUNT_KERNEL is None:
+        from repro.core.interactions import PairKernel
+        _COUNT_KERNEL = PairKernel(
+            "count", lambda r2: jnp.zeros_like(r2),
+            lambda r2: jnp.ones_like(r2), flops=2)
+    return _COUNT_KERNEL
+
+
+def interactions_per_particle(division: int, ppc: int, seed: int = 0) -> float:
+    """Measured interactions / particle for a paper case (paper's x-axis)."""
+    dom, pos, eng = paper_case(division, ppc, seed, strategy="xpencil",
+                               kernel=count_kernel())
+    _, counts = eng.compute(pos)
+    return float(jnp.sum(counts)) / pos.shape[0]

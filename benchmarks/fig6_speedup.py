@@ -1,0 +1,63 @@
+"""Figure 6: strategy speedup vs Par-Part (the paper's PPNL baseline).
+
+Paper grid: box division d in {2,4,8,16,32} x avg particles/cell in
+{1,10,100}, uniform particles, LJ kernel, single precision. The y-value is
+speedup = t(par_part) / t(strategy); the x-axis is measured interactions per
+particle. CPU sizing note: the largest cases are capped unless --full
+(1-core container; the paper's trend region is fully covered).
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import List
+
+from .common import interactions_per_particle, paper_case, time_fn
+
+STRATEGIES = ["par_part", "cell_dense", "xpencil", "allin"]
+
+DEFAULT_GRID = [(2, 1), (4, 1), (8, 1), (16, 1), (32, 1),
+                (2, 10), (4, 10), (8, 10), (16, 10),
+                (2, 100), (4, 100), (8, 100)]
+FULL_GRID = [(d, p) for p in (1, 10, 100) for d in (2, 4, 8, 16, 32)]
+
+
+def run(full: bool = False, csv: bool = True) -> List[dict]:
+    grid = FULL_GRID if full else DEFAULT_GRID
+    rows = []
+    if csv:
+        print("name,us_per_call,derived")
+    for division, ppc in grid:
+        times = {}
+        for strat in STRATEGIES:
+            try:
+                dom, pos, eng = paper_case(division, ppc, strategy=strat)
+                secs, reps = time_fn(eng.compute, pos)
+                times[strat] = secs
+            except Exception as e:  # allin needs >= 27 cells etc.
+                times[strat] = float("nan")
+        ipp = interactions_per_particle(division, ppc)
+        base = times["par_part"]
+        for strat in STRATEGIES:
+            speedup = base / times[strat] if times[strat] == times[strat] \
+                else float("nan")
+            row = {"division": division, "ppc": ppc, "strategy": strat,
+                   "seconds": times[strat], "speedup_vs_par_part": speedup,
+                   "interactions_per_particle": ipp}
+            rows.append(row)
+            if csv:
+                print(f"fig6/{strat}/d{division}_p{ppc},"
+                      f"{times[strat] * 1e6:.1f},"
+                      f"speedup={speedup:.3f};ipp={ipp:.1f}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    run(full=args.full)
+
+
+if __name__ == "__main__":
+    main()

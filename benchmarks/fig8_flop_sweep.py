@@ -1,0 +1,55 @@
+"""Figure 8: execution time vs arithmetic intensity (5 / 21 / 168 FLOP).
+
+The paper's claim under test: X-pencil wins in the memory-bound (low-FLOP)
+regime and loses its edge as FLOP/interaction grows — the staged-byte
+savings become negligible against compute. Same kernels as the paper:
+low_flop (~5), Lennard-Jones (21), high_flop (LJ + 150).
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import List
+
+from repro.core import make_high_flop, make_lennard_jones, make_low_flop
+
+from .common import paper_case, time_fn
+
+KERNELS = [("low_flop", make_low_flop), ("lj", make_lennard_jones),
+           ("high_flop", make_high_flop)]
+STRATEGIES = ["par_part", "cell_dense", "xpencil"]
+
+
+def run(division: int = 8, ppc: int = 10, csv: bool = True) -> List[dict]:
+    rows = []
+    if csv:
+        print("name,us_per_call,derived")
+    for kname, kmk in KERNELS:
+        kern = kmk()
+        base = None
+        for strat in STRATEGIES:
+            dom, pos, eng = paper_case(division, ppc, strategy=strat,
+                                       kernel=kern)
+            secs, reps = time_fn(eng.compute, pos)
+            if strat == "par_part":
+                base = secs
+            rows.append({"kernel": kname, "flops": kern.flops,
+                         "strategy": strat, "seconds": secs,
+                         "speedup_vs_par_part": base / secs})
+            if csv:
+                print(f"fig8/{kname}/{strat}/d{division}_p{ppc},"
+                      f"{secs * 1e6:.1f},"
+                      f"flops={kern.flops};speedup={base / secs:.3f}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--division", type=int, default=8)
+    ap.add_argument("--ppc", type=int, default=10)
+    args = ap.parse_args()
+    run(args.division, args.ppc)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Roofline table reader: formats experiments/ dry-run + cost-run JSONs.
+
+Not a timing benchmark — renders §Roofline of EXPERIMENTS.md from the
+artifacts produced by ``repro.launch.dryrun`` and ``repro.launch.costrun``.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[1] / "experiments"
+
+
+def load_records(sub: str = "dryrun"):
+    recs = []
+    d = ROOT / sub
+    if not d.exists():
+        return recs
+    for p in sorted(d.glob("*.json")):
+        try:
+            recs.append(json.loads(p.read_text()))
+        except Exception:
+            pass
+    return recs
+
+
+def run(csv: bool = True, sub: str = "dryrun"):
+    recs = load_records(sub)
+    if csv:
+        print("name,us_per_call,derived")
+    for r in recs:
+        key = f"{sub}/{r.get('arch')}/{r.get('shape')}/{r.get('mesh')}"
+        if r.get("tag"):
+            key += f"/{r['tag']}"
+        if "skipped" in r:
+            print(f"{key},0.0,SKIP:{r['skipped'][:80]}")
+            continue
+        if "error" in r:
+            print(f"{key},0.0,ERROR:{r['error'][:80]}")
+            continue
+        rl = r["roofline"]
+        mem = r.get("memory_analysis", {})
+        dom_t = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        print(f"{key},{dom_t * 1e6:.1f},"
+              f"dom={rl['dominant']};compute_s={rl['compute_s']:.4f};"
+              f"memory_s={rl['memory_s']:.4f};"
+              f"collective_s={rl['collective_s']:.4f};"
+              f"useful={rl['useful_ratio']:.3f};"
+              f"temp_GiB={mem.get('temp_size_in_bytes', 0) / 2**30:.1f}")
+    return recs
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Section 6: the paper's prefix sum — operation/barrier counts + timing.
+
+Validates the paper's complexity claims exactly (N-1 upward updates, N-h
+downward, 2h-3 barriers vs Blelloch's 2h) and times the jnp implementation
+against jnp.cumsum. The Pallas VMEM kernel is correctness-checked in tests
+(timing it in interpret mode would time the interpreter).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blelloch_counts, operation_counts, paper_prefix_sum
+from repro.core.prefix import paper_height
+
+from .common import time_fn
+
+
+def run(csv: bool = True):
+    rows = []
+    if csv:
+        print("name,us_per_call,derived")
+    for n in (64, 256, 1024, 4096, 16384):
+        up, down, barriers = operation_counts(n)
+        b_up, b_down, b_bar = blelloch_counts(n)
+        h = paper_height(n)
+        x = jnp.asarray(np.random.randint(0, 100, n), jnp.int32)
+        f = jax.jit(paper_prefix_sum)
+        secs, _ = time_fn(f, x)
+        ref = jax.jit(lambda v: jnp.cumsum(v))
+        secs_ref, _ = time_fn(ref, x)
+        derived = (f"updates={up}+{down};barriers={barriers};"
+                   f"blelloch_barriers={b_bar};paper_claims="
+                   f"up==N-1:{up == n - 1},down==N-h:{down == n - h},"
+                   f"bar==2h-3:{barriers == 2 * h - 3};"
+                   f"cumsum_us={secs_ref * 1e6:.1f}")
+        rows.append({"n": n, "up": up, "down": down, "barriers": barriers,
+                     "seconds": secs, "cumsum_seconds": secs_ref})
+        if csv:
+            print(f"prefix/n{n},{secs * 1e6:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

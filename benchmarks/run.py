@@ -1,0 +1,48 @@
+"""Benchmark runner: one section per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--full] [--skip-timing]``
+prints ``name,us_per_call,derived`` CSV blocks:
+
+  fig6/*     strategy speedups vs Par-Part (paper Fig. 6)
+  table1/*   PPNL vs X-pencil seconds (paper Table 1)
+  fig8/*     arithmetic-intensity sweep (paper Fig. 8)
+  prefix/*   §6 prefix-sum op/barrier counts + timing
+  traffic/*  Fig. 7 analogue (TPU staging-traffic model)
+  dryrun/*   LM roofline terms from the multi-pod dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="the complete paper grid (slow on 1 CPU core)")
+    ap.add_argument("--skip-timing", action="store_true",
+                    help="only the analytical/artifact-reading sections")
+    args = ap.parse_args()
+
+    from . import (fig6_speedup, fig8_flop_sweep, lm_roofline, prefix_bench,
+                   table1_timing, traffic_model)
+
+    print("# traffic model (paper Fig. 7 analogue)", flush=True)
+    traffic_model.run()
+    print("# LM roofline (dry-run artifacts)", flush=True)
+    lm_roofline.run()
+    lm_roofline.run(sub="costrun")
+    if args.skip_timing:
+        return
+    print("# prefix sum (paper §6)", flush=True)
+    prefix_bench.run()
+    print("# fig6 speedups", flush=True)
+    fig6_speedup.run(full=args.full)
+    print("# table1 PPNL vs X-pencil", flush=True)
+    table1_timing.run(full=args.full)
+    print("# fig8 FLOP sweep", flush=True)
+    fig8_flop_sweep.run()
+
+
+if __name__ == "__main__":
+    main()

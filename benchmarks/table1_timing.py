@@ -1,0 +1,47 @@
+"""Table 1: Par-Part-NoLoop vs X-pencil execution times per configuration.
+
+The paper's summary table (execution seconds, one row per (division, ppc)).
+Covers the same rows as Figure 6 but in the paper's two-column PPNL/X-pencil
+format, with the measured interactions-per-particle first column.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from .common import interactions_per_particle, paper_case, time_fn
+
+DEFAULT_GRID = [(2, 1), (4, 1), (8, 1), (16, 1), (32, 1),
+                (2, 10), (4, 10), (8, 10), (16, 10),
+                (2, 100), (4, 100), (8, 100)]
+FULL_GRID = [(d, p) for p in (1, 10, 100) for d in (2, 4, 8, 16, 32)]
+
+
+def run(full: bool = False, csv: bool = True):
+    rows = []
+    if csv:
+        print("name,us_per_call,derived")
+    for division, ppc in (FULL_GRID if full else DEFAULT_GRID):
+        ipp = interactions_per_particle(division, ppc)
+        _, pos, eng_pp = paper_case(division, ppc, strategy="par_part")
+        t_pp, _ = time_fn(eng_pp.compute, pos)
+        _, _, eng_xp = paper_case(division, ppc, strategy="xpencil")
+        t_xp, _ = time_fn(eng_xp.compute, pos)
+        rows.append({"division": division, "ppc": ppc, "ipp": ipp,
+                     "ppnl_s": t_pp, "xpencil_s": t_xp})
+        if csv:
+            print(f"table1/d{division}_p{ppc},{t_pp * 1e6:.1f},"
+                  f"ipp={ipp:.1f};ppnl_s={t_pp:.3e};xpencil_s={t_xp:.3e};"
+                  f"ratio={t_pp / t_xp:.3f}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    run(full=args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Figure 7 analogue: staging-traffic model per strategy (DESIGN.md §2).
+
+GPU occupancy / L2-hit metrics have no TPU meaning; this table reports what
+the shared-memory strategies actually trade on TPU: HBM bytes per
+interaction, staged VMEM bytes per grid step (double-buffer head-room), and
+byte reuse — for each paper configuration. This is the quantitative form of
+the paper's §5.1 argument for why All-in-SM loses and X-pencil wins.
+"""
+
+from __future__ import annotations
+
+from repro.core import Domain
+from repro.core.traffic import model
+
+
+def run(csv: bool = True):
+    rows = []
+    if csv:
+        print("name,us_per_call,derived")
+    for division in (4, 8, 16, 32):
+        for ppc in (1, 10, 100):
+            dom = Domain.cubic(division, cutoff=1.0)
+            m_c = max(8, int(ppc * 1.6))
+            for strat, rep in model(dom, m_c, ppc).items():
+                rows.append(rep)
+                if csv:
+                    print(f"traffic/{strat}/d{division}_p{ppc},0.0,"
+                          f"hbmB_per_inter={rep.hbm_bytes_per_interaction:.2f};"
+                          f"vmem_step_B={rep.staged_bytes_per_step};"
+                          f"reuse={rep.reuse_factor:.2f};"
+                          f"padded_waste={rep.padded_work_fraction:.3f};"
+                          f"grid={rep.grid_steps}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

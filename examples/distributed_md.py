@@ -1,0 +1,68 @@
+"""Multi-device MD: spatial domain decomposition with halo exchange.
+
+    PYTHONPATH=src python examples/distributed_md.py [--devices 4]
+
+Runs the distributed particle engine (shard_map + ppermute ghost planes, the
+multi-pod version of the paper's grid) on emulated host devices and checks
+it against the single-device engine. On a real pod the same code shards over
+the physical mesh.
+"""
+
+import argparse
+import os
+import pathlib
+import sys
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--devices", type=int, default=4)
+args = ap.parse_args()
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           f" --xla_force_host_platform_device_count="
+                           f"{args.devices}")
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CellListEngine, Domain, make_lennard_jones, suggest_m_c
+from repro.dist.halo import make_distributed_compute, partition_by_z
+
+
+def main():
+    n_dev = args.devices
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    domain = Domain.cubic(8, cutoff=1.0, periodic=True)
+    key = jax.random.PRNGKey(0)
+    positions = domain.sample_uniform(key, 4_000)
+    kernel = make_lennard_jones()
+    m_c = suggest_m_c(domain, positions)
+
+    print(f"{n_dev} devices, grid {domain.ncells} split along Z "
+          f"({domain.nz // n_dev} planes/shard), N={positions.shape[0]}")
+
+    f_ref, _ = CellListEngine(domain, kernel, m_c=m_c,
+                              strategy="xpencil").compute(positions)
+    pos_part = partition_by_z(domain, positions, n_dev)
+    dist_fn = make_distributed_compute(domain, kernel, m_c, mesh)
+    forces, pot = dist_fn(pos_part)
+
+    ref = {tuple(np.round(np.asarray(positions)[i], 5)): i
+           for i in range(positions.shape[0])}
+    pp, fn = np.asarray(pos_part), np.asarray(forces)
+    err = 0.0
+    checked = 0
+    for j in range(pp.shape[0]):
+        if pp[j, 0] > 1e7:
+            continue
+        i = ref[tuple(np.round(pp[j], 5))]
+        err = max(err, float(np.abs(fn[j] - np.asarray(f_ref)[i]).max()))
+        checked += 1
+    print(f"checked {checked} particles across shards; "
+          f"max |F_dist - F_single| = {err:.2e}")
+    assert checked == positions.shape[0] and err < 1e-3
+    print("halo-exchange engine matches the single-device engine.")
+
+
+if __name__ == "__main__":
+    main()

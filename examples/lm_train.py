@@ -1,0 +1,30 @@
+"""Train a reduced LM config for a few hundred steps (CPU-runnable).
+
+    PYTHONPATH=src python examples/lm_train.py --arch gemma2-2b --steps 200
+
+Uses the same launcher internals as the production path (checkpoint every K
+steps, deterministic data cursor, restart-safe); pick any of the 10 assigned
+architectures — the smoke-sized variant of that family is trained.
+"""
+
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+    train_main(["--arch", args.arch, "--smoke", "--steps", str(args.steps),
+                "--batch", "8", "--seq", "64", "--ckpt-dir",
+                "/tmp/repro_lm_ckpt", "--log-every", "20"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""SPH demo: weakly-compressible settling column (paper §8's target domain).
+
+    PYTHONPATH=src python examples/sph_demo.py
+
+SPH is the paper's motivating application (30-40 neighbors/particle = few
+particles per cell). The density loop and pressure forces both run through
+the engine's X-pencil schedule.
+"""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Domain, suggest_m_c
+from repro.physics.sph import SPHParams, density, pressure, sph_step
+
+
+def main():
+    domain = Domain.cubic(6, cutoff=1.0)
+    key = jax.random.PRNGKey(0)
+    # a block of fluid in the lower half of the box
+    n = 4_000
+    pos = domain.sample_uniform(key, n)
+    pos = pos.at[:, 2].multiply(0.5)
+    vel = jnp.zeros_like(pos)
+    params = SPHParams(h=1.0, rho0=float(n) / (6 ** 3 / 2), c0=10.0,
+                       mass=1.0)
+    m_c = max(24, suggest_m_c(domain, pos))
+
+    rho = density(domain, pos, params, m_c)
+    print(f"N={n}, M_C={m_c}")
+    print(f"initial density: mean={float(rho.mean()):.3f} "
+          f"min={float(rho.min()):.3f} max={float(rho.max()):.3f}")
+    p = pressure(rho, params)
+    print(f"initial pressure: mean={float(p.mean()):.3f}")
+
+    step = jax.jit(lambda pos, vel: sph_step(domain, pos, vel, params, m_c,
+                                             dt=2e-3))
+    for it in range(30):
+        pos, vel, rho = step(pos, vel)
+        if it % 5 == 0:
+            print(f"  step {it:3d}: <rho>={float(rho.mean()):8.3f}  "
+                  f"max|v|={float(jnp.max(jnp.abs(vel))):.4f}  "
+                  f"z-center={float(pos[:, 2].mean()):.3f}")
+    print("done (densities stay finite and bounded -> neighbor loops are "
+          "consistent under motion)")
+
+
+if __name__ == "__main__":
+    main()

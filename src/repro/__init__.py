@@ -1,0 +1,4 @@
+"""repro: cutoff-radius particle interactions (Algis et al. 2024) as a
+multi-pod JAX + Pallas framework. See DESIGN.md for the system inventory."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,41 @@
+"""Config registry: ``--arch <id>`` resolution for launcher/dry-run/tests."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from .base import (ModelConfig, SHAPES, ShapeCell, cell_is_runnable,
+                   input_specs, shape_by_name)
+
+_ARCH_MODULES: Dict[str, str] = {
+    "grok-1-314b": "grok_1_314b",
+    "arctic-480b": "arctic_480b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "mamba2-130m": "mamba2_130m",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "starcoder2-3b": "starcoder2_3b",
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "gemma2-2b": "gemma2_2b",
+    "phi-3-vision-4.2b": "phi_3_vision_4_2b",
+    "whisper-base": "whisper_base",
+}
+
+ARCH_IDS: List[str] = list(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; have {ARCH_IDS}")
+    mod = importlib.import_module(f".{_ARCH_MODULES[arch]}", __package__)
+    return mod.config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f".{_ARCH_MODULES[arch]}", __package__)
+    return mod.smoke()
+
+
+__all__ = ["ModelConfig", "SHAPES", "ShapeCell", "ARCH_IDS", "get_config",
+           "get_smoke_config", "cell_is_runnable", "input_specs",
+           "shape_by_name"]

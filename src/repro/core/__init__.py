@@ -1,0 +1,30 @@
+"""Core: the paper's cell-list interaction engine (DESIGN.md §1-2)."""
+
+from .domain import Domain
+from .binning import CellBins, bin_particles, gather_to_particles
+from .engine import CellListEngine, compute_interactions, suggest_m_c
+from .interactions import (
+    PairKernel,
+    make_gravity,
+    make_high_flop,
+    make_lennard_jones,
+    make_low_flop,
+    make_sph_density,
+    pair_contribution,
+)
+from .prefix import (
+    blelloch_counts,
+    exclusive_prefix_sum,
+    operation_counts,
+    paper_prefix_sum,
+)
+from . import strategies, traffic
+
+__all__ = [
+    "Domain", "CellBins", "bin_particles", "gather_to_particles",
+    "CellListEngine", "compute_interactions", "suggest_m_c",
+    "PairKernel", "make_gravity", "make_high_flop", "make_lennard_jones",
+    "make_low_flop", "make_sph_density", "pair_contribution",
+    "paper_prefix_sum", "exclusive_prefix_sum", "operation_counts",
+    "blelloch_counts", "strategies", "traffic",
+]

@@ -1,0 +1,194 @@
+"""Binning pipeline: the paper's Section 2 preprocessing, TPU-shaped.
+
+Pipeline (paper order, atomic-free):
+  1. per-particle cell index (parallel),
+  2. per-cell counts      -> ``jax.ops.segment_sum`` (replaces atomics),
+  3. cell start offsets   -> the paper's prefix sum (``core.prefix``),
+  4. out-of-place reorder -> stable argsort by cell id + rank-in-cell,
+  5. **dense cell-slot layout**: every cell owns exactly ``m_c`` contiguous
+     slots in SoA planes of shape ``(nz+2, ny+2, (nx+2)*m_c)``.
+
+Step 5 is the TPU adaptation (DESIGN.md §2): X stays the fastest axis (the
+paper's linearization), so an X-pencil of cells is one contiguous row and the
+3-cell interaction window of a cell is one contiguous ``3*m_c`` slice — the
+structural equivalent of what the paper builds in shared memory with its
+local-offset prefix sums. The one-cell ghost ring (always empty for open
+boundaries, wrapped copies for periodic domains) removes all border branching.
+
+``m_c`` is the paper's M_C — the max particles per cell — and must be a
+static (trace-time) bound. Overflowing particles are dropped by the scatter
+(``mode='drop'``); ``CellBins.counts`` lets callers detect that and re-bin
+with a larger bound (the engine does exactly what the paper does: track the
+max while computing the prefix sum).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .domain import Domain
+from .prefix import exclusive_prefix_sum
+
+Array = jnp.ndarray
+
+# Sentinel coordinate for empty slots: far outside any box, finite so that
+# (sentinel - real) stays finite and (sentinel - sentinel) == 0; both cases
+# are masked out by slot ids anyway (DESIGN: TPUs want masks, not NaN traps).
+EMPTY_POS = 1.0e8
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CellBins:
+    """Dense cell-slot state. All planes share shape (nz+2, ny+2, (nx+2)*m_c)."""
+
+    planes: Dict[str, Array]      # SoA field planes ("x","y","z",...)
+    slot_id: Array                # int32 particle index per slot, -1 if empty
+    counts: Array                 # (n_cells,) particles per cell
+    offsets: Array                # (n_cells,) exclusive prefix (paper Fig. 1)
+    particle_slot: Array          # (N,) flat slot index of each particle
+    m_c: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def max_count(self) -> Array:
+        return jnp.max(self.counts)
+
+
+def padded_shape(domain: Domain, m_c: int) -> Tuple[int, int, int]:
+    nx, ny, nz = domain.ncells
+    return (nz + 2, ny + 2, (nx + 2) * m_c)
+
+
+def bin_particles(domain: Domain, positions: Array,
+                  fields: Dict[str, Array] | None = None, *,
+                  m_c: int) -> CellBins:
+    """Bin particles into the dense slot layout.
+
+    Args:
+      positions: (N, 3) float array.
+      fields: optional extra per-particle scalars to bin alongside x/y/z.
+      m_c: static max-particles-per-cell bound (paper's M_C).
+    """
+    n = positions.shape[0]
+    nx, ny, nz = domain.ncells
+    n_cells = domain.n_cells
+
+    coords = domain.cell_coords(positions)          # (N, 3) int32
+    cids = domain.linearize(coords)                 # (N,)
+
+    counts = jax.ops.segment_sum(
+        jnp.ones((n,), jnp.int32), cids, num_segments=n_cells)
+    offsets = exclusive_prefix_sum(counts)          # (n_cells,)
+
+    # Rank of each particle within its cell via one stable sort (the paper's
+    # atomic slot-grab, determinized).
+    order = jnp.argsort(cids, stable=True)          # (N,) particle ids, sorted
+    sorted_cids = cids[order]
+    rank = jnp.arange(n, dtype=jnp.int32) - offsets[sorted_cids]
+
+    # Flat index into the padded planes; ranks >= m_c fall off the end of the
+    # cell's slot range — push them fully out of bounds so 'drop' removes them.
+    cxyz = coords[order]
+    row_len = (nx + 2) * m_c
+    slot_col = (cxyz[:, 0] + 1) * m_c + rank
+    flat = ((cxyz[:, 2] + 1) * (ny + 2) + (cxyz[:, 1] + 1)) * row_len + slot_col
+    total = (nz + 2) * (ny + 2) * row_len
+    flat = jnp.where(rank < m_c, flat, total)       # out of range -> dropped
+
+    shape = padded_shape(domain, m_c)
+
+    def scatter(values: Array, fill: float) -> Array:
+        plane = jnp.full((total,), fill, dtype=values.dtype)
+        plane = plane.at[flat].set(values[order], mode="drop")
+        return plane.reshape(shape)
+
+    planes = {
+        "x": scatter(positions[:, 0], EMPTY_POS),
+        "y": scatter(positions[:, 1], EMPTY_POS),
+        "z": scatter(positions[:, 2], EMPTY_POS),
+    }
+    if fields:
+        for k, v in fields.items():
+            planes[k] = scatter(v, 0.0)
+
+    slot_flat = jnp.full((total,), -1, dtype=jnp.int32)
+    slot_flat = slot_flat.at[flat].set(order.astype(jnp.int32), mode="drop")
+    slot_id = slot_flat.reshape(shape)
+
+    particle_slot = jnp.zeros((n,), dtype=jnp.int32).at[order].set(
+        flat.astype(jnp.int32), mode="drop")
+
+    bins = CellBins(planes=planes, slot_id=slot_id, counts=counts,
+                    offsets=offsets, particle_slot=particle_slot, m_c=m_c)
+    if domain.any_periodic:
+        bins = _fill_periodic_ghosts(domain, bins)
+    return bins
+
+
+def _fill_periodic_ghosts(domain: Domain, bins: CellBins) -> CellBins:
+    """Copy wrapped interior slabs into the ghost ring (minimum image),
+    per periodic axis."""
+    nx, ny, nz = domain.ncells
+    m_c = bins.m_c
+    lx, ly, lz = domain.box
+    px, py, pz = domain.periodic_axes
+
+    def wrap(plane: Array, field: str) -> Array:
+        if px:
+            dx = lx if field == "x" else 0.0
+            left_src = plane[:, :, nx * m_c:(nx + 1) * m_c]
+            right_src = plane[:, :, m_c:2 * m_c]
+            plane = plane.at[:, :, 0:m_c].set(left_src - dx)
+            plane = plane.at[:, :, (nx + 1) * m_c:].set(right_src + dx)
+        if py:
+            dy = ly if field == "y" else 0.0
+            plane = plane.at[:, 0, :].set(plane[:, ny, :] - dy)
+            plane = plane.at[:, ny + 1, :].set(plane[:, 1, :] + dy)
+        if pz:
+            dz = lz if field == "z" else 0.0
+            plane = plane.at[0, :, :].set(plane[nz, :, :] - dz)
+            plane = plane.at[nz + 1, :, :].set(plane[1, :, :] + dz)
+        return plane
+
+    planes = {k: wrap(v, k) for k, v in bins.planes.items()}
+
+    # Ghost slots mirror the interior particle ids so self-interaction
+    # masking (slot_id equality) keeps excluding only the true self-pair; a
+    # particle must still interact with its own periodic *image*, so ghost
+    # copies carry offset ids (id + 1e9).
+    sid = bins.slot_id
+
+    def bump(s):
+        return jnp.where((s >= 0) & (s < 1_000_000_000), s + 1_000_000_000, s)
+
+    s = sid
+    if px:
+        big = bump(s)
+        s = s.at[:, :, 0:m_c].set(big[:, :, nx * m_c:(nx + 1) * m_c])
+        s = s.at[:, :, (nx + 1) * m_c:].set(big[:, :, m_c:2 * m_c])
+    if py:
+        big = bump(s)
+        s = s.at[:, 0, :].set(big[:, ny, :])
+        s = s.at[:, ny + 1, :].set(big[:, 1, :])
+    if pz:
+        big = bump(s)
+        s = s.at[0, :, :].set(big[nz, :, :])
+        s = s.at[nz + 1, :, :].set(big[1, :, :])
+
+    return dataclasses.replace(bins, planes=planes, slot_id=s)
+
+
+def gather_to_particles(bins: CellBins, plane: Array) -> Array:
+    """Read a per-slot plane back to per-particle order (inverse of scatter)."""
+    return plane.reshape(-1)[bins.particle_slot]
+
+
+def interior(domain: Domain, plane: Array, m_c: int) -> Array:
+    """View of the non-ghost region, reshaped to (nz, ny, nx, m_c)."""
+    nx, ny, nz = domain.ncells
+    core = plane[1:nz + 1, 1:ny + 1, m_c:(nx + 1) * m_c]
+    return core.reshape(nz, ny, nx, m_c)

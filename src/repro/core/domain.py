@@ -1,0 +1,130 @@
+"""Simulation domain and uniform cell grid.
+
+The paper's setting: a 3-D box divided into a regular grid whose cell width is
+at least the cutoff radius ``r_c``, so every interaction partner of a particle
+lives in the particle's own cell or one of its 26 neighbors. Cells are
+linearized X-fastest (the paper's layout, and the property the X-pencil
+strategy exploits: a pencil of cells along X is contiguous in memory).
+
+Nothing here touches devices; it is static geometry shared by every strategy,
+the Pallas kernels, and the distributed domain decomposition.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class Domain:
+    """A rectangular simulation box with a uniform cell grid.
+
+    Attributes:
+      box: physical box lengths ``(Lx, Ly, Lz)``.
+      ncells: grid shape ``(nx, ny, nz)``; cell width = L / n >= cutoff.
+      cutoff: interaction cutoff radius ``r_c``.
+      periodic: wrap neighbor lookups (minimum-image). The paper uses open
+        boundaries (border cells simply have fewer neighbors); periodic is
+        provided for the MD/SPH examples.
+    """
+
+    box: Tuple[float, float, float]
+    ncells: Tuple[int, int, int]
+    cutoff: float
+    periodic: bool | Tuple[bool, bool, bool] = False
+
+    def __post_init__(self):
+        for length, n in zip(self.box, self.ncells):
+            width = length / n
+            if width + 1e-9 < self.cutoff:
+                raise ValueError(
+                    f"cell width {width} < cutoff {self.cutoff}; the 27-cell "
+                    "neighborhood would miss interactions"
+                )
+
+    @property
+    def periodic_axes(self) -> Tuple[bool, bool, bool]:
+        if isinstance(self.periodic, tuple):
+            return self.periodic
+        return (bool(self.periodic),) * 3
+
+    @property
+    def any_periodic(self) -> bool:
+        return any(self.periodic_axes)
+
+    # -- static geometry ----------------------------------------------------
+
+    @property
+    def nx(self) -> int:
+        return self.ncells[0]
+
+    @property
+    def ny(self) -> int:
+        return self.ncells[1]
+
+    @property
+    def nz(self) -> int:
+        return self.ncells[2]
+
+    @property
+    def n_cells(self) -> int:
+        return self.nx * self.ny * self.nz
+
+    @property
+    def cell_width(self) -> Tuple[float, float, float]:
+        return tuple(l / n for l, n in zip(self.box, self.ncells))
+
+    @classmethod
+    def cubic(cls, division: int, cutoff: float = 1.0, periodic: bool = False) -> "Domain":
+        """The paper's benchmark geometry: a cube of ``division**3`` cells whose
+        width equals the cutoff (box side = division * cutoff)."""
+        side = division * cutoff
+        return cls(box=(side,) * 3, ncells=(division,) * 3, cutoff=cutoff,
+                   periodic=periodic)
+
+    # -- indexing ------------------------------------------------------------
+
+    def cell_coords(self, positions: Array) -> Array:
+        """(N, 3) positions -> (N, 3) integer cell coordinates (ix, iy, iz)."""
+        widths = jnp.asarray(self.cell_width, dtype=positions.dtype)
+        coords = jnp.floor(positions / widths).astype(jnp.int32)
+        ns = jnp.asarray(self.ncells, dtype=jnp.int32)
+        wrapped = jnp.mod(coords, ns)
+        clipped = jnp.clip(coords, 0, ns - 1)
+        per = jnp.asarray(self.periodic_axes)
+        return jnp.where(per, wrapped, clipped)
+
+    def linearize(self, coords: Array) -> Array:
+        """(..., 3) cell coords -> linear index, X fastest (paper layout)."""
+        ix, iy, iz = coords[..., 0], coords[..., 1], coords[..., 2]
+        return (iz * self.ny + iy) * self.nx + ix
+
+    def cell_ids(self, positions: Array) -> Array:
+        return self.linearize(self.cell_coords(positions))
+
+    def neighbor_offsets(self) -> np.ndarray:
+        """The (27, 3) stencil of neighbor cell offsets, X fastest ordering."""
+        offs = [(dx, dy, dz)
+                for dz in (-1, 0, 1) for dy in (-1, 0, 1) for dx in (-1, 0, 1)]
+        return np.asarray(offs, dtype=np.int32)
+
+    def minimum_image(self, delta: Array) -> Array:
+        """Wrap a displacement vector into the minimum image (periodic axes)."""
+        if not self.any_periodic:
+            return delta
+        box = jnp.asarray(self.box, dtype=delta.dtype)
+        per = jnp.asarray(self.periodic_axes)
+        return delta - jnp.where(per, box * jnp.round(delta / box), 0.0)
+
+    def sample_uniform(self, key, n: int, dtype=jnp.float32) -> Array:
+        """Uniformly distributed particles (the paper's benchmark input)."""
+        import jax
+
+        box = jnp.asarray(self.box, dtype=dtype)
+        return jax.random.uniform(key, (n, 3), dtype=dtype) * box

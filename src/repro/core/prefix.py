@@ -1,0 +1,106 @@
+"""The paper's prefix-sum (Section 6 / Algorithm 6) in JAX.
+
+Blelloch's scan builds a binary tree of sums with an upward and a downward
+pass and ``2h`` barriers. The paper's variant places the final value of every
+"right spine" element already during the upward pass and therefore:
+
+  * needs ``2h - 3`` barriers instead of ``2h``  (h = ceil(log2(N + 1)));
+  * performs ``N - 1`` element updates upward and ``N - h`` downward;
+  * needs no temporary storage, no final swap, and half the threads.
+
+This module is the *algorithmic reference*: the level structure below mirrors
+the paper's CUDA Code 1 exactly (each ``while`` iteration is one kernel-wide
+barrier; the vectorized index update inside is what all threads of the block
+do between two barriers). ``repro.kernels.prefix_sum`` lowers the same
+schedule to a Pallas VMEM kernel; both are tested against ``jnp.cumsum`` and
+against the paper's operation/barrier counts.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def paper_prefix_sum(x: Array) -> Array:
+    """Inclusive prefix sum along the last axis, paper's schedule.
+
+    Works for any length N (the per-level index sets below carry the same
+    ``idN < N`` guard as the paper's inner loops).
+    """
+    n = x.shape[-1]
+    if n <= 1:
+        return x
+    # Upward pass: level step js doubles; element js-1, 2js-1, ... absorbs the
+    # partial sum js/2 positions to its left. Right-spine elements (indices
+    # 2^k - 1) end up final here — the trick that removes Blelloch's swap.
+    js = 2
+    while js <= n:
+        idx = jnp.arange(js - 1, n, js)
+        x = x.at[..., idx].add(x[..., idx - js // 2])
+        js *= 2
+    # Downward pass: propagate each node's value to the element halfway into
+    # the *next* block (paper: "each node's computed sum is added to its right
+    # child, except for the last node of each level"). Start level follows the
+    # paper's CUDA Code 1 (js_exit / 2) — the sequential pseudo-code's js/4
+    # start skips a needed level for N that are not exact powers of two.
+    js = max(4, js // 2)
+    while js > 1:
+        jsd2 = js // 2
+        start = js + jsd2 - 1
+        if start < n:
+            idx = jnp.arange(start, n, js)
+            x = x.at[..., idx].add(x[..., idx - jsd2])
+        js = jsd2
+    return x
+
+
+def exclusive_prefix_sum(x: Array) -> Array:
+    """Exclusive scan built from the paper's inclusive scan (binning needs the
+    cell *start offsets*, cf. paper Figure 1)."""
+    inc = paper_prefix_sum(x)
+    zero = jnp.zeros_like(x[..., :1])
+    return jnp.concatenate([zero, inc[..., :-1]], axis=-1)
+
+
+def operation_counts(n: int) -> Tuple[int, int, int]:
+    """(updates_upward, updates_downward, barriers) for length ``n``.
+
+    The paper proves updates_up = N - 1, updates_down = N - h and
+    barriers = 2h - 3 for N = 2^k. For general N we count the actual index
+    sets (the formulas hold exactly at powers of two; tests check both).
+    """
+    ups = 0
+    levels_up = 0
+    js = 2
+    while js <= n:
+        ups += len(range(js - 1, n, js))
+        levels_up += 1
+        js *= 2
+    downs = 0
+    levels_down = 0
+    js = max(4, js // 2)
+    while js > 1:
+        jsd2 = js // 2
+        start = js + jsd2 - 1
+        if start < n:
+            downs += len(range(start, n, js))
+            levels_down += 1
+        js = jsd2
+    return ups, downs, levels_up + levels_down
+
+
+def blelloch_counts(n: int) -> Tuple[int, int, int]:
+    """Classic Blelloch work/barrier counts for comparison in the benchmark:
+    N-1 updates up-sweep, N-1 down-sweep, 2h barriers (h = ceil(log2 N))."""
+    h = max(1, math.ceil(math.log2(n))) if n > 1 else 1
+    return n - 1, n - 1, 2 * h
+
+
+def paper_height(n: int) -> int:
+    """h = ceil(log2(N + 1)) — the abstract-tree height used by the paper."""
+    return math.ceil(math.log2(n + 1))

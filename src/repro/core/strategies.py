@@ -1,0 +1,356 @@
+"""The five scheduling strategies of the paper, as pure-JAX references.
+
+Every strategy computes, for each particle, the force and potential due to
+all partners within the cutoff — they differ only in *how the neighborhood is
+scheduled*, which is exactly the paper's subject:
+
+  naive_n2    O(N^2) masked all-pairs — correctness oracle (tiny boxes only).
+  par_part    Par-Part-NoLoop/Loop: parallel over particles, each gathers its
+              27 neighbor cells' slots from HBM (no staging, no reuse).
+  cell_dense  Par-Cell(-SM): parallel over cells; the m_c targets of a cell
+              interact with 27 one-cell source slabs (one-cell-at-a-time
+              staging).
+  xpencil     the paper's X-pencil: parallel over (z, y) pencils; the target
+              pencil is staged once, the 9 (dz, dy) neighbor pencils are
+              visited one at a time, and the X window of a target cell is a
+              contiguous 3*m_c slice of the neighbor pencil row.
+  allin       the paper's All-in-SM: parallel over sub-boxes; a halo block of
+              (bz+2, by+2, bx+2) cells is staged once and all interior
+              interactions are computed from it.
+
+The Pallas kernels in ``repro.kernels`` lower ``xpencil`` / ``allin`` /
+``prefix_sum`` to explicit VMEM staging; these references are their oracles
+and the CPU benchmark bodies. Chunking (``batch_size``) bounds peak memory:
+it plays the role of the GPU grid — how many pencils/cells are in flight.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .binning import CellBins, interior
+from .domain import Domain
+from .interactions import PairKernel, pair_contribution
+
+Array = jnp.ndarray
+ForceOut = Tuple[Array, Array, Array, Array]  # fx, fy, fz, potential
+
+
+# --------------------------------------------------------------------------
+# naive O(N^2)
+# --------------------------------------------------------------------------
+
+def naive_n2(domain: Domain, positions: Array, kernel: PairKernel,
+             row_chunk: int = 1024) -> ForceOut:
+    """All-pairs with cutoff mask; per-particle potential channel."""
+    n = positions.shape[0]
+    cut2 = domain.cutoff ** 2
+
+    def one_row(i):
+        d = positions[i][None, :] - positions
+        d = domain.minimum_image(d)
+        mask = jnp.arange(n) != i
+        fx, fy, fz, pot = pair_contribution(
+            kernel, d[:, 0], d[:, 1], d[:, 2], mask, cut2)
+        return fx.sum(), fy.sum(), fz.sum(), pot.sum()
+
+    fx, fy, fz, pot = jax.lax.map(one_row, jnp.arange(n),
+                                  batch_size=min(row_chunk, n))
+    return fx, fy, fz, pot
+
+
+# --------------------------------------------------------------------------
+# shared helpers for the cell strategies
+# --------------------------------------------------------------------------
+
+def _pencil_rows(domain: Domain, bins: CellBins, z: Array, y: Array):
+    """Dynamic-slice one padded (z, y) row (length (nx+2)*m_c) per field.
+
+    (z, y) are *interior* pencil coordinates in [0, nz) x [0, ny); the +1
+    ghost offset is applied here.
+    """
+    row_len = (domain.nx + 2) * bins.m_c
+
+    def row(plane, dz, dy):
+        return jax.lax.dynamic_slice(
+            plane, (z + 1 + dz, y + 1 + dy, 0), (1, 1, row_len))[0, 0]
+
+    return row
+
+
+def _window_indices(nx: int, m_c: int) -> Array:
+    """(nx, 3*m_c) gather map: target cell x -> its contiguous source window
+    [x*m_c, (x+3)*m_c) inside a padded pencil row (ghost cell at each end)."""
+    return (jnp.arange(nx, dtype=jnp.int32)[:, None] * m_c
+            + jnp.arange(3 * m_c, dtype=jnp.int32)[None, :])
+
+
+def _pair_reduce(kernel, cut2, tx, ty, tz, tid, sx, sy, sz, sid):
+    """targets (..., T) x sources (..., S) -> per-target (fx, fy, fz, pot)."""
+    ddx = tx[..., :, None] - sx[..., None, :]
+    ddy = ty[..., :, None] - sy[..., None, :]
+    ddz = tz[..., :, None] - sz[..., None, :]
+    mask = ((sid[..., None, :] != tid[..., :, None])
+            & (sid[..., None, :] >= 0) & (tid[..., :, None] >= 0))
+    fx, fy, fz, pot = pair_contribution(kernel, ddx, ddy, ddz, mask, cut2)
+    return fx.sum(-1), fy.sum(-1), fz.sum(-1), pot.sum(-1)
+
+
+# --------------------------------------------------------------------------
+# Par-Part: parallel over particles, gather everything
+# --------------------------------------------------------------------------
+
+def par_part(domain: Domain, bins: CellBins, positions: Array,
+             kernel: PairKernel, batch_size: int = 4096) -> ForceOut:
+    """One 'thread' per particle; 27 * m_c source slots gathered per particle.
+
+    Returns per-particle outputs directly (this schedule never builds a dense
+    output plane — just like the paper's version updates v[idx] in place).
+    """
+    n = positions.shape[0]
+    nx, ny, _ = domain.ncells
+    m_c = bins.m_c
+    cut2 = domain.cutoff ** 2
+    row_len = (nx + 2) * m_c
+
+    coords = domain.cell_coords(positions)            # (N, 3)
+    offs = jnp.asarray(domain.neighbor_offsets())     # (27, 3)
+
+    xf = bins.planes["x"].reshape(-1)
+    yf = bins.planes["y"].reshape(-1)
+    zf = bins.planes["z"].reshape(-1)
+    sidf = bins.slot_id.reshape(-1)
+
+    slot_in_cell = jnp.arange(m_c, dtype=jnp.int32)
+
+    def one(args):
+        pos, cxyz, pid = args
+        # flat base index of each of the 27 neighbor cells (padded coords are
+        # always in range thanks to the ghost ring).
+        ncell = cxyz[None, :] + offs + 1                      # (27, 3)
+        base = ((ncell[:, 2] * (ny + 2) + ncell[:, 1]) * row_len
+                + ncell[:, 0] * m_c)                          # (27,)
+        idx = (base[:, None] + slot_in_cell[None, :]).reshape(-1)  # (27*m_c,)
+        sx, sy, sz, sid = xf[idx], yf[idx], zf[idx], sidf[idx]
+        ddx, ddy, ddz = pos[0] - sx, pos[1] - sy, pos[2] - sz
+        mask = (sid >= 0) & (sid != pid)
+        fx, fy, fz, pot = pair_contribution(kernel, ddx, ddy, ddz, mask, cut2)
+        return fx.sum(), fy.sum(), fz.sum(), pot.sum()
+
+    pid = jnp.arange(n, dtype=jnp.int32)
+    return jax.lax.map(one, (positions, coords, pid),
+                       batch_size=min(batch_size, n))
+
+
+# --------------------------------------------------------------------------
+# Par-Cell(-SM): parallel over cells, 27 one-cell slabs
+# --------------------------------------------------------------------------
+
+def cell_dense(domain: Domain, bins: CellBins, kernel: PairKernel,
+               batch_size: int = 64) -> ForceOut:
+    """Per-cell schedule. Processes pencils of cells ((z,y) rows) in chunks;
+    within a row, each target cell interacts with its 27 neighbor cells taken
+    as 27 separate m_c-slabs (the Par-Cell staging granularity)."""
+    nx, ny, nz = domain.ncells
+    m_c = bins.m_c
+    cut2 = domain.cutoff ** 2
+
+    def one_pencil(zy):
+        z, y = zy // ny, zy % ny
+        row = _pencil_rows(domain, bins, z, y)
+        # target cells of this pencil: (nx, m_c)
+        tgt = {f: row(bins.planes[f], 0, 0)[m_c:(nx + 1) * m_c]
+               .reshape(nx, m_c) for f in ("x", "y", "z")}
+        tid = row(bins.slot_id, 0, 0)[m_c:(nx + 1) * m_c].reshape(nx, m_c)
+
+        acc = tuple(jnp.zeros((nx, m_c)) for _ in range(4))
+        for dz in (-1, 0, 1):
+            for dy in (-1, 0, 1):
+                srow = {f: row(bins.planes[f], dz, dy)
+                        for f in ("x", "y", "z")}
+                sidr = row(bins.slot_id, dz, dy)
+                for dx in (-1, 0, 1):
+                    sl = slice((1 + dx) * m_c, (1 + dx + nx) * m_c)
+                    sx = srow["x"][sl].reshape(nx, m_c)
+                    sy = srow["y"][sl].reshape(nx, m_c)
+                    sz = srow["z"][sl].reshape(nx, m_c)
+                    sid = sidr[sl].reshape(nx, m_c)
+                    out = _pair_reduce(kernel, cut2, tgt["x"], tgt["y"],
+                                       tgt["z"], tid, sx, sy, sz, sid)
+                    acc = tuple(a + o for a, o in zip(acc, out))
+        return acc
+
+    zy = jnp.arange(nz * ny, dtype=jnp.int32)
+    fx, fy, fz, pot = jax.lax.map(one_pencil, zy,
+                                  batch_size=min(batch_size, nz * ny))
+    shape = (nz, ny, nx, m_c)
+    return (fx.reshape(shape), fy.reshape(shape),
+            fz.reshape(shape), pot.reshape(shape))
+
+
+# --------------------------------------------------------------------------
+# X-pencil: the paper's main contribution
+# --------------------------------------------------------------------------
+
+def xpencil(domain: Domain, bins: CellBins, kernel: PairKernel,
+            batch_size: int = 64) -> ForceOut:
+    """X-pencil schedule. For each (z, y) target pencil: stage the pencil,
+    then visit the 9 (dz, dy) neighbor pencils; each target cell's sources
+    are the contiguous 3*m_c window of the staged neighbor row.
+
+    This is the trace-level mirror of ``repro.kernels.xpencil`` (which adds
+    the explicit HBM->VMEM BlockSpec staging); both share this oracle.
+    """
+    nx, ny, nz = domain.ncells
+    m_c = bins.m_c
+    cut2 = domain.cutoff ** 2
+    widx = _window_indices(nx, m_c)
+
+    def one_pencil(zy):
+        z, y = zy // ny, zy % ny
+        row = _pencil_rows(domain, bins, z, y)
+        tgt = {f: row(bins.planes[f], 0, 0)[m_c:(nx + 1) * m_c]
+               .reshape(nx, m_c) for f in ("x", "y", "z")}
+        tid = row(bins.slot_id, 0, 0)[m_c:(nx + 1) * m_c].reshape(nx, m_c)
+
+        acc = tuple(jnp.zeros((nx, m_c)) for _ in range(4))
+        for dz in (-1, 0, 1):
+            for dy in (-1, 0, 1):
+                # stage one neighbor pencil row, window it per target cell
+                sx = row(bins.planes["x"], dz, dy)[widx]   # (nx, 3*m_c)
+                sy = row(bins.planes["y"], dz, dy)[widx]
+                sz = row(bins.planes["z"], dz, dy)[widx]
+                sid = row(bins.slot_id, dz, dy)[widx]
+                out = _pair_reduce(kernel, cut2, tgt["x"], tgt["y"],
+                                   tgt["z"], tid, sx, sy, sz, sid)
+                acc = tuple(a + o for a, o in zip(acc, out))
+        return acc
+
+    zy = jnp.arange(nz * ny, dtype=jnp.int32)
+    fx, fy, fz, pot = jax.lax.map(one_pencil, zy,
+                                  batch_size=min(batch_size, nz * ny))
+    shape = (nz, ny, nx, m_c)
+    return (fx.reshape(shape), fy.reshape(shape),
+            fz.reshape(shape), pot.reshape(shape))
+
+
+# --------------------------------------------------------------------------
+# All-in-SM: stage a whole sub-box + halo
+# --------------------------------------------------------------------------
+
+def subbox_dims(domain: Domain, m_c: int, fields: int = 4,
+                vmem_budget_bytes: int = 8 * 2 ** 20,
+                min_blocks: int = 8) -> Tuple[int, int, int]:
+    """The paper's sub-box sizing (Section 5.1), with VMEM as the budget.
+
+    max cells = budget / (m_c * fields * 4B); find the largest
+    (bx+2)(by+2)(bz+2) <= max_cells with the paper's p3 search, then shrink
+    (paper: "reduce the size of the sub-box to ensure enough parallelism")
+    until there are at least ``min_blocks`` sub-boxes.
+    """
+    per_cell = m_c * fields * 4
+    max_cells = max(27, vmem_budget_bytes // per_cell)
+    p3 = 3
+    while (p3 + 1) ** 3 <= max_cells:
+        p3 += 1
+    candidates = [(p3, p3, p3), (p3 + 1, p3, p3), (p3 + 1, p3 + 1, p3),
+                  (p3 + 2, p3, p3)]
+    best = max((c for c in candidates
+                if c[0] * c[1] * c[2] <= max_cells),
+               key=lambda c: c[0] * c[1] * c[2], default=(3, 3, 3))
+    bx, by, bz = (max(1, b - 2) for b in best)   # interior target cells
+    bx, by, bz = (min(b, n) for b, n in zip((bx, by, bz), domain.ncells))
+
+    def n_blocks(b):
+        return -(-domain.nx // b[0]) * -(-domain.ny // b[1]) * -(-domain.nz // b[2])
+
+    while n_blocks((bx, by, bz)) < min_blocks and max(bx, by, bz) > 1:
+        if bz >= by and bz >= bx:
+            bz = max(1, bz // 2)
+        elif by >= bx:
+            by = max(1, by // 2)
+        else:
+            bx = max(1, bx // 2)
+    return bx, by, bz
+
+
+def allin(domain: Domain, bins: CellBins, kernel: PairKernel,
+          box: Tuple[int, int, int] | None = None,
+          batch_size: int = 8) -> ForceOut:
+    """All-in-SM schedule: grid over sub-boxes, one halo block staged each.
+
+    The grid must tile the domain exactly, so the sub-box is shrunk to a
+    divisor of each axis (the ghost ring keeps out-of-domain reads valid).
+    """
+    nx, ny, nz = domain.ncells
+    m_c = bins.m_c
+    cut2 = domain.cutoff ** 2
+    if box is None:
+        box = subbox_dims(domain, m_c)
+
+    def divisor_leq(n, b):
+        b = min(b, n)
+        while n % b:
+            b -= 1
+        return b
+
+    bx, by, bz = (divisor_leq(n, b) for n, b in zip((nx, ny, nz), box))
+    gx, gy, gz = nx // bx, ny // by, nz // bz
+    row_len_blk = (bx + 2) * m_c
+
+    def one_box(bid):
+        iz = bid // (gy * gx)
+        iy = (bid // gx) % gy
+        ix = bid % gx
+        z0, y0, x0 = iz * bz, iy * by, ix * bx
+
+        def stage(plane):   # halo block: (bz+2, by+2, (bx+2)*m_c)
+            return jax.lax.dynamic_slice(
+                plane, (z0, y0, x0 * m_c), (bz + 2, by + 2, row_len_blk))
+
+        sxp, syp, szp = (stage(bins.planes[f]) for f in ("x", "y", "z"))
+        sidp = stage(bins.slot_id)
+
+        # interior targets of the block: (bz, by, bx, m_c)
+        def inner(p):
+            return p[1:bz + 1, 1:by + 1, m_c:(bx + 1) * m_c].reshape(
+                bz, by, bx, m_c)
+
+        tx, ty, tz, tid = inner(sxp), inner(syp), inner(szp), inner(sidp)
+
+        acc = tuple(jnp.zeros((bz, by, bx, m_c)) for _ in range(4))
+        widx = _window_indices(bx, m_c)
+        for dz in (-1, 0, 1):
+            for dy in (-1, 0, 1):
+                sx = sxp[1 + dz:1 + dz + bz, 1 + dy:1 + dy + by][:, :, widx]
+                sy = syp[1 + dz:1 + dz + bz, 1 + dy:1 + dy + by][:, :, widx]
+                sz = szp[1 + dz:1 + dz + bz, 1 + dy:1 + dy + by][:, :, widx]
+                sid = sidp[1 + dz:1 + dz + bz, 1 + dy:1 + dy + by][:, :, widx]
+                out = _pair_reduce(kernel, cut2, tx, ty, tz, tid,
+                                   sx, sy, sz, sid)
+                acc = tuple(a + o for a, o in zip(acc, out))
+        return acc
+
+    nb = gx * gy * gz
+    outs = jax.lax.map(one_box, jnp.arange(nb, dtype=jnp.int32),
+                       batch_size=min(batch_size, nb))
+
+    # reassemble (nb, bz, by, bx, m_c) blocks -> (nz, ny, nx, m_c)
+    def assemble(blocks):
+        b = blocks.reshape(gz, gy, gx, bz, by, bx, m_c)
+        b = jnp.transpose(b, (0, 3, 1, 4, 2, 5, 6))
+        return b.reshape(nz, ny, nx, m_c)
+
+    return tuple(assemble(o) for o in outs)
+
+
+STRATEGIES = {
+    "par_part": par_part,
+    "cell_dense": cell_dense,
+    "xpencil": xpencil,
+    "allin": allin,
+}

@@ -1,0 +1,90 @@
+"""Analytical staging-traffic model — the TPU stand-in for the paper's Fig. 7.
+
+Occupancy / L2-hit-rate / branch-efficiency are CUDA SM-scheduler metrics with
+no TPU analogue (DESIGN.md §2). What *does* transfer is the quantity shared
+memory exists to optimize: HBM bytes moved per interaction, the reuse factor
+of each staged byte, and the fast-memory footprint per grid step (which on
+TPU bounds double-buffering head-room instead of occupancy).
+
+All formulas assume the dense slot layout (m_c slots/cell, 4 f32 fields:
+x, y, z, slot_id) and a full 27-neighborhood (border effects ignored, as in
+the paper's "aside from the border cells" argument).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+from .domain import Domain
+
+FIELD_BYTES = 4 * 4  # x, y, z, slot_id as f32/i32
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficReport:
+    strategy: str
+    hbm_bytes_per_interaction: float   # global-memory traffic / interactions
+    staged_bytes_per_step: int         # VMEM footprint of one grid step
+    reuse_factor: float                # interactions per staged byte-load
+    padded_work_fraction: float        # masked-lane waste (idle threads)
+    grid_steps: int                    # number of pallas grid steps
+
+
+def model(domain: Domain, m_c: int, avg_ppc: float,
+          subbox: Tuple[int, int, int] | None = None) -> Dict[str, TrafficReport]:
+    """Traffic model for each strategy at a given fill ratio.
+
+    ``avg_ppc``: average particles per cell (paper: 1, 10, 100).
+    Interactions per cell ~= avg_ppc * 27 * avg_ppc (cutoff filtering is the
+    same for all strategies, so it cancels in comparisons).
+    """
+    nx, ny, nz = domain.ncells
+    n_cells = domain.n_cells
+    n_parts = n_cells * avg_ppc
+    inter_per_cell = 27.0 * avg_ppc * avg_ppc
+    total_inter = n_cells * inter_per_cell
+    pad2 = (m_c / max(avg_ppc, 1e-9)) ** 2          # slot-padding waste, pairs
+    cell_bytes = m_c * FIELD_BYTES
+
+    out: Dict[str, TrafficReport] = {}
+
+    # Par-Part: each particle loads its 27 neighbor cells; zero reuse across
+    # particles (caches aside — the paper's point).
+    loads = n_parts * 27 * cell_bytes + n_parts * FIELD_BYTES
+    out["par_part"] = TrafficReport(
+        "par_part", loads / total_inter, 0, 1.0 / max(avg_ppc, 1e-9),
+        1.0 - 1.0 / pad2, int(n_parts))
+
+    # Par-Cell(-SM): each cell stages its 27 neighbors once; every staged
+    # byte is reused by the cell's m_c targets.
+    loads = n_cells * (27 + 1) * cell_bytes
+    out["cell_dense"] = TrafficReport(
+        "cell_dense", loads / total_inter, 2 * cell_bytes,
+        float(avg_ppc), 1.0 - 1.0 / pad2, n_cells)
+
+    # X-pencil: per (z, y) pencil, the target row + 9 neighbor rows of
+    # (nx + 2) cells each are staged; reuse = 3 cells' worth of targets per
+    # staged cell (the X window).
+    row_bytes = (nx + 2) * cell_bytes
+    loads = (nz * ny) * (9 + 1) * row_bytes
+    out["xpencil"] = TrafficReport(
+        "xpencil", loads / total_inter, 2 * row_bytes,
+        3.0 * avg_ppc, 1.0 - 1.0 / pad2, nz * ny)
+
+    # All-in-SM: per sub-box, the (b+2)^3 halo block is staged once; interior
+    # cells reuse 27x, the halo ring less (paper: between 9 and 1).
+    if subbox is None:
+        from .strategies import subbox_dims
+        subbox = subbox_dims(domain, m_c)
+    bx, by, bz = subbox
+    halo_cells = (bx + 2) * (by + 2) * (bz + 2)
+    n_boxes = -(-nx // bx) * (-(-ny // by)) * (-(-nz // bz))
+    loads = n_boxes * halo_cells * cell_bytes
+    inter_per_box = bx * by * bz * inter_per_cell
+    reuse = inter_per_box / max(halo_cells * avg_ppc, 1e-9)
+    out["allin"] = TrafficReport(
+        "allin", loads / max(total_inter, 1e-9), halo_cells * cell_bytes,
+        reuse, 1.0 - 1.0 / pad2, n_boxes)
+
+    return out

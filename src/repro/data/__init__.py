@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, DataState, Pipeline, batch_at
+
+__all__ = ["DataConfig", "DataState", "Pipeline", "batch_at"]

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's hot spots (DESIGN.md §2-3).
+
+xpencil      the paper's X-pencil schedule (BlockSpec pencil staging)
+allin        the paper's All-in-SM schedule (manual halo DMA into VMEM)
+prefix_sum   the paper's §6 scan (VMEM, 2h-3 vector passes)
+window_attn  the technique transferred to LM local attention
+
+Each kernel has a pure-jnp oracle in ref.py and a jit wrapper in ops.py.
+"""
+
+from .ops import (allin_interactions, prefix_sum, window_attention,
+                  xpencil_interactions)
+
+__all__ = ["allin_interactions", "prefix_sum", "window_attention",
+           "xpencil_interactions"]

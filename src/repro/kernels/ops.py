@@ -1,0 +1,75 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Backend dispatch: ``interpret=None`` (default) runs the kernel body natively
+on TPU and in interpret mode everywhere else — so the same call sites work in
+CPU tests/dry-runs and on real hardware. The model/engine layers default to
+the pure-JAX paths and opt into these kernels via ``implementation="pallas"``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.binning import CellBins, gather_to_particles
+from ..core.domain import Domain
+from ..core.engine import _interior_to_padded
+from ..core.interactions import PairKernel
+from .allin import allin_forces
+from .prefix_sum import prefix_sum as _prefix_sum
+from .window_attn import window_attention as _window_attention
+from .xpencil import xpencil_forces
+
+Array = jnp.ndarray
+
+
+def _interpret(flag: Optional[bool]) -> bool:
+    if flag is None:
+        return jax.default_backend() != "tpu"
+    return flag
+
+
+def xpencil_interactions(domain: Domain, bins: CellBins, kernel: PairKernel,
+                         interpret: Optional[bool] = None
+                         ) -> Tuple[Array, Array]:
+    """X-pencil kernel -> per-particle (forces (N,3), potential (N,))."""
+    fx, fy, fz, pot = xpencil_forces(
+        bins.planes, bins.slot_id, nx=domain.nx, m_c=bins.m_c, kernel=kernel,
+        cutoff2=float(domain.cutoff) ** 2, interpret=_interpret(interpret))
+    return _to_particles(domain, bins, fx, fy, fz, pot)
+
+
+def allin_interactions(domain: Domain, bins: CellBins, kernel: PairKernel,
+                       box, interpret: Optional[bool] = None
+                       ) -> Tuple[Array, Array]:
+    """All-in-SM kernel -> per-particle (forces, potential)."""
+    fx, fy, fz, pot = allin_forces(
+        bins.planes, bins.slot_id, box=tuple(box), m_c=bins.m_c,
+        kernel=kernel, cutoff2=float(domain.cutoff) ** 2,
+        interpret=_interpret(interpret))
+    return _to_particles(domain, bins, fx, fy, fz, pot)
+
+
+def _to_particles(domain, bins, fx, fy, fz, pot):
+    nx, ny, nz = domain.ncells
+    outs = []
+    for plane in (fx, fy, fz, pot):
+        shaped = plane.reshape(nz, ny, nx, bins.m_c)
+        outs.append(gather_to_particles(
+            bins, _interior_to_padded(domain, shaped, bins.m_c)))
+    return jnp.stack(outs[:3], axis=-1), outs[3]
+
+
+def prefix_sum(x: Array, interpret: Optional[bool] = None) -> Array:
+    """Paper §6 prefix sum (VMEM kernel)."""
+    return _prefix_sum(x, interpret=_interpret(interpret))
+
+
+def window_attention(q: Array, k: Array, v: Array, *, window: int,
+                     blk: int = 128, softcap: float = 0.0,
+                     interpret: Optional[bool] = None) -> Array:
+    """Pencil-pattern sliding-window attention (see window_attn.py)."""
+    return _window_attention(q, k, v, window=window, blk=blk,
+                             softcap=softcap, interpret=_interpret(interpret))

@@ -1,0 +1,70 @@
+"""The paper's §6 prefix sum as a Pallas VMEM kernel.
+
+The CUDA version runs one thread-block over a shared-memory array with
+``2h - 3`` barriers. The TPU analogue: one program owns the array in VMEM and
+each barrier-delimited level becomes one *vectorized pass* — on a 2-D SIMD
+machine the per-level index set {js-1, 2js-1, ...} is a stride mask, and
+"x[idN] += x[idN - jsd2]" is a masked add of the array shifted right by jsd2.
+Shifts are static per level (N is static), so the level loop unrolls at trace
+time into 2h-3 shift+mask+add passes, all VMEM-resident: the same memory-
+access structure the paper optimizes for (each level touches each element at
+most once, no extra scratch).
+
+Wrap-around garbage from the roll lands only at masked positions (the update
+set has idN >= js - 1 >= shift), mirroring the paper's ``idN < N`` guard.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jnp.ndarray
+
+
+def _levels(n: int):
+    """(shift, modulus, first_index) per barrier-delimited level, paper order."""
+    out = []
+    js = 2
+    while js <= n:
+        out.append((js // 2, js, js - 1))
+        js *= 2
+    js = max(4, js // 2)
+    while js > 1:
+        jsd2 = js // 2
+        first = js + jsd2 - 1
+        if first < n:
+            out.append((jsd2, js, first))
+        js = jsd2
+    return out
+
+
+def _kernel(x_ref, o_ref, *, n: int):
+    x = x_ref[...]  # (1, n)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+    for shift, js, first in _levels(n):
+        shifted = jnp.roll(x, shift, axis=-1)
+        mask = (idx % js == (first % js)) & (idx >= first)
+        x = x + jnp.where(mask, shifted, jnp.zeros_like(x))
+    o_ref[...] = x
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def prefix_sum(x: Array, interpret: bool = True) -> Array:
+    """Inclusive prefix sum of a rank-1 array (paper §6 schedule).
+
+    The whole array must fit in VMEM (the paper's setting: the per-cell count
+    array of one sub-box). Larger arrays belong to the host-level scan.
+    """
+    n = x.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_kernel, n=n),
+        in_specs=[pl.BlockSpec((1, n), lambda: (0, 0))],
+        out_specs=pl.BlockSpec((1, n), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, n), x.dtype),
+        interpret=interpret,
+    )(x.reshape(1, n))
+    return out.reshape(n)

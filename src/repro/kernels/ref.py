@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+The particle-kernel oracles are the strategy references from ``core`` (the
+kernels implement the *same schedule*, so the shared oracle is the point);
+``prefix_sum`` is checked against ``jnp.cumsum`` (not against the paper's own
+jnp implementation, to keep the oracle independent); ``window_attention``
+against dense masked attention in fp32.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from ..core.binning import CellBins
+from ..core.domain import Domain
+from ..core.interactions import PairKernel
+from ..core import strategies as S
+
+Array = jnp.ndarray
+
+
+def xpencil_ref(domain: Domain, bins: CellBins, kernel: PairKernel
+                ) -> Tuple[Array, Array, Array, Array]:
+    """(nz, ny, nx*m_c) interior force/potential planes."""
+    nx, ny, nz = domain.ncells
+    out = S.xpencil(domain, bins, kernel)
+    return tuple(o.reshape(nz, ny, nx * bins.m_c) for o in out)
+
+
+def allin_ref(domain: Domain, bins: CellBins, kernel: PairKernel,
+              box) -> Tuple[Array, Array, Array, Array]:
+    nx, ny, nz = domain.ncells
+    out = S.allin(domain, bins, kernel, box=box)
+    return tuple(o.reshape(nz, ny, nx * bins.m_c) for o in out)
+
+
+def prefix_sum_ref(x: Array) -> Array:
+    return jnp.cumsum(x, axis=-1, dtype=x.dtype)
+
+
+def window_attention_ref(q: Array, k: Array, v: Array, *, window: int,
+                         softcap: float = 0.0) -> Array:
+    """Dense masked local attention, fp32 throughout."""
+    b, h, s, d = q.shape
+    kh = k.shape[1]
+    group = h // kh
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf)
+    scores = scores / (d ** 0.5)
+    if softcap > 0.0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = (kpos <= qpos) & (qpos - kpos < window)
+    scores = jnp.where(mask, scores, -1e30)
+    p = jnp.exp(scores - scores.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)

@@ -1,0 +1,121 @@
+"""Pencil-pattern sliding-window attention (flash-style) Pallas kernel.
+
+This is the paper's technique transferred to the LM side (DESIGN.md §4):
+a cutoff radius over a 1-D token grid. Queries are the target particles, KV
+blocks are the cells, the window is ``r_c``; the schedule is the X-pencil's:
+the target block stays resident while the neighbor blocks inside the cutoff
+stream through VMEM one at a time, innermost in the grid. Out-of-window work
+is never *loaded*, not just masked — the cell-list property.
+
+  grid = (B*H, nq, nw)   nw = number of KV blocks covering the window
+  q block   (1, 1, blk, D)  at (b, h, qi)
+  k/v block (1, 1, blk, D)  at (b, h//group, qi - (nw-1) + j)  (clamped)
+  scratch   m, l, acc — the online-softmax state, persisted across j
+            (the "registers" of the paper's pencil targets).
+
+Causal + window mask, optional logit softcap (gemma2), GQA via head mapping.
+Requires S % blk == 0; blk should be a multiple of 128 lanes on real TPUs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jnp.ndarray
+
+NEG_INF = -1.0e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, blk: int, nw: int, window: int, softcap: float, scale: float):
+    qi, j = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    c = qi - (nw - 1) + j                      # logical kv block (may be < 0)
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # (blk, D)
+    k = k_ref[0, 0].astype(jnp.float32)                # (blk, D)
+    s = q @ k.T                                        # (blk, blk) fp32
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = qi * blk + jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 0)
+    k_pos = (jnp.maximum(c, 0) * blk
+             + jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 1))
+    mask = (k_pos <= q_pos) & (q_pos - k_pos < window) & (c >= 0)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)          # (blk, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                              # (blk, blk)
+    l_new = l_prev * alpha + p.sum(-1, keepdims=True)
+    acc_scr[...] = (acc_scr[...] * alpha
+                    + p @ v_ref[0, 0].astype(jnp.float32))
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(j == nw - 1)
+    def _fini():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "blk", "softcap",
+                                             "interpret"))
+def window_attention(q: Array, k: Array, v: Array, *, window: int,
+                     blk: int = 128, softcap: float = 0.0,
+                     interpret: bool = True) -> Array:
+    """Sliding-window causal attention.
+
+    Args:
+      q: (B, H, S, D); k, v: (B, KH, S, D), H % KH == 0.
+      window: tokens visible to each query (self included): k in
+        (q - window, q].
+    Returns:
+      (B, H, S, D) in q's dtype.
+    """
+    b, h, s, d = q.shape
+    kh = k.shape[1]
+    assert h % kh == 0 and s % blk == 0, (q.shape, k.shape, blk)
+    group = h // kh
+    nq = s // blk
+    nw = (window - 1) // blk + 2      # blocks covering (q - window, q]
+    nw = min(nw, nq)
+    scale = 1.0 / (d ** 0.5)
+
+    def kv_idx(bh, qi, j):
+        c = jnp.maximum(qi - (nw - 1) + j, 0)
+        return (bh // h, (bh % h) // group, c, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, blk=blk, nw=nw, window=window,
+                          softcap=float(softcap), scale=scale),
+        grid=(b * h, nq, nw),
+        in_specs=[
+            pl.BlockSpec((1, 1, blk, d),
+                         lambda bh, qi, j: (bh // h, bh % h, qi, 0)),
+            pl.BlockSpec((1, 1, blk, d), kv_idx),
+            pl.BlockSpec((1, 1, blk, d), kv_idx),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk, d),
+                               lambda bh, qi, j: (bh // h, bh % h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk, 1), jnp.float32),
+            pltpu.VMEM((blk, 1), jnp.float32),
+            pltpu.VMEM((blk, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

@@ -1,0 +1,121 @@
+"""X-pencil interaction kernel (paper §5.2) as a Pallas TPU kernel.
+
+Schedule (mirrors Algorithm 5, adapted per DESIGN.md §2):
+
+  grid = (nz, ny, 9)
+    (z, y)  — one program per target X-pencil (the paper's thread-block);
+    k       — the 9 (dz, dy) neighbor pencils, innermost so the output block
+              stays resident in VMEM while neighbors stream through
+              (the paper's "load one pencil at a time" loop, with the
+              HBM->VMEM DMA double-buffered by the Pallas pipeline — the TPU
+              version of overlapping the next pencil's copy with compute).
+
+  BlockSpec staging:
+    target pencil  block (1, 1, (nx+2)*m_c) at (z+1, y+1)      — "registers"
+    source pencil  block (1, 1, (nx+2)*m_c) at (z+k/3, y+k%3)  — "shared mem"
+    outputs        block (1, 1, nx*m_c), revisited across k, accumulated.
+
+  The contiguous 3*m_c X-window of each target cell is built from three
+  static slices of the staged source row (the dense slot layout makes the
+  window contiguous — the paper needs its local-offset prefix sum for this).
+
+VMEM per step: 8 pencil rows + 4 output rows ~ (12*nx + 16)*m_c*4 bytes
+(nx=32, m_c=128 -> ~200 KB), far under budget: exactly the paper's point that
+pencils, unlike sub-boxes, leave head-room (occupancy there, double-buffering
+here). Lane alignment: rows are contiguous f32 vectors; choosing m_c as a
+multiple of 8 keeps slices sublane-aligned (``suggest_m_c`` does this).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.interactions import PairKernel
+
+Array = jnp.ndarray
+
+
+def _window3(row: Array, nx: int, m_c: int) -> Array:
+    """(nx+2)*m_c source row -> (nx, 3*m_c) per-cell contiguous windows."""
+    cells = row.reshape(nx + 2, m_c)
+    return jnp.concatenate(
+        [cells[0:nx], cells[1:nx + 1], cells[2:nx + 2]], axis=-1)
+
+
+def _kernel(xt_ref, yt_ref, zt_ref, it_ref,
+            xs_ref, ys_ref, zs_ref, is_ref,
+            fx_ref, fy_ref, fz_ref, pot_ref,
+            *, nx: int, m_c: int, kernel: PairKernel, cutoff2: float):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        fx_ref[...] = jnp.zeros_like(fx_ref)
+        fy_ref[...] = jnp.zeros_like(fy_ref)
+        fz_ref[...] = jnp.zeros_like(fz_ref)
+        pot_ref[...] = jnp.zeros_like(pot_ref)
+
+    lo, hi = m_c, (nx + 1) * m_c
+    tx = xt_ref[0, 0, lo:hi].reshape(nx, m_c, 1)
+    ty = yt_ref[0, 0, lo:hi].reshape(nx, m_c, 1)
+    tz = zt_ref[0, 0, lo:hi].reshape(nx, m_c, 1)
+    tid = it_ref[0, 0, lo:hi].reshape(nx, m_c, 1)
+
+    sx = _window3(xs_ref[0, 0, :], nx, m_c).reshape(nx, 1, 3 * m_c)
+    sy = _window3(ys_ref[0, 0, :], nx, m_c).reshape(nx, 1, 3 * m_c)
+    sz = _window3(zs_ref[0, 0, :], nx, m_c).reshape(nx, 1, 3 * m_c)
+    sid = _window3(is_ref[0, 0, :], nx, m_c).reshape(nx, 1, 3 * m_c)
+
+    ddx, ddy, ddz = tx - sx, ty - sy, tz - sz
+    r2 = ddx * ddx + ddy * ddy + ddz * ddz
+    mask = (sid != tid) & (sid >= 0) & (tid >= 0) & (r2 < cutoff2) & (r2 > 0.0)
+    r2s = jnp.where(mask, r2, 1.0)
+    w = mask.astype(ddx.dtype)
+    s = kernel.coeff(r2s) * w
+    pot = kernel.potential(r2s) * w
+
+    fx_ref[...] += (s * ddx).sum(-1).reshape(1, 1, nx * m_c)
+    fy_ref[...] += (s * ddy).sum(-1).reshape(1, 1, nx * m_c)
+    fz_ref[...] += (s * ddz).sum(-1).reshape(1, 1, nx * m_c)
+    pot_ref[...] += pot.sum(-1).reshape(1, 1, nx * m_c)
+
+
+@functools.partial(jax.jit, static_argnames=("nx", "m_c", "kernel", "cutoff2", "interpret"))
+def xpencil_forces(planes: dict, slot_id: Array, *, nx: int, m_c: int,
+                   kernel: PairKernel, cutoff2: float,
+                   interpret: bool = True
+                   ) -> Tuple[Array, Array, Array, Array]:
+    """Run the X-pencil kernel over padded planes.
+
+    Args:
+      planes: dict with "x","y","z" padded planes (nz+2, ny+2, (nx+2)*m_c).
+      slot_id: matching int32 plane, -1 for empty slots.
+    Returns:
+      (fx, fy, fz, pot), each (nz, ny, nx*m_c) over interior slots.
+    """
+    x = planes["x"]
+    nzp, nyp, w = x.shape
+    nz, ny = nzp - 2, nyp - 2
+    row_block = pl.BlockSpec((1, 1, w), lambda z, y, k: (z + 1, y + 1, 0))
+    nbr_block = pl.BlockSpec((1, 1, w), lambda z, y, k: (z + k // 3, y + k % 3, 0))
+    out_block = pl.BlockSpec((1, 1, nx * m_c), lambda z, y, k: (z, y, 0))
+    out_shape = jax.ShapeDtypeStruct((nz, ny, nx * m_c), x.dtype)
+
+    body = functools.partial(_kernel, nx=nx, m_c=m_c, kernel=kernel,
+                             cutoff2=float(cutoff2))
+    fx, fy, fz, pot = pl.pallas_call(
+        body,
+        grid=(nz, ny, 9),
+        in_specs=[row_block] * 4 + [nbr_block] * 4,
+        out_specs=[out_block] * 4,
+        out_shape=[out_shape] * 3 + [jax.ShapeDtypeStruct(
+            (nz, ny, nx * m_c), x.dtype)],
+        interpret=interpret,
+    )(x, planes["y"], planes["z"], slot_id,
+      x, planes["y"], planes["z"], slot_id)
+    return fx, fy, fz, pot

@@ -1,0 +1,168 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+os.environ["REPRO_SCAN_UNROLL"] = "full"
+os.environ["REPRO_DENSE_ATTN"] = "1"
+"""Roofline *cost* runs: accurate per-device FLOPs/bytes/collective counts.
+
+Why a second driver (methodology, EXPERIMENTS.md §Roofline): XLA's
+HloCostAnalysis visits a while-loop body exactly once, so the production
+program (scan-over-layers + chunk-scanned flash attention) under-counts
+FLOPs/bytes by ~the layer count. Cost runs therefore compile with
+  * layer scans fully unrolled (REPRO_SCAN_UNROLL=full),
+  * dense-einsum attention (REPRO_DENSE_ATTN=1 — same FLOP count our masked
+    flash performs, no inner scan),
+and, for deep/expensive configs, at two reduced depths (one and two
+homogeneity periods), extrapolating every counter linearly in depth:
+counter(L) = a + b * L — exact for layer-homogeneous stacks, with the
+intercept capturing embedding/logits/optimizer terms. memory_analysis is NOT
+taken from these compiles (unrolling changes buffer liveness); the
+production-program dry-run (dryrun.py) owns the memory numbers.
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from ..configs import (ARCH_IDS, SHAPES, cell_is_runnable, get_config,
+                       shape_by_name)
+from . import roofline as RL
+from .dryrun import OUT_DIR, lower_cell
+from .mesh import make_production_mesh
+
+COST_DIR = OUT_DIR.parent / "costrun"
+
+
+def _period(cfg) -> int:
+    if cfg.local_global:
+        return 2
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        return cfg.hybrid_attn_every
+    return 1
+
+
+def _counters(cfg, shape_name, mesh, n_layers, enc_layers=None):
+    cfg2 = dataclasses.replace(cfg, n_layers=n_layers,
+                               **({"n_enc_layers": enc_layers}
+                                  if enc_layers is not None else {}))
+    compiled, lowered, shape, n_dev = lower_cell(
+        cfg2, shape_name, mesh,
+        remat=not os.environ.get("REPRO_NO_REMAT"))
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = RL.collective_bytes(hlo)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": {k: float(v) for k, v in coll.items()},
+    }
+
+
+def measure(arch: str, shape_name: str, multi_pod: bool = False,
+            direct_layer_cap: int = 8, tag: str = "") -> dict:
+    """Counters for the full config, via direct compile or L-extrapolation."""
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    COST_DIR.mkdir(parents=True, exist_ok=True)
+    stem = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    out_path = COST_DIR / f"{stem}.json"
+
+    ok, reason = cell_is_runnable(cfg, shape)
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "skipped": reason}
+        out_path.write_text(json.dumps(rec, indent=2))
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    per = _period(cfg)
+    try:
+        if cfg.n_layers <= direct_layer_cap * per and cfg.d_model <= 4096:
+            c_full = _counters(cfg, shape_name, mesh, cfg.n_layers)
+            method = "direct"
+            flops, bts = c_full["flops"], c_full["bytes"]
+            coll = c_full["coll"]
+        else:
+            l1, l2 = per, 2 * per
+            enc = None
+            if cfg.n_enc_layers:
+                enc = 2
+            c1 = _counters(cfg, shape_name, mesh, l1, enc)
+            c2 = _counters(cfg, shape_name, mesh, l2, enc)
+            L = cfg.n_layers
+            slope = {
+                "flops": (c2["flops"] - c1["flops"]) / (l2 - l1),
+                "bytes": (c2["bytes"] - c1["bytes"]) / (l2 - l1),
+            }
+            flops = c1["flops"] + slope["flops"] * (L - l1)
+            bts = c1["bytes"] + slope["bytes"] * (L - l1)
+            coll = {}
+            for k in c1["coll"]:
+                s = (c2["coll"][k] - c1["coll"][k]) / (l2 - l1)
+                coll[k] = max(0.0, c1["coll"][k] + s * (L - l1))
+            if cfg.n_enc_layers:
+                # add the remaining encoder layers' slope (enc scales like a
+                # bidirectional decoder layer; reuse decoder slope as bound)
+                flops += slope["flops"] * (cfg.n_enc_layers - 2) * 0.5
+                bts += slope["bytes"] * (cfg.n_enc_layers - 2) * 0.5
+            method = f"extrapolated(L={l1},{l2})"
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-3000:]}
+        out_path.write_text(json.dumps(rec, indent=2))
+        print(f"[costrun] FAIL {stem}: {type(e).__name__}: {str(e)[:160]}")
+        return rec
+
+    cost = {"flops": flops, "bytes accessed": bts}
+    terms = RL.analyze(cost, "", RL.model_flops_for(cfg, shape, mesh.size))
+    coll_total = sum(coll.values())
+    terms.coll_bytes = coll_total
+    terms.coll_breakdown = coll
+    terms.collective_s = coll_total / (RL.LINK_BW * RL.LINKS_PER_CHIP)
+    tdict = {"compute": terms.compute_s, "memory": terms.memory_s,
+             "collective": terms.collective_s}
+    terms.dominant = max(tdict, key=tdict.get)
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+        "method": method, "n_devices": mesh.size,
+        "compile_seconds": round(time.time() - t0, 1),
+        "roofline": terms.to_dict(),
+    }
+    out_path.write_text(json.dumps(rec, indent=2))
+    r = rec["roofline"]
+    print(f"[costrun] OK   {stem} [{method}]: flops/dev={r['flops']:.3e} "
+          f"bytes/dev={r['hbm_bytes']:.3e} coll/dev={r['coll_bytes']:.3e} "
+          f"dominant={r['dominant']} useful={r['useful_ratio']:.3f}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=[s.name for s in SHAPES])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                measure(a, s.name, args.multi_pod, tag=args.tag)
+    else:
+        measure(args.arch, args.shape, args.multi_pod, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,215 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the first import in the process (jax locks the device count on first
+init) — hence the os.environ lines above everything, including docstring
+position be damned.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod-only|--single-only]
+
+Per cell this produces experiments/dryrun/<arch>__<shape>__<mesh>.json with:
+memory_analysis (fits/doesn't), cost_analysis (FLOPs/bytes for §Roofline),
+per-kind collective bytes, and the roofline terms. Skipped cells (assignment
+rules) get a JSON with ``skipped: reason``.
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import (ARCH_IDS, ModelConfig, SHAPES, cell_is_runnable,
+                       get_config, input_specs, shape_by_name)
+from ..dist import sharding as SH
+from ..models import model as M
+from ..optim.adam import AdamConfig, init_opt_state
+from ..train.serve import make_decode_step, make_prefill_step
+from ..train.trainer import make_train_step
+from . import roofline as RL
+from .mesh import make_production_mesh
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _param_structs(cfg: ModelConfig):
+    return jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def _cost_dict(compiled) -> Dict[str, float]:
+    try:
+        c = compiled.cost_analysis()
+        if isinstance(c, (list, tuple)):
+            c = c[0]
+        return {k: float(v) for k, v in c.items()
+                if isinstance(v, (int, float))}
+    except Exception:
+        return {}
+
+
+def _memory_dict(compiled) -> Dict[str, float]:
+    try:
+        m = compiled.memory_analysis()
+        out = {}
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(m, k, None)
+            if v is not None:
+                out[k] = float(v)
+        return out
+    except Exception:
+        return {}
+
+
+def lower_cell(cfg: ModelConfig, shape_name: str, mesh,
+               remat: bool = True, microbatches: int = 1):
+    """Build + lower + compile one cell. Returns (compiled, lowered)."""
+    shape = shape_by_name(shape_name)
+    specs = input_specs(cfg, shape)
+    n_dev = mesh.size
+    SH.set_pure_dp(cfg.pure_dp)
+
+    # in_shardings are explicit NamedShardings; the abstract-mesh context is
+    # what lets the in-model ``constrain`` calls resolve role specs.
+    with jax.sharding.use_abstract_mesh(mesh.abstract_mesh):
+        if shape.kind == "train":
+            params = _param_structs(cfg)
+            opt_cfg = AdamConfig(moment_dtype=cfg.moment_dtype)
+            opt = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), params)
+            step = make_train_step(cfg, opt_cfg, microbatches=microbatches,
+                                   remat=remat)
+            p_sh = SH.params_shardings(cfg, mesh, params)
+            o_sh = SH.opt_shardings(cfg, mesh, opt, params)
+            b_sh = SH.batch_shardings(cfg, mesh, specs)
+            fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(params, opt, specs)
+        elif shape.kind == "prefill":
+            params = _param_structs(cfg)
+            step = make_prefill_step(cfg)
+            p_sh = SH.params_shardings(cfg, mesh, params)
+            b_sh = SH.batch_shardings(cfg, mesh, specs)
+            fn = jax.jit(step, in_shardings=(p_sh, b_sh))
+            lowered = fn.lower(params, specs)
+        else:  # decode
+            params = _param_structs(cfg)
+            cache = M.cache_spec(cfg, shape.global_batch, shape.seq_len)
+            step = make_decode_step(cfg)
+            p_sh = SH.params_shardings(cfg, mesh, params)
+            c_sh = SH.cache_shardings(cfg, mesh, cache)
+            tok_sh = SH.batch_shardings(
+                cfg, mesh, {"tokens": specs["tokens"]})["tokens"]
+            idx = jax.ShapeDtypeStruct((), jnp.int32)
+            fn = jax.jit(step,
+                         in_shardings=(p_sh, c_sh, tok_sh, None),
+                         donate_argnums=(1,))
+            lowered = fn.lower(params, cache, specs["tokens"], idx)
+        compiled = lowered.compile()
+    return compiled, lowered, shape, n_dev
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             remat: bool = True, microbatches: int = 1,
+             out_dir: Optional[pathlib.Path] = None,
+             tag: str = "") -> Dict:
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    out_dir = out_dir or OUT_DIR
+    out_dir.mkdir(parents=True, exist_ok=True)
+    stem = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    out_path = out_dir / f"{stem}.json"
+
+    ok, reason = cell_is_runnable(cfg, shape)
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "skipped": reason}
+        out_path.write_text(json.dumps(rec, indent=2))
+        print(f"[dryrun] SKIP {stem}: {reason}")
+        return rec
+
+    if microbatches == 1 and shape.kind == "train":
+        microbatches = cfg.dryrun_microbatches
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        compiled, lowered, shape, n_dev = lower_cell(
+            cfg, shape_name, mesh, remat=remat, microbatches=microbatches)
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        out_path.write_text(json.dumps(rec, indent=2))
+        print(f"[dryrun] FAIL {stem}: {type(e).__name__}: {str(e)[:200]}")
+        return rec
+
+    cost = _cost_dict(compiled)
+    memory = _memory_dict(compiled)
+    hlo = compiled.as_text()
+    mf = RL.model_flops_for(cfg, shape, n_dev)
+    terms = RL.analyze(cost, hlo, mf)
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+        "n_devices": n_dev,
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+        "compile_seconds": round(time.time() - t0, 1),
+        "memory_analysis": memory,
+        "cost_analysis": {k: cost[k] for k in sorted(cost)
+                          if k in ("flops", "bytes accessed",
+                                   "transcendentals", "optimal_seconds")},
+        "roofline": terms.to_dict(),
+        "remat": remat, "microbatches": microbatches,
+    }
+    out_path.write_text(json.dumps(rec, indent=2))
+    dom = terms.dominant
+    print(f"[dryrun] OK   {stem}: {rec['compile_seconds']}s compile, "
+          f"flops/dev={terms.flops:.3e}, coll={terms.coll_bytes:.3e}B, "
+          f"dominant={dom}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=[s.name for s in SHAPES])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 2x16x16 mesh (default: 16x16)")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    for arch, shape in cells:
+        for mp in meshes:
+            run_cell(arch, shape, mp, remat=not args.no_remat,
+                     microbatches=args.microbatches, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

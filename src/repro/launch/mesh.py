@@ -1,0 +1,22 @@
+"""Production mesh construction (dry-run + launcher).
+
+A function, not a module-level constant: importing this module must never
+touch jax device state (smoke tests see 1 device; only dryrun.py sets the
+512-device XLA flag before any jax import).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; 2 pods = 512 chips with the leading pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for subprocess tests (XLA_FLAGS host device count)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,121 @@
+"""Roofline terms from compiled dry-run artifacts.
+
+Hardware model (TPU v5e-like, fixed by the assignment):
+  197 TFLOP/s bf16 per chip | 819 GB/s HBM per chip | ~50 GB/s/link ICI.
+
+Conventions (see EXPERIMENTS.md §Roofline):
+  * ``compiled.cost_analysis()`` / ``as_text()`` describe the *per-device*
+    SPMD program, so FLOPs/bytes are already per chip — the "/ chips" in the
+    assignment formulas is therefore built in.
+  * collective bytes: sum of operand bytes of every all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute in the post-SPMD HLO
+    (operand types are inline in the HLO text). Wire-traffic multipliers:
+    all-reduce 2x (ring = reduce-scatter + all-gather), others 1x.
+  * links: v5e has 4 usable ICI links per chip on the 2-D torus; the pod axis
+    of the multi-pod mesh crosses DCN-class links — we report the same 50
+    GB/s for both and call this out where the pod axis dominates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+LINKS_PER_CHIP = 4
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_WIRE_MULT = {"all-reduce": 2.0}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-collective-kind operand bytes (wire-multiplied) from HLO text."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*[^=]*?\b"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)(?:-start)?\(", line)
+        if not m:
+            continue
+        kind = m.group(1)
+        # operand types are inline: op(  bf16[1,2]{..} %x, f32[3]{..} %y )
+        args = line[line.index("(") + 1:]
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(args):
+            total += _shape_bytes(dt, dims)
+        out[kind] += total * _WIRE_MULT.get(kind, 1.0)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                    # per-device HLO FLOPs
+    hbm_bytes: float                # per-device HLO bytes accessed
+    coll_bytes: float               # per-device wire bytes (all kinds)
+    coll_breakdown: Dict[str, float]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float              # 6*N*D (6*N_active*D for MoE)
+    useful_ratio: float             # model_flops / hlo_flops
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(cost: Dict[str, float], hlo_text: str,
+            model_flops: float) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    coll_total = sum(coll.values())
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = coll_total / (LINK_BW * LINKS_PER_CHIP)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    return RooflineTerms(
+        flops=flops, hbm_bytes=hbm, coll_bytes=coll_total,
+        coll_breakdown=coll, compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, dominant=dominant,
+        model_flops=model_flops,
+        useful_ratio=(model_flops / flops) if flops else 0.0)
+
+
+def model_flops_for(cfg, shape, n_devices: int) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE), per device.
+
+    D = tokens processed by the step: B*S for train (x3 for bwd is already
+    the 6 in 6ND), B*S for prefill (2ND forward only -> we use 2ND), B*1
+    for decode (2ND)."""
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens / n_devices

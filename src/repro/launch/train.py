@@ -1,0 +1,95 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Small-scale-runnable version of the production loop: config -> mesh ->
+sharded init -> train loop with checkpoint-every-K, restart-from-latest,
+straggler watchdog, and the deterministic data pipeline. On this container
+it runs the smoke configs on 1 device; on a real cluster the same file runs
+the full configs (jax.distributed.initialize + the production mesh).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..ckpt import checkpoint as C
+from ..configs import ARCH_IDS, get_config, get_smoke_config
+from ..data.pipeline import DataConfig, batch_at
+from ..dist import sharding as SH
+from ..dist.fault import FaultConfig, StragglerWatchdog, run_with_restarts
+from ..models import model as M
+from ..optim.adam import AdamConfig, init_opt_state
+from ..train.trainer import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    opt_cfg = AdamConfig(lr=args.lr, total_steps=args.steps,
+                         warmup_steps=max(1, args.steps // 20),
+                         moment_dtype=cfg.moment_dtype)
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                          global_batch=args.batch)
+    fault_cfg = FaultConfig(ckpt_dir=args.ckpt_dir,
+                            ckpt_every=args.ckpt_every)
+
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg,
+                                      microbatches=args.microbatches),
+                      donate_argnums=(0, 1))
+
+    def train_loop(start_step: int) -> int:
+        key = jax.random.PRNGKey(0)
+        params = M.init_params(cfg, key)
+        opt = init_opt_state(params, opt_cfg)
+        extra = {"data_step": 0}
+        if start_step > 0:
+            (params, opt), extra = C.restore(args.ckpt_dir,
+                                             (params, opt))
+        watchdog = StragglerWatchdog(fault_cfg.step_deadline_s)
+        data_step = int(extra.get("data_step", 0))
+
+        for step in range(start_step, args.steps):
+            tokens, labels = batch_at(data_cfg, data_step)
+            batch = {"tokens": tokens, "labels": labels}
+            if cfg.family == "vlm":
+                batch["patch_embeds"] = jnp.zeros(
+                    (args.batch, cfg.n_img_tokens, cfg.d_model), cfg.dtype)
+            if cfg.n_enc_layers:
+                batch["frame_embeds"] = jnp.zeros(
+                    (args.batch, cfg.enc_seq, cfg.d_model), cfg.dtype)
+            t0 = time.time()
+            metrics, params, opt = step_fn(params, opt, batch)
+            jax.block_until_ready(metrics["loss"])
+            watchdog.observe(time.time() - t0)
+            data_step += 1
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                      f"ce {float(metrics['ce']):.4f} "
+                      f"({time.time() - t0:.2f}s)")
+            if (step + 1) % fault_cfg.ckpt_every == 0 or \
+                    step == args.steps - 1:
+                C.save(args.ckpt_dir, step + 1, (params, opt),
+                       extra={"data_step": data_step})
+        return args.steps
+
+    run_with_restarts(train_loop, fault_cfg)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""LM substrate: layers, attention, MoE, SSM, and per-family assembly."""
+
+from . import attention, layers, model, moe, ssm
+
+__all__ = ["attention", "layers", "model", "moe", "ssm"]

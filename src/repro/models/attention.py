@@ -1,0 +1,300 @@
+"""Attention: chunked-flash (custom VJP), pencil-window, and decode paths.
+
+Three implementations, chosen by shape/kind (all pure XLA so the multi-pod
+dry-run compiles on any backend; ``kernels/window_attn.py`` is the Pallas
+version of the window path for real TPUs):
+
+  flash_attention   full causal attention as a double scan over (q, kv)
+                    chunks with online softmax and a custom VJP that
+                    recomputes per block — no S^2 residuals, which is what
+                    makes prefill_32k / train_4k fit.
+  window_attention_blocked
+                    sliding-window attention via the paper's pencil trick
+                    (DESIGN.md §4): tokens are regrouped into window-sized
+                    blocks and each block attends to (previous, self) only —
+                    compute and memory are O(S * window), never O(S^2).
+  decode_attention  one-token-vs-cache masked einsum (serve_step).
+
+All paths support GQA natively (no KV repetition) and gemma2's logit softcap.
+Scores/accumulators are fp32 regardless of input dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+NEG_INF = -1.0e30
+
+
+def attention(q: Array, k: Array, v: Array, causal: bool, softcap: float,
+              q_chunk: int, k_chunk: int) -> Array:
+    """Production path: chunked flash. REPRO_DENSE_ATTN=1 (roofline cost
+    runs only) switches to a dense masked einsum so XLA's cost analysis sees
+    every FLOP — the flash scans are while-loops that HloCostAnalysis counts
+    once (launch/costrun.py)."""
+    if os.environ.get("REPRO_DENSE_ATTN"):
+        return _dense_attention(q, k, v, causal, softcap)
+    return flash_attention(q, k, v, causal, softcap, q_chunk, k_chunk)
+
+
+def _dense_attention(q: Array, k: Array, v: Array, causal: bool,
+                     softcap: float) -> Array:
+    b, h, sq, d = q.shape
+    kh, skv = k.shape[1], k.shape[2]
+    qg = _split_gqa(q, kh).astype(jnp.float32) * (d ** -0.5)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k.astype(jnp.float32))
+    s = _softcap(s, softcap)
+    if causal:
+        qp = jax.lax.broadcasted_iota(jnp.int32, (sq, skv), 0)
+        kp = jax.lax.broadcasted_iota(jnp.int32, (sq, skv), 1)
+        s = jnp.where(qp >= kp, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def _softcap(s: Array, cap: float) -> Array:
+    return cap * jnp.tanh(s / cap) if cap > 0.0 else s
+
+
+def _softcap_grad(s_capped: Array, cap: float) -> Array:
+    """d softcap / d s, expressed from the *capped* value (recompute-free)."""
+    if cap <= 0.0:
+        return jnp.ones_like(s_capped)
+    t = s_capped / cap
+    return 1.0 - t * t
+
+
+def _split_gqa(q: Array, kh: int) -> Array:
+    b, h, s, d = q.shape
+    return q.reshape(b, kh, h // kh, s, d)
+
+
+def _chunk_for(s: int, target: int) -> int:
+    """Largest divisor of s that is <= target (vlm prefixes make S odd-sized)."""
+    c = min(target, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def _scores(q: Array, k: Array, softcap: float) -> Array:
+    """q (b, kh, g, qc, d) x k (b, kh, kc, d) -> fp32 (b, kh, g, qc, kc)."""
+    s = jnp.einsum("bkgqd,bksd->bkgqs", q, k,
+                   preferred_element_type=jnp.float32)
+    return _softcap(s, softcap)
+
+
+# ---------------------------------------------------------------------------
+# full causal flash (double chunk scan, custom VJP)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q: Array, k: Array, v: Array, causal: bool = True,
+                    softcap: float = 0.0, q_chunk: int = 512,
+                    k_chunk: int = 512) -> Array:
+    """Memory-efficient attention. q (B,H,Sq,D); k,v (B,KH,Skv,D)."""
+    out, _ = _flash_fwd(q, k, v, causal, softcap, q_chunk, k_chunk)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, softcap, q_chunk, k_chunk):
+    b, h, sq, d = q.shape
+    kh, skv = k.shape[1], k.shape[2]
+    g = h // kh
+    qc, kc = _chunk_for(sq, q_chunk), _chunk_for(skv, k_chunk)
+    nq, nk = sq // qc, skv // kc
+
+    scale = d ** -0.5
+    qg = (_split_gqa(q, kh) * scale).reshape(b, kh, g, nq, qc, d)
+    kc_ = k.reshape(b, kh, nk, kc, d)
+    vc_ = v.reshape(b, kh, nk, kc, d)
+
+    def q_step(_, qi):
+        qblk = qg[:, :, :, qi]                      # (b, kh, g, qc, d)
+
+        def kv_step(carry, ki):
+            m_prev, l_prev, acc = carry
+            s = _scores(qblk, kc_[:, :, ki], softcap)
+            if causal:
+                qpos = qi * qc + jax.lax.broadcasted_iota(
+                    jnp.int32, (qc, kc), 0)
+                kpos = ki * kc + jax.lax.broadcasted_iota(
+                    jnp.int32, (qc, kc), 1)
+                s = jnp.where(qpos >= kpos, s, NEG_INF)
+            m_cur = jnp.max(s, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m_prev, m_cur)
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m_prev - m_new)
+            l_new = l_prev * alpha + p.sum(-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p, vc_[:, :, ki],
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc), None
+
+        init = (jnp.full((b, kh, g, qc, 1), NEG_INF, jnp.float32),
+                jnp.zeros((b, kh, g, qc, 1), jnp.float32),
+                jnp.zeros((b, kh, g, qc, d), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        l = jnp.maximum(l, 1e-30)
+        lse = (m + jnp.log(l))[..., 0]              # (b, kh, g, qc)
+        return None, (acc / l, lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, jnp.arange(nq))
+    # outs: (nq, b, kh, g, qc, d) -> (b, h, sq, d)
+    out = jnp.moveaxis(outs, 0, 3).reshape(b, kh, g, sq, d)
+    out = out.reshape(b, h, sq, d).astype(q.dtype)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(b, kh, g, sq)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, softcap, q_chunk, k_chunk, res, dout):
+    q, k, v, out, lse = res
+    b, h, sq, d = q.shape
+    kh, skv = k.shape[1], k.shape[2]
+    g = h // kh
+    qc, kc = _chunk_for(sq, q_chunk), _chunk_for(skv, k_chunk)
+    nq, nk = sq // qc, skv // kc
+    scale = d ** -0.5
+
+    qg = (_split_gqa(q, kh) * scale).reshape(b, kh, g, nq, qc, d)
+    kc_ = k.reshape(b, kh, nk, kc, d)
+    vc_ = v.reshape(b, kh, nk, kc, d)
+    do = _split_gqa(dout.astype(jnp.float32), kh).reshape(b, kh, g, nq, qc, d)
+    og = _split_gqa(out.astype(jnp.float32), kh).reshape(b, kh, g, nq, qc, d)
+    lse_c = lse.reshape(b, kh, g, nq, qc)
+    delta = jnp.sum(do * og, axis=-1)               # (b, kh, g, nq, qc)
+
+    def q_step(carry, qi):
+        dk_acc, dv_acc = carry
+        qblk, doblk, dblk = qg[:, :, :, qi], do[:, :, :, qi], delta[:, :, :, qi]
+        lseblk = lse_c[:, :, :, qi]
+
+        def kv_step(inner, ki):
+            dq_blk, dk_acc, dv_acc = inner
+            s = _scores(qblk, kc_[:, :, ki], softcap)
+            if causal:
+                qpos = qi * qc + jax.lax.broadcasted_iota(
+                    jnp.int32, (qc, kc), 0)
+                kpos = ki * kc + jax.lax.broadcasted_iota(
+                    jnp.int32, (qc, kc), 1)
+                s = jnp.where(qpos >= kpos, s, NEG_INF)
+            p = jnp.exp(s - lseblk[..., None])      # (b, kh, g, qc, kc)
+            dv_c = jnp.einsum("bkgqs,bkgqd->bksd", p, doblk,
+                              preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bkgqd,bksd->bkgqs", doblk, vc_[:, :, ki],
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - dblk[..., None])
+            if softcap > 0.0:
+                # s already holds the capped value; clip absorbs the masked
+                # NEG_INF entries (p == 0 there, so any finite grad works).
+                t = jnp.clip(s / softcap, -1.0, 1.0)
+                ds = ds * (1.0 - t * t)
+            dq_blk = dq_blk + jnp.einsum(
+                "bkgqs,bksd->bkgqd", ds, kc_[:, :, ki],
+                preferred_element_type=jnp.float32)
+            dk_c = jnp.einsum("bkgqs,bkgqd->bksd", ds, qblk,
+                              preferred_element_type=jnp.float32)
+            dk_acc = dk_acc.at[:, :, ki].add(dk_c)
+            dv_acc = dv_acc.at[:, :, ki].add(dv_c)
+            return (dq_blk, dk_acc, dv_acc), None
+
+        dq0 = jnp.zeros((b, kh, g, qc, d), jnp.float32)
+        (dq_blk, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_step, (dq0, dk_acc, dv_acc), jnp.arange(nk))
+        return (dk_acc, dv_acc), dq_blk * scale
+
+    zeros_kv = jnp.zeros((b, kh, nk, kc, d), jnp.float32)
+    (dk, dv), dqs = jax.lax.scan(q_step, (zeros_kv, zeros_kv),
+                                 jnp.arange(nq))
+    dq = jnp.moveaxis(dqs, 0, 3).reshape(b, kh, g, sq, d).reshape(b, h, sq, d)
+    return (dq.astype(q.dtype),
+            dk.reshape(b, kh, skv, d).astype(k.dtype),
+            dv.reshape(b, kh, skv, d).astype(v.dtype))
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+# ---------------------------------------------------------------------------
+# pencil-window attention (the paper's cutoff transferred; O(S * window))
+# ---------------------------------------------------------------------------
+
+def window_attention_blocked(q: Array, k: Array, v: Array, *, window: int,
+                             softcap: float = 0.0) -> Array:
+    """Causal sliding-window attention via two-block pencils.
+
+    Tokens are grouped into blocks of ``window``; block i attends to blocks
+    (i-1, i) with the exact (q - k < window, k <= q) mask — the 1-D causal
+    version of the X-pencil's contiguous 3-cell window. Out-of-window keys
+    are never materialized. Requires S % window == 0 (configs satisfy this;
+    the serving path pads otherwise).
+    """
+    b, h, s, d = q.shape
+    kh = k.shape[1]
+    g = h // kh
+    assert s % window == 0, (s, window)
+    nb = s // window
+    scale = d ** -0.5
+
+    qb = _split_gqa(q, kh).reshape(b, kh, g, nb, window, d) * scale
+    kb = k.reshape(b, kh, nb, window, d)
+    vb = v.reshape(b, kh, nb, window, d)
+    # previous block (pencil neighbor): shift right, zero-pad block -1
+    k_prev = jnp.pad(kb[:, :, :-1], ((0, 0), (0, 0), (1, 0), (0, 0), (0, 0)))
+    v_prev = jnp.pad(vb[:, :, :-1], ((0, 0), (0, 0), (1, 0), (0, 0), (0, 0)))
+    k2 = jnp.concatenate([k_prev, kb], axis=3)       # (b, kh, nb, 2w, d)
+    v2 = jnp.concatenate([v_prev, vb], axis=3)
+
+    sc = jnp.einsum("bkgnqd,bknsd->bkgnqs", qb, k2,
+                    preferred_element_type=jnp.float32)
+    sc = _softcap(sc, softcap)
+    qpos = jax.lax.broadcasted_iota(jnp.int32, (window, 2 * window), 0) + window
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (window, 2 * window), 1)
+    mask = (kpos <= qpos) & (qpos - kpos < window)
+    first = jax.lax.broadcasted_iota(jnp.int32, (nb, 1, 1), 0) > 0
+    mask = mask[None, :, :] & (first | (kpos[None] >= window))
+    sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgnqs,bknsd->bkgnqd", p, v2,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, h, s, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode: one new token vs cache
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     cache_index: Array, *, window: int = 0,
+                     softcap: float = 0.0,
+                     window_flag: Optional[Array] = None) -> Array:
+    """q (B,H,1,D) vs cache (B,KH,S,D); positions > cache_index are masked
+    (and positions <= cache_index - window when window > 0). ``window_flag``
+    (traced bool) gates the window mask at runtime — gemma2's local/global
+    alternation inside a layer scan."""
+    b, h, _, d = q.shape
+    kh, s = k_cache.shape[1], k_cache.shape[2]
+    qg = _split_gqa(q, kh) * (d ** -0.5)             # (b, kh, g, 1, d)
+    sc = jnp.einsum("bkgqd,bksd->bkgqs", qg, k_cache,
+                    preferred_element_type=jnp.float32)
+    sc = _softcap(sc, softcap)
+    kpos = jnp.arange(s, dtype=jnp.int32)
+    valid = kpos <= cache_index
+    if window > 0:
+        in_window = kpos > cache_index - window
+        if window_flag is None:
+            valid = valid & in_window
+        else:
+            valid = valid & (in_window | ~window_flag)
+    sc = jnp.where(valid[None, None, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, h, 1, d).astype(q.dtype)

@@ -1,0 +1,152 @@
+"""Shared transformer layers: norms, RoPE, MLP, projections, embedding.
+
+Parameters are plain nested dicts of jnp arrays; every init function takes an
+explicit PRNG key and dtype. Layer weights are created *stacked* over the
+layer dimension by the model assembler (scan-over-layers keeps the HLO — and
+therefore the 512-device dry-run compile — small).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+# -- norms -------------------------------------------------------------------
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def apply_norm(x: Array, p: Dict[str, Array], kind: str) -> Array:
+    if kind == "rms":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def init_norm(d: int, kind: str, dtype) -> Dict[str, Array]:
+    if kind == "rms":
+        return {"scale": jnp.zeros((d,), dtype)}        # (1 + scale) form
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+# -- rotary position embedding ------------------------------------------------
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x (..., S, D) with D even; positions (..., S) or (S,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x2 * cos + x1 * sin
+    return jnp.concatenate([xr1, xr2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(s: int, d: int, dtype) -> Array:
+    """Whisper-style fixed sinusoidal table (S, D)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (jnp.log(10000.0) / max(half - 1, 1)))
+    ang = jnp.arange(s, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# -- dense / GLU MLP -----------------------------------------------------------
+
+def _act(x: Array, kind: str) -> Array:
+    return jax.nn.silu(x) if kind == "silu" else jax.nn.gelu(x)
+
+
+def mlp(x: Array, p: Dict[str, Array], act: str) -> Array:
+    from ..dist.sharding import constrain
+    if "w_gate" not in p:            # plain 2-matrix MLP (starcoder2/whisper)
+        h = _act(constrain(x @ p["w_up"], "dp", None, "tp"), act)
+        return h @ p["w_down"]
+    gate = _act(constrain(x @ p["w_gate"], "dp", None, "tp"), act)
+    return (gate * (x @ p["w_up"])) @ p["w_down"]
+
+
+def init_mlp(key, d: int, f: int, dtype, gated: bool = True
+             ) -> Dict[str, Array]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    p = {
+        "w_up": (jax.random.normal(k2, (d, f)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (f, d)) * s_out).astype(dtype),
+    }
+    if gated:
+        p["w_gate"] = (jax.random.normal(k1, (d, f)) * s_in).astype(dtype)
+    return p
+
+
+# -- attention projections -----------------------------------------------------
+
+def init_attn(key, d: int, n_heads: int, n_kv: int, head_dim: int,
+              dtype, bias: bool = False) -> Dict[str, Array]:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(kq, (d, n_heads * head_dim)) * s).astype(dtype),
+        "wk": (jax.random.normal(kk, (d, n_kv * head_dim)) * s).astype(dtype),
+        "wv": (jax.random.normal(kv, (d, n_kv * head_dim)) * s).astype(dtype),
+        "wo": (jax.random.normal(ko, (n_heads * head_dim, d))
+               * (n_heads * head_dim) ** -0.5).astype(dtype),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def qkv_project(x: Array, p: Dict[str, Array], n_heads: int, n_kv: int,
+                head_dim: int):
+    """x (B, S, d) -> q (B, H, S, Dh), k/v (B, KH, S, Dh)."""
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, n_heads, head_dim).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, n_kv, head_dim).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, n_kv, head_dim).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def out_project(o: Array, p: Dict[str, Array]) -> Array:
+    """(B, H, S, Dh) -> (B, S, d)."""
+    b, h, s, dh = o.shape
+    return o.transpose(0, 2, 1, 3).reshape(b, s, h * dh) @ p["wo"]
+
+
+# -- embedding -----------------------------------------------------------------
+
+def init_embed(key, vocab: int, d: int, dtype) -> Array:
+    return (jax.random.normal(key, (vocab, d)) * (d ** -0.5)).astype(dtype)
+
+
+def embed_tokens(table: Array, tokens: Array, scale: bool = False) -> Array:
+    x = jnp.take(table, tokens, axis=0)
+    if scale:
+        x = x * (table.shape[-1] ** 0.5)
+    return x

@@ -1,0 +1,688 @@
+"""Model assembly: init / forward / prefill / decode for all 10 families.
+
+Functional style: ``init_params(cfg, key) -> params`` (nested dict, layer
+weights stacked over the leading L dim) and pure apply functions. Layers run
+under ``lax.scan`` with optional remat — this keeps the HLO size independent
+of depth, which is what makes 314B/480B configs lowerable and compilable on
+the 512-device dry-run mesh.
+
+Modes:
+  forward      full-sequence logits (train loss / prefill scoring)
+  prefill      full sequence -> (logits, decode cache)
+  decode_step  one token + cache -> (logits, updated cache)
+
+Family wiring:
+  dense / moe / vlm : decoder-only transformer (MoE swaps the MLP)
+  ssm               : mamba2 stack (attention-free)
+  hybrid            : mamba2 stack + one *shared* attn+MLP block every
+                      ``hybrid_attn_every`` layers (zamba2; weights shared,
+                      caches per invocation)
+  audio             : enc-dec (whisper); conv frontend stubbed by
+                      ``frame_embeds`` inputs per the assignment
+  vlm               : decoder with stub ``patch_embeds`` prepended
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import constrain
+
+from ..configs.base import ModelConfig
+from .attention import (attention, decode_attention,
+                        window_attention_blocked)
+from .layers import (apply_norm, embed_tokens, init_attn, init_embed,
+                     init_mlp, init_norm, mlp, out_project, qkv_project,
+                     rope, sinusoidal_positions)
+from .moe import init_moe, moe_mlp
+from .ssm import (init_mamba2, mamba2_block, mamba2_decode)
+
+Array = jnp.ndarray
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(cfg: ModelConfig, key, dtype) -> Params:
+    """One decoder layer's params (unstacked)."""
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": init_norm(cfg.d_model, cfg.norm, dtype),
+                 "norm2": init_norm(cfg.d_model, cfg.norm, dtype)}
+    if cfg.post_norms:
+        p["post_norm1"] = init_norm(cfg.d_model, cfg.norm, dtype)
+        p["post_norm2"] = init_norm(cfg.d_model, cfg.norm, dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        p["mamba"] = init_mamba2(ks[0], cfg.d_model, cfg.d_inner,
+                                 cfg.ssm_heads, cfg.ssm_state, cfg.ssm_conv,
+                                 dtype)
+        return p
+    p["attn"] = init_attn(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                          cfg.head_dim, dtype, bias=cfg.qkv_bias)
+    if cfg.n_experts:
+        p["moe"] = init_moe(ks[1], cfg.d_model, cfg.d_ff, cfg.n_experts,
+                            dtype)
+        if cfg.moe_dense_residual:
+            p["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype,
+                                cfg.mlp_gated)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype,
+                            cfg.mlp_gated)
+    return p
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, cfg.n_layers + 8)
+    params: Params = {
+        "embed": init_embed(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": init_norm(cfg.d_model, cfg.norm, dtype),
+        "layers": _stack([_init_layer(cfg, keys[1 + i], dtype)
+                          for i in range(cfg.n_layers)]),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_embed(keys[-1], cfg.vocab_size,
+                                       cfg.d_model, dtype).T
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        params["shared_attn"] = {
+            "norm1": init_norm(cfg.d_model, cfg.norm, dtype),
+            "norm2": init_norm(cfg.d_model, cfg.norm, dtype),
+            "attn": init_attn(keys[-2], cfg.d_model, cfg.n_heads,
+                              cfg.n_kv_heads, cfg.head_dim, dtype),
+            "mlp": init_mlp(keys[-3], cfg.d_model, cfg.d_ff, dtype,
+                            cfg.mlp_gated),
+        }
+    if cfg.n_enc_layers:
+        enc_keys = jax.random.split(keys[-4], cfg.n_enc_layers)
+        params["enc_layers"] = _stack([
+            {"norm1": init_norm(cfg.d_model, cfg.norm, dtype),
+             "norm2": init_norm(cfg.d_model, cfg.norm, dtype),
+             "attn": init_attn(k, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, dtype),
+             "mlp": init_mlp(jax.random.fold_in(k, 1), cfg.d_model,
+                             cfg.d_ff, dtype, cfg.mlp_gated)}
+            for k in enc_keys])
+        params["enc_final_norm"] = init_norm(cfg.d_model, cfg.norm, dtype)
+        xkeys = jax.random.split(keys[-5], cfg.n_layers)
+        params["cross_attn"] = _stack([
+            {"norm": init_norm(cfg.d_model, cfg.norm, dtype),
+             "attn": init_attn(k, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, dtype)}
+            for k in xkeys])
+    return params
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+
+def _self_attention(cfg: ModelConfig, p: Params, x: Array, positions: Array,
+                    is_local: bool) -> Tuple[Array, Array, Array]:
+    """-> (projected output, k, v) — k/v reused by prefill cache building."""
+    q, k, v = qkv_project(x, p, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+    q = constrain(q, "dp", "tp", None, None)
+    k = constrain(k, "dp", "tp", None, None)
+    v = constrain(v, "dp", "tp", None, None)
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    if is_local and cfg.window < x.shape[1]:
+        o = window_attention_blocked(q, k, v, window=cfg.window,
+                                     softcap=cfg.attn_softcap)
+    else:
+        o = attention(q, k, v, True, cfg.attn_softcap,
+                      cfg.attn_q_chunk, cfg.attn_k_chunk)
+    return out_project(o, p), k, v
+
+
+_FSDP_GATHER_RULES = {
+    # leaf name -> spec roles with the fsdp (weight-resting) axis dropped.
+    # Applying these inside the layer body makes GSPMD all-gather each
+    # layer's weights just in time (ZeRO-3) instead of keeping them
+    # stationary and all-reducing activation partials over the data axis —
+    # measured 64.3 -> ~2 GB/device collective on qwen train_4k (§Perf).
+    "wq": (None, "tp"), "wk": (None, "tp"), "wv": (None, "tp"),
+    "wo": ("tp", None),
+    "w_gate": (None, "tp"), "w_up": (None, "tp"), "w_down": ("tp", None),
+    "in_proj": (None, "tp"), "out_proj": ("tp", None),
+    "router": (None, None),
+}
+
+_FSDP_GATHER_RULES_MOE_EP = {
+    "w_gate": ("tp", None, None), "w_up": ("tp", None, None),
+    "w_down": ("tp", None, None), "router": (None, None),
+}
+
+_FSDP_GATHER_RULES_MOE_TP = {
+    "w_gate": (None, None, "tp"), "w_up": (None, None, "tp"),
+    "w_down": (None, "tp", None), "router": (None, None),
+}
+
+
+def _gather_fsdp(p: Params, moe_ep: Optional[bool] = None) -> Params:
+    from ..models.moe import _ep
+
+    def one(path, leaf):
+        name = getattr(path[-1], "key", "")
+        names = [getattr(k, "key", "") for k in path]
+        if "moe" in names and name in _FSDP_GATHER_RULES_MOE_EP:
+            rules = _FSDP_GATHER_RULES_MOE_EP if _ep(leaf.shape[0]) \
+                else _FSDP_GATHER_RULES_MOE_TP
+            return constrain(leaf, *rules[name])
+        if name in _FSDP_GATHER_RULES and leaf.ndim == len(
+                _FSDP_GATHER_RULES[name]):
+            return constrain(leaf, *_FSDP_GATHER_RULES[name])
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(one, p)
+
+
+def _maybe_post(cfg: ModelConfig, p: Params, name: str, h: Array) -> Array:
+    if cfg.post_norms:
+        return apply_norm(h, p[name], cfg.norm)
+    return h
+
+
+def _mlp_or_moe(cfg: ModelConfig, p: Params, x: Array) -> Tuple[Array, Array]:
+    if cfg.n_experts:
+        out, aux = moe_mlp(x, p["moe"], top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor, act=cfg.act)
+        if cfg.moe_dense_residual:
+            out = out + mlp(x, p["mlp"], cfg.act)
+        return out, aux
+    return mlp(x, p["mlp"], cfg.act), jnp.zeros((), jnp.float32)
+
+
+def _decoder_layer(cfg: ModelConfig, p: Params, x: Array, positions: Array,
+                   is_local: bool) -> Tuple[Array, Array, Array, Array]:
+    """-> (x, aux_loss, k, v).
+
+    The residual stream is sequence-sharded over the TP axis between blocks
+    (Megatron-SP): the scan carry and the per-layer remat residual shrink by
+    the TP degree — 51 GiB -> 3.2 GiB on grok-1 train_4k (§Perf)."""
+    x = constrain(x, "dp", "tp", None)
+    p = _gather_fsdp(p)
+    h, k, v = _self_attention(cfg, p["attn"],
+                              apply_norm(x, p["norm1"], cfg.norm),
+                              positions, is_local)
+    x = x + _maybe_post(cfg, p, "post_norm1", h)
+    h, aux = _mlp_or_moe(cfg, p, apply_norm(x, p["norm2"], cfg.norm))
+    x = x + _maybe_post(cfg, p, "post_norm2", h)
+    return x, aux, k, v
+
+
+def _mamba_layer(cfg: ModelConfig, p: Params, x: Array) -> Array:
+    x = constrain(x, "dp", "tp", None)     # sequence-sharded residual (SP)
+    p = _gather_fsdp(p)
+    h = mamba2_block(apply_norm(x, p["norm1"], cfg.norm), p["mamba"],
+                     d_inner=cfg.d_inner, state=cfg.ssm_state,
+                     n_heads=cfg.ssm_heads, headdim=cfg.ssm_headdim,
+                     chunk=cfg.ssm_chunk)
+    return x + h
+
+
+def _remat(fn, enabled: bool = True):
+    if not enabled:
+        return fn
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+def _scan(body, carry, xs):
+    """lax.scan with an env-controlled unroll.
+
+    REPRO_SCAN_UNROLL=full makes the roofline dry-run unroll layer loops so
+    ``cost_analysis`` counts every layer (XLA's HloCostAnalysis visits a
+    while-body exactly once — measured 24x FLOP undercount on the default
+    scan path; EXPERIMENTS.md §Roofline methodology)."""
+    unroll = os.environ.get("REPRO_SCAN_UNROLL", "1")
+    if unroll == "full":
+        return jax.lax.scan(body, carry, xs, unroll=True)
+    return jax.lax.scan(body, carry, xs, unroll=int(unroll))
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+
+def _run_decoder_stack(cfg: ModelConfig, params: Params, x: Array,
+                       positions: Array, remat: bool,
+                       enc_h: Optional[Array] = None,
+                       collect_kv: bool = False):
+    """Scan over stacked decoder layers -> (x, aux_loss, kv or None)."""
+    zero = jnp.zeros((), jnp.float32)
+    if cfg.family in ("ssm", "hybrid"):
+        return _run_mamba_stack(cfg, params, x, positions, remat), zero, None
+
+    if cfg.local_global:
+        # gemma2: scan over (local, global) layer pairs — no lax.cond, so
+        # compiled FLOPs reflect the real local/global split.
+        pairs = jax.tree.map(
+            lambda a: a.reshape(cfg.n_layers // 2, 2, *a.shape[1:]),
+            params["layers"])
+
+        # aux rides in ys, not the carry: a mixed bf16/f32 carry makes the
+        # scan AD save an f32 copy of the whole residual stack (§Perf).
+        def pair_body(h, lp):
+            h, a1, k1, v1 = _decoder_layer(
+                cfg, jax.tree.map(lambda a: a[0], lp), h, positions, True)
+            h, a2, k2, v2 = _decoder_layer(
+                cfg, jax.tree.map(lambda a: a[1], lp), h, positions, False)
+            kv = (jnp.stack([k1, k2]), jnp.stack([v1, v2])) \
+                if collect_kv else None
+            return h, (a1 + a2, kv)
+
+        x, (auxs, kvs) = _scan(_remat(pair_body, remat), x, pairs)
+        if collect_kv:
+            ks, vs = kvs
+            ks = ks.reshape(cfg.n_layers, *ks.shape[2:])
+            vs = vs.reshape(cfg.n_layers, *vs.shape[2:])
+            return x, auxs.sum(), (ks, vs)
+        return x, auxs.sum(), None
+
+    def body(h, inp):
+        if enc_h is None:
+            lp = inp
+            h, a, k, v = _decoder_layer(cfg, lp, h, positions, False)
+        else:
+            lp, xp = inp
+            h, a, k, v = _decoder_layer(cfg, lp, h, positions, False)
+            h = h + _cross_attention(cfg, xp, h, enc_h)
+        return h, (a, (k, v) if collect_kv else None)
+
+    xs = params["layers"]
+    if enc_h is not None:
+        xs = (params["layers"], params["cross_attn"])
+    x, (auxs, kvs) = _scan(_remat(body, remat), x, xs)
+    return x, auxs.sum(), kvs
+
+
+def _cross_attention(cfg: ModelConfig, xp: Params, h: Array,
+                     enc_h: Array) -> Array:
+    hq = apply_norm(h, xp["norm"], cfg.norm)
+    q, _, _ = qkv_project(hq, xp["attn"], cfg.n_heads, cfg.n_kv_heads,
+                          cfg.head_dim)
+    b, se, _ = enc_h.shape
+    kx = (enc_h @ xp["attn"]["wk"]).reshape(
+        b, se, cfg.n_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    vx = (enc_h @ xp["attn"]["wv"]).reshape(
+        b, se, cfg.n_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    o = attention(q, kx, vx, False, 0.0, cfg.attn_q_chunk,
+                  cfg.attn_k_chunk)
+    return out_project(o, xp["attn"])
+
+
+def _run_mamba_stack(cfg: ModelConfig, params: Params, x: Array,
+                     positions: Array, remat: bool) -> Array:
+    def body(h, lp):
+        return _mamba_layer(cfg, lp, h), None
+
+    every = cfg.hybrid_attn_every
+    if cfg.family == "ssm" or not every:
+        x, _ = _scan(_remat(body, remat), x, params["layers"])
+        return x
+
+    # zamba2: groups of ``every`` mamba layers, the shared attn+MLP block
+    # (one weight set, applied at several depths) between groups.
+    n_groups = -(-cfg.n_layers // every)
+    for g in range(n_groups):
+        lo, hi = g * every, min((g + 1) * every, cfg.n_layers)
+        group = jax.tree.map(lambda a: a[lo:hi], params["layers"])
+        x, _ = _scan(_remat(body, remat), x, group)
+        if hi < cfg.n_layers or cfg.n_layers % every == 0:
+            sp = params["shared_attn"]
+            h, _, _ = _self_attention(cfg, sp["attn"],
+                                      apply_norm(x, sp["norm1"], cfg.norm),
+                                      positions, False)
+            x = x + h
+            x = x + mlp(apply_norm(x, sp["norm2"], cfg.norm), sp["mlp"],
+                        cfg.act)
+    return x
+
+
+def _run_encoder(cfg: ModelConfig, params: Params, frames: Array,
+                 remat: bool) -> Array:
+    """Whisper encoder over stub frame embeddings (bidirectional)."""
+    pos_table = sinusoidal_positions(frames.shape[1], cfg.d_model,
+                                     frames.dtype)
+    x = frames + pos_table[None]
+
+    def body(h, lp):
+        hn = apply_norm(h, lp["norm1"], cfg.norm)
+        q, k, v = qkv_project(hn, lp["attn"], cfg.n_heads, cfg.n_kv_heads,
+                              cfg.head_dim)
+        a = attention(q, k, v, False, 0.0, cfg.attn_q_chunk,
+                      cfg.attn_k_chunk)
+        h = h + out_project(a, lp["attn"])
+        h = h + mlp(apply_norm(h, lp["norm2"], cfg.norm), lp["mlp"], cfg.act)
+        return h, None
+
+    x, _ = _scan(_remat(body, remat), x, params["enc_layers"])
+    return apply_norm(x, params["enc_final_norm"], cfg.norm)
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(cfg: ModelConfig, params: Params, tokens: Array,
+                  extras: Dict[str, Array]) -> Tuple[Array, Array]:
+    x = embed_tokens(params["embed"], tokens, scale=cfg.scale_embed)
+    x = constrain(x, "dp", None, None)
+    if cfg.family == "vlm" and "patch_embeds" in extras:
+        x = jnp.concatenate([extras["patch_embeds"].astype(x.dtype), x],
+                            axis=1)
+    if cfg.n_enc_layers:   # whisper decoder: sinusoidal, no rope
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model, x.dtype)[None]
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    return x, positions
+
+
+def _logits(cfg: ModelConfig, params: Params, x: Array) -> Array:
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    x = constrain(x, "dp", None, None)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = constrain(logits, "dp", None, "tp")
+    if cfg.logit_softcap > 0.0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: Array,
+            remat: bool = True, **extras) -> Tuple[Array, Array]:
+    """Full-sequence logits. Returns (logits (B, S', V), aux_loss)."""
+    x, aux = forward_hidden(cfg, params, tokens, remat=remat, **extras)
+    logits = jnp.einsum("bsd,dv->bsv", x, lm_head(cfg, params))
+    logits = constrain(logits, "dp", None, "tp")
+    return logits_transform(cfg)(logits), aux
+
+
+def forward_hidden(cfg: ModelConfig, params: Params, tokens: Array,
+                   remat: bool = True, **extras) -> Tuple[Array, Array]:
+    """Final-norm hidden states (B, S', d) — the train loss applies the LM
+    head chunk-by-chunk so the full (B, S, V) logits never materialize."""
+    x, positions = _embed_inputs(cfg, params, tokens, extras)
+    enc_h = (_run_encoder(cfg, params, extras["frame_embeds"], remat)
+             if cfg.n_enc_layers else None)
+    x, aux, _ = _run_decoder_stack(cfg, params, x, positions, remat, enc_h)
+    return apply_norm(x, params["final_norm"], cfg.norm), aux
+
+
+def lm_head(cfg: ModelConfig, params: Params) -> Array:
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def logits_transform(cfg: ModelConfig):
+    if cfg.logit_softcap > 0.0:
+        return lambda l: cfg.logit_softcap * jnp.tanh(l / cfg.logit_softcap)
+    return lambda l: l
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: Array,
+            max_len: Optional[int] = None, **extras
+            ) -> Tuple[Array, Dict[str, Any]]:
+    """Score the prompt and build the decode cache (serving prefill)."""
+    b, s = tokens.shape[0], tokens.shape[1]
+    max_len = max_len or s
+    x, positions = _embed_inputs(cfg, params, tokens, extras)
+    enc_h = (_run_encoder(cfg, params, extras["frame_embeds"], False)
+             if cfg.n_enc_layers else None)
+
+    if cfg.family in ("ssm", "hybrid"):
+        # SSD terminal states are cheap to rebuild at decode start; the
+        # dry-run cell exposes the logits + zeroed cache shapes.
+        x2, aux, _ = _run_decoder_stack(cfg, params, x, positions, False,
+                                        enc_h)
+        return _logits(cfg, params, x2), init_cache(cfg, b, max_len)
+
+    x2, aux, kvs = _run_decoder_stack(cfg, params, x, positions, False,
+                                      enc_h, collect_kv=True)
+    ks, vs = kvs
+    pad = max_len - ks.shape[3]
+    if pad > 0:
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    cache: Dict[str, Any] = {"k": ks, "v": vs}
+    if cfg.n_enc_layers:
+        # cross-attention K/V are fixed after prefill
+        def xkv(xp):
+            b_, se, _ = enc_h.shape
+            kx = (enc_h @ xp["attn"]["wk"]).reshape(
+                b_, se, cfg.n_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+            vx = (enc_h @ xp["attn"]["wv"]).reshape(
+                b_, se, cfg.n_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+            return kx, vx
+
+        kxs, vxs = jax.vmap(xkv)(params["cross_attn"])
+        cache["cross_k"], cache["cross_v"] = kxs, vxs
+    return _logits(cfg, params, x2), cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """ShapeDtypeStructs of the decode cache (dry-run inputs)."""
+    dtype = jnp.dtype(cfg.dtype)
+    sd = jax.ShapeDtypeStruct
+    if cfg.family == "ssm":
+        return _mamba_cache_spec(cfg, batch, cfg.n_layers)
+    if cfg.family == "hybrid":
+        spec = _mamba_cache_spec(cfg, batch, cfg.n_layers)
+        n_inv = (cfg.n_layers // cfg.hybrid_attn_every
+                 if cfg.hybrid_attn_every else 0)
+        kv = (n_inv, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+        spec["shared_k"] = sd(kv, dtype)
+        spec["shared_v"] = sd(kv, dtype)
+        return spec
+    kv = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+    spec = {"k": sd(kv, dtype), "v": sd(kv, dtype)}
+    if cfg.n_enc_layers and cfg.enc_seq:
+        xkv = (cfg.n_layers, batch, cfg.n_kv_heads, cfg.enc_seq,
+               cfg.head_dim)
+        spec["cross_k"] = sd(xkv, dtype)
+        spec["cross_v"] = sd(xkv, dtype)
+    return spec
+
+
+def _mamba_cache_spec(cfg, batch, n_layers):
+    sd = jax.ShapeDtypeStruct
+    dtype = jnp.dtype(cfg.dtype)
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": sd((n_layers, batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "ssm": sd((n_layers, batch, cfg.ssm_heads, cfg.ssm_headdim,
+                   cfg.ssm_state), jnp.float32),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, max_len))
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Dict[str, Any],
+                tokens: Array, cache_index: Array
+                ) -> Tuple[Array, Dict[str, Any]]:
+    """One decoding step. tokens (B, 1); cache_index = current length."""
+    x = embed_tokens(params["embed"], tokens, scale=cfg.scale_embed)
+    positions = cache_index[None].astype(jnp.int32)
+    if cfg.n_enc_layers:
+        pos_t = sinusoidal_positions(cache["k"].shape[3], cfg.d_model,
+                                     x.dtype)
+        x = x + jax.lax.dynamic_slice_in_dim(pos_t, cache_index, 1)[None]
+
+    if cfg.family in ("ssm", "hybrid"):
+        x, cache = _decode_mamba(cfg, params, cache, x, cache_index)
+        return _logits(cfg, params, x), cache
+
+    def attn_decode(h, lp, kc, vc, is_local: bool):
+        """One decode attention sublayer; returns (h, kc, vc)."""
+        lp = _gather_fsdp(lp)
+        hn = apply_norm(h, lp["norm1"], cfg.norm)
+        q, k, v = qkv_project(hn, lp["attn"], cfg.n_heads, cfg.n_kv_heads,
+                              cfg.head_dim)
+        if cfg.use_rope:
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+        if not os.environ.get("REPRO_NO_CACHE_UPDATE"):
+            # measurement-only switch: HloCostAnalysis charges a DUS as a
+            # full-buffer copy; on TPU the donated cache updates in place.
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k, cache_index,
+                                                     axis=2)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v, cache_index,
+                                                     axis=2)
+        if is_local and cfg.window < kc.shape[2]:
+            # the paper's cutoff applied to the cache: only the window pencil
+            # is *read* (dynamic slice), not the whole 32k cache — out-of-
+            # cutoff bytes are never loaded (DESIGN.md §4, §Perf gemma cell).
+            w = cfg.window
+            start = jnp.clip(cache_index - w + 1, 0, kc.shape[2] - w)
+            kwin = jax.lax.dynamic_slice_in_dim(kc, start, w, axis=2)
+            vwin = jax.lax.dynamic_slice_in_dim(vc, start, w, axis=2)
+            o = decode_attention(q, kwin, vwin, cache_index - start,
+                                 softcap=cfg.attn_softcap)
+        else:
+            o = decode_attention(q, kc, vc, cache_index,
+                                 softcap=cfg.attn_softcap)
+        h = h + _maybe_post(cfg, lp, "post_norm1", out_project(o, lp["attn"]))
+        m, _ = _mlp_or_moe(cfg, lp, apply_norm(h, lp["norm2"], cfg.norm))
+        h = h + _maybe_post(cfg, lp, "post_norm2", m)
+        return h, kc, vc
+
+    if cfg.local_global:
+        # scan over (local, global) pairs so the window slicing is static
+        pairs = jax.tree.map(
+            lambda a: a.reshape(cfg.n_layers // 2, 2, *a.shape[1:]),
+            params["layers"])
+        kc2 = cache["k"].reshape(cfg.n_layers // 2, 2, *cache["k"].shape[1:])
+        vc2 = cache["v"].reshape(cfg.n_layers // 2, 2, *cache["v"].shape[1:])
+
+        def pair_body(h, inp):
+            lp, kc, vc = inp
+            h, kl, vl = attn_decode(h, jax.tree.map(lambda a: a[0], lp),
+                                    kc[0], vc[0], True)
+            h, kg, vg = attn_decode(h, jax.tree.map(lambda a: a[1], lp),
+                                    kc[1], vc[1], False)
+            return h, (jnp.stack([kl, kg]), jnp.stack([vl, vg]))
+
+        x, (nk, nv) = _scan(pair_body, x, (pairs, kc2, vc2))
+        cache = dict(cache)
+        cache["k"] = nk.reshape(cfg.n_layers, *nk.shape[2:])
+        cache["v"] = nv.reshape(cfg.n_layers, *nv.shape[2:])
+        return _logits(cfg, params, x), cache
+
+    def body(h, inp):
+        if cfg.n_enc_layers:
+            lp, kc, vc, xp, xk, xv = inp
+        else:
+            lp, kc, vc = inp
+        h, kc, vc = attn_decode_body(h, lp, kc, vc)
+        if cfg.n_enc_layers:
+            hq = apply_norm(h, xp["norm"], cfg.norm)
+            q2, _, _ = qkv_project(hq, xp["attn"], cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.head_dim)
+            o2 = decode_attention(q2, xk, xv, jnp.int32(xk.shape[2] - 1))
+            h = h + out_project(o2, xp["attn"])
+        return h, (kc, vc)
+
+    def attn_decode_body(h, lp, kc, vc):
+        lp = _gather_fsdp(lp)
+        hn = apply_norm(h, lp["norm1"], cfg.norm)
+        q, k, v = qkv_project(hn, lp["attn"], cfg.n_heads, cfg.n_kv_heads,
+                              cfg.head_dim)
+        if cfg.use_rope:
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+        if not os.environ.get("REPRO_NO_CACHE_UPDATE"):
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k, cache_index,
+                                                     axis=2)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v, cache_index,
+                                                     axis=2)
+        o = decode_attention(q, kc, vc, cache_index, softcap=cfg.attn_softcap)
+        h = h + _maybe_post(cfg, lp, "post_norm1", out_project(o, lp["attn"]))
+        # mlp/moe handled here so enc-dec cross-attn (in ``body``) slots
+        # between attention and the MLP exactly as in forward
+        m, _ = _mlp_or_moe(cfg, lp, apply_norm(h, lp["norm2"], cfg.norm))
+        h = h + _maybe_post(cfg, lp, "post_norm2", m)
+        return h, kc, vc
+
+    if cfg.n_enc_layers:
+        xs = (params["layers"], cache["k"], cache["v"],
+              params["cross_attn"], cache["cross_k"], cache["cross_v"])
+    else:
+        xs = (params["layers"], cache["k"], cache["v"])
+    x, (new_k, new_v) = _scan(body, x, xs)
+    cache = dict(cache)
+    cache["k"], cache["v"] = new_k, new_v
+    return _logits(cfg, params, x), cache
+
+
+def _decode_mamba(cfg, params, cache, x, cache_index):
+    def body(h, inp):
+        lp, conv_c, ssm_c = inp
+        hn = apply_norm(h, lp["norm1"], cfg.norm)
+        y, new = mamba2_decode(hn, lp["mamba"],
+                               {"conv": conv_c, "ssm": ssm_c},
+                               d_inner=cfg.d_inner, state=cfg.ssm_state,
+                               n_heads=cfg.ssm_heads,
+                               headdim=cfg.ssm_headdim)
+        return h + y, (new["conv"], new["ssm"])
+
+    every = cfg.hybrid_attn_every
+    cache = dict(cache)
+    if cfg.family == "ssm" or not every:
+        x, (nc, ns) = _scan(
+            body, x, (params["layers"], cache["conv"], cache["ssm"]))
+        cache["conv"], cache["ssm"] = nc, ns
+        return x, cache
+
+    positions = cache_index[None].astype(jnp.int32)
+    n_groups = -(-cfg.n_layers // every)
+    new_conv, new_ssm, new_sk, new_sv = [], [], [], []
+    inv = 0
+    for g in range(n_groups):
+        lo, hi = g * every, min((g + 1) * every, cfg.n_layers)
+        x, (nc, ns) = _scan(
+            body, x, (jax.tree.map(lambda a: a[lo:hi], params["layers"]),
+                      cache["conv"][lo:hi], cache["ssm"][lo:hi]))
+        new_conv.append(nc)
+        new_ssm.append(ns)
+        if hi < cfg.n_layers or cfg.n_layers % every == 0:
+            sp = params["shared_attn"]
+            hn = apply_norm(x, sp["norm1"], cfg.norm)
+            q, k, v = qkv_project(hn, sp["attn"], cfg.n_heads,
+                                  cfg.n_kv_heads, cfg.head_dim)
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                cache["shared_k"][inv], k, cache_index, axis=2)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                cache["shared_v"][inv], v, cache_index, axis=2)
+            new_sk.append(kc)
+            new_sv.append(vc)
+            o = decode_attention(q, kc, vc, cache_index)
+            x = x + out_project(o, sp["attn"])
+            x = x + mlp(apply_norm(x, sp["norm2"], cfg.norm), sp["mlp"],
+                        cfg.act)
+            inv += 1
+    cache["conv"] = jnp.concatenate(new_conv)
+    cache["ssm"] = jnp.concatenate(new_ssm)
+    if new_sk:
+        cache["shared_k"] = jnp.stack(new_sk)
+        cache["shared_v"] = jnp.stack(new_sv)
+    return x, cache

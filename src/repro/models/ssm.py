@@ -1,0 +1,193 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD: within-chunk attention-like einsums + inter-chunk linear
+recurrence, the standard minimal-SSD formulation. Chunking plays the same
+role as the paper's pencils: the quadratic part is confined to a staged
+block, the cross-block coupling is a cheap carried state. Decode is a
+single-token state update (O(1) per token — why mamba2/zamba2 are the
+long_500k-eligible archs).
+
+Shapes: d_inner = expand * d_model, heads H = d_inner / headdim P, single
+B/C group (G=1), state size N = cfg.ssm_state.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+
+Array = jnp.ndarray
+
+
+def init_mamba2(key, d: int, d_inner: int, n_heads: int, state: int,
+                conv: int, dtype) -> Dict[str, Array]:
+    keys = jax.random.split(key, 4)
+    conv_ch = d_inner + 2 * state       # x, B, C run through the conv
+    proj_out = 2 * d_inner + 2 * state + n_heads   # z, x, B, C, dt
+    return {
+        "in_proj": (jax.random.normal(keys[0], (d, proj_out))
+                    * d ** -0.5).astype(dtype),
+        "conv_w": (jax.random.normal(keys[1], (conv, conv_ch))
+                   * conv ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((n_heads,), jnp.float32),       # A = -exp(a_log)
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm_scale": jnp.zeros((d_inner,), dtype),
+        "out_proj": (jax.random.normal(keys[2], (d_inner, d))
+                     * d_inner ** -0.5).astype(dtype),
+    }
+
+
+def _split_proj(zxbcdt: Array, d_inner: int, state: int, n_heads: int):
+    z = zxbcdt[..., :d_inner]
+    x = zxbcdt[..., d_inner:2 * d_inner]
+    bm = zxbcdt[..., 2 * d_inner:2 * d_inner + state]
+    cm = zxbcdt[..., 2 * d_inner + state:2 * d_inner + 2 * state]
+    dt = zxbcdt[..., 2 * d_inner + 2 * state:]
+    return z, x, bm, cm, dt
+
+
+def _causal_conv(u: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv: u (B, S, C), w (K, C) -> (B, S, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(k):           # K static (4): unrolled shifted adds
+        out = out + pad[:, i:i + u.shape[1], :] * w[i]
+    return out + b
+
+
+def _segsum(x: Array) -> Array:
+    """x (..., Q) -> (..., Q, Q): sum_{k=j+1..i} x[k] for i >= j, -inf else."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    i = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    return jnp.where(i >= j, seg, -jnp.inf)
+
+
+def ssd_chunked(x: Array, dt: Array, a: Array, bm: Array, cm: Array,
+                chunk: int) -> Array:
+    """SSD scan. x (B,S,H,P), dt (B,S,H) >0, a (H,) <0, bm/cm (B,S,N).
+
+    Returns y (B,S,H,P). fp32 internally.
+    """
+    b, s, h, p = x.shape
+    n = bm.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        # dt = 0 rows are exact no-ops (decay exp(0)=1, zero state injection)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0)))
+        out = ssd_chunked(x, dt, a, bm, cm, chunk)
+        return out[:, :s]
+    nc = s // q
+
+    xf = (x * dt[..., None]).astype(jnp.float32).reshape(b, nc, q, h, p)
+    da = (dt * a).astype(jnp.float32).reshape(b, nc, q, h)
+    da = jnp.moveaxis(da, -1, 1)                   # (b, h, nc, q)
+    bmf = bm.astype(jnp.float32).reshape(b, nc, q, n)
+    cmf = cm.astype(jnp.float32).reshape(b, nc, q, n)
+
+    da_cs = jnp.cumsum(da, axis=-1)                # (b, h, nc, q)
+
+    # 1) intra-chunk (the "attention-like" quadratic part, staged per chunk)
+    ell = jnp.exp(_segsum(da))                     # (b, h, nc, q, q)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp",
+                        cmf, bmf, ell, xf)
+
+    # 2) per-chunk terminal states
+    decay_states = jnp.exp(da_cs[..., -1:] - da_cs)        # (b, h, nc, q)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", bmf, decay_states, xf)
+
+    # 3) inter-chunk recurrence (linear scan over chunk boundaries)
+    def chunk_step(carry, inp):
+        st, decay = inp                            # (b,h,p,n), (b,h)
+        new = carry * jnp.exp(decay)[..., None, None] + st
+        return new, carry                          # emit the *previous* state
+
+    chunk_decay = da_cs[..., -1]                   # (b, h, nc)
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        chunk_step, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, -1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b, nc, h, p, n)
+
+    # 4) contribution of carried state to each position
+    state_decay = jnp.exp(da_cs)                   # (b, h, nc, q)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp",
+                       cmf, prev_states, state_decay)
+
+    return (y_diag + y_off).reshape(b, s, h, p)
+
+
+def mamba2_block(x: Array, p: Dict[str, Array], *, d_inner: int, state: int,
+                 n_heads: int, headdim: int, chunk: int) -> Array:
+    """Full Mamba-2 mixer (train/prefill path). x (B, S, d) -> (B, S, d)."""
+    z, xs, bm, cm, dt = _split_proj(x @ p["in_proj"], d_inner, state, n_heads)
+    conv_in = jnp.concatenate([xs, bm, cm], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xs = conv_out[..., :d_inner]
+    bm = conv_out[..., d_inner:d_inner + state]
+    cm = conv_out[..., d_inner + state:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    xh = xs.reshape(*xs.shape[:-1], n_heads, headdim)
+    y = ssd_chunked(xh, dt, a, bm, cm, chunk)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][:, None]
+    y = y.reshape(*xs.shape).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    return y @ p["out_proj"]
+
+
+def mamba2_decode(x: Array, p: Dict[str, Array], cache: Dict[str, Array], *,
+                  d_inner: int, state: int, n_heads: int, headdim: int
+                  ) -> Tuple[Array, Dict[str, Array]]:
+    """Single-token step. x (B, 1, d); cache = {"conv": (B, K-1, C),
+    "ssm": (B, H, P, N)}. Returns (y (B, 1, d), new cache)."""
+    z, xs, bm, cm, dt = _split_proj(x @ p["in_proj"], d_inner, state, n_heads)
+    conv_in = jnp.concatenate([xs, bm, cm], axis=-1)       # (B, 1, C)
+    k = p["conv_w"].shape[0]
+    window = jnp.concatenate([cache["conv"], conv_in], axis=1)  # (B, K, C)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    )[:, None, :]
+    new_conv = window[:, 1:]
+
+    xs = conv_out[..., :d_inner]
+    bm = conv_out[..., d_inner:d_inner + state]
+    cm = conv_out[..., d_inner + state:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    xh = xs.reshape(-1, n_heads, headdim).astype(jnp.float32)          # (B,H,P)
+    decay = jnp.exp(dt * a)                                            # (B,H)
+    bmf = bm[:, 0].astype(jnp.float32)                                 # (B,N)
+    cmf = cm[:, 0].astype(jnp.float32)
+    dx = xh * dt[..., None]                                            # (B,H,P)
+    h_new = (cache["ssm"] * decay[..., None, None]
+             + jnp.einsum("bhp,bn->bhpn", dx, bmf))
+    y = jnp.einsum("bhpn,bn->bhp", h_new, cmf) + xh * p["d_skip"][:, None]
+    y = y.reshape(-1, 1, d_inner).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    return y @ p["out_proj"], {"conv": new_conv, "ssm": h_new}
+
+
+def init_mamba_cache(batch: int, d_inner: int, state: int, n_heads: int,
+                     headdim: int, conv: int, dtype) -> Dict[str, Array]:
+    return {
+        "conv": jnp.zeros((batch, conv - 1, d_inner + 2 * state), dtype),
+        "ssm": jnp.zeros((batch, n_heads, headdim, state), jnp.float32),
+    }

@@ -1,0 +1,95 @@
+"""AdamW in pure JAX (no optax in this environment).
+
+Moments live in a pytree mirroring params; ``moment_dtype`` is a config knob
+(fp32 default; the 314B/480B configs use bf16 moments so params+moments+grads
+fit v5e HBM — recorded in DESIGN.md). The update math always runs in fp32.
+Optimizer state is sharded exactly like the params (dist.sharding), i.e.
+ZeRO-style: no replica holds a full moment tensor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+    schedule: str = "cosine"         # cosine | constant
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def init_opt_state(params: PyTree, cfg: AdamConfig) -> PyTree:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def lr_at(cfg: AdamConfig, step: Array) -> Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / max(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    frac = jnp.clip((s - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree: PyTree) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def adam_update(params: PyTree, grads: PyTree, state: PyTree,
+                cfg: AdamConfig) -> Tuple[PyTree, PyTree]:
+    """-> (new_params, new_state). Everything fp32 internally."""
+    step = state["step"] + 1
+    if cfg.grad_clip > 0:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = m.astype(jnp.float32) * b1 + gf * (1.0 - b1)
+        vf = v.astype(jnp.float32) * b2 + gf * gf * (1.0 - b2)
+        update = (mf / c1) / (jnp.sqrt(vf / c2) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        if cfg.weight_decay > 0 and p.ndim >= 2:   # no decay on norms/scalars
+            update = update + cfg.weight_decay * pf
+        return ((pf - lr * update).astype(p.dtype),
+                mf.astype(mdt), vf.astype(mdt))
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}

@@ -1,0 +1,31 @@
+"""Scalar observables for MD/SPH runs (conservation checks in tests)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def kinetic_energy(velocities: Array, mass: float = 1.0) -> Array:
+    return 0.5 * mass * jnp.sum(velocities ** 2)
+
+
+def potential_energy(per_particle_potential: Array) -> Array:
+    """Pairs are counted twice across particles (paper's convention)."""
+    return 0.5 * jnp.sum(per_particle_potential)
+
+
+def total_energy(velocities: Array, per_particle_potential: Array,
+                 mass: float = 1.0) -> Array:
+    return kinetic_energy(velocities, mass) + potential_energy(
+        per_particle_potential)
+
+
+def total_momentum(velocities: Array, mass: float = 1.0) -> Array:
+    return mass * jnp.sum(velocities, axis=0)
+
+
+def temperature(velocities: Array, mass: float = 1.0) -> Array:
+    n = velocities.shape[0]
+    return 2.0 * kinetic_energy(velocities, mass) / (3.0 * n)

@@ -1,0 +1,168 @@
+"""Train-step / serve-step factories (what the dry-run lowers).
+
+``make_train_step`` returns the canonical SPMD step:
+
+    loss -> grad -> (optional int8 compression) -> AdamW -> new state
+
+with: masked next-token CE in fp32 with z-loss, MoE aux loss, remat inside
+the layer scan (model.py), microbatch gradient accumulation (scan over
+microbatches, grads averaged — the FSDP all-gathers then amortize across
+microbatches), and buffer donation so params/opt-state update in place.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import model as M
+from ..optim.adam import AdamConfig, adam_update
+from ..dist.compress import compress_grads_int8, decompress_grads_int8
+from ..dist.sharding import constrain
+
+Array = jnp.ndarray
+PyTree = Any
+
+
+def cross_entropy(logits: Array, labels: Array, mask: Optional[Array] = None,
+                  z_loss: float = 1e-4) -> Array:
+    """Masked token-mean CE (+ z-loss) in fp32; handles padded/image slots
+    via label == -1 masking and logits that are longer than labels (vlm
+    prefix tokens score nothing).
+
+    Vocab-sharding-friendly: the gold logit is extracted with an iota
+    comparison + reduction instead of take_along_axis — a gather along a TP-
+    sharded vocab axis makes GSPMD all-gather the full fp32 logits (measured
+    +80 GB/device on qwen1.5-0.5b train_4k; EXPERIMENTS.md §Perf)."""
+    if logits.shape[1] != labels.shape[1]:
+        logits = logits[:, logits.shape[1] - labels.shape[1]:]
+    lf = constrain(logits.astype(jnp.float32), "dp", None, "tp")
+    # stable logsumexp with sharded-vocab reductions (max/sum partial-reduce
+    # then all-reduce — no vocab gather)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == labels[..., None].clip(0), lf,
+                             0.0), axis=-1)
+    nll = lse - gold + z_loss * lse ** 2
+    valid = (labels >= 0).astype(jnp.float32)
+    if mask is not None:
+        valid = valid * mask
+    return jnp.sum(nll * valid) / jnp.maximum(valid.sum(), 1.0)
+
+
+def chunked_cross_entropy(logits_fn: Callable, x: Array, labels: Array,
+                          head: Array, n_chunks: int = 8,
+                          z_loss: float = 1e-4) -> Array:
+    """CE with the (B, S_chunk, V) logits materialized one sequence chunk at
+    a time (scan) — the full (B, S, V) fp32 logits buffer never exists.
+    ``logits_fn(x_chunk @ head)`` applies softcap etc."""
+    b, s, d = x.shape
+    n_chunks = min(n_chunks, s)
+    while s % n_chunks:
+        n_chunks -= 1
+    cs = s // n_chunks
+    xc = x.reshape(b, n_chunks, cs, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n_chunks, cs).transpose(1, 0, 2)
+
+    head = constrain(head, None, "tp")     # JIT weight-gather (ZeRO-3)
+
+    def step(acc, inp):
+        xch, lch = inp
+        logits = logits_fn(jnp.einsum("bsd,dv->bsv", xch, head))
+        lf = constrain(logits.astype(jnp.float32), "dp", None, "tp")
+        m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+        lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+        iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+        gold = jnp.sum(jnp.where(iota == lch[..., None].clip(0), lf, 0.0),
+                       axis=-1)
+        nll = lse - gold + z_loss * lse ** 2
+        valid = (lch >= 0).astype(jnp.float32)
+        return (acc[0] + jnp.sum(nll * valid), acc[1] + valid.sum()), None
+
+    import os as _os
+    unroll = _os.environ.get("REPRO_SCAN_UNROLL", "1")
+    (total, count), _ = jax.lax.scan(
+        step, (0.0, 0.0), (xc, lc),
+        unroll=True if unroll == "full" else int(unroll))
+    return total / jnp.maximum(count, 1.0)
+
+
+def make_loss_fn(cfg: ModelConfig, aux_weight: float = 1e-2,
+                 loss_chunks: int = 0, remat: bool = True) -> Callable:
+    import os as _os
+    loss_chunks = loss_chunks or int(_os.environ.get("REPRO_LOSS_CHUNKS", 8))
+    def loss_fn(params: PyTree, batch: Dict[str, Array]) -> Tuple[Array, Dict]:
+        extras = {k: v for k, v in batch.items()
+                  if k not in ("tokens", "labels")}
+        x, aux = M.forward_hidden(cfg, params, batch["tokens"], remat=remat,
+                                  **extras)
+        labels = batch["labels"]
+        if x.shape[1] != labels.shape[1]:       # vlm prefix tokens: no loss
+            x = x[:, x.shape[1] - labels.shape[1]:]
+        ce = chunked_cross_entropy(M.logits_transform(cfg), x, labels,
+                                   M.lm_head(cfg, params),
+                                   n_chunks=loss_chunks)
+        return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamConfig,
+                    microbatches: int = 1,
+                    compress_pod_grads: bool = False,
+                    remat: bool = True) -> Callable:
+    """-> train_step(params, opt_state, batch) -> (metrics, params, opt)."""
+    loss_fn = make_loss_fn(cfg, remat=remat)
+
+    def grads_of(params, batch):
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return loss, parts, grads
+
+    def train_step(params: PyTree, opt_state: PyTree,
+                   batch: Dict[str, Array]):
+        if microbatches > 1:
+            def mb(carry, mb_batch):
+                acc, loss_acc = carry
+                loss, _, grads = grads_of(params, mb_batch)
+                acc = jax.tree.map(jnp.add, acc, grads)
+                return (acc, loss_acc + loss), None
+
+            split = jax.tree.map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                    *x.shape[1:]), batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (grads, loss), _ = jax.lax.scan(mb, (zeros, 0.0), split)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            parts = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+        else:
+            loss, parts, grads = grads_of(params, batch)
+
+        if compress_pod_grads:
+            # int8 + error feedback over the slow inter-pod links; XLA's
+            # all-reduce of the *decompressed* values stays on fast links
+            # because the pod axis reduction happens on the int8 tensors.
+            packed, scales = compress_grads_int8(grads)
+            grads = decompress_grads_int8(packed, scales)
+
+        new_params, new_opt = adam_update(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, **parts}
+        return metrics, new_params, new_opt
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    loss_fn = make_loss_fn(cfg)
+
+    def eval_step(params, batch):
+        loss, parts = loss_fn(params, batch)
+        return {"loss": loss, **parts}
+
+    return eval_step

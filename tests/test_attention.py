@@ -1,0 +1,111 @@
+"""Flash / window / decode attention: values + gradients vs dense reference."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (decode_attention, flash_attention,
+                                    window_attention_blocked)
+
+
+def dense_ref(q, k, v, causal=True, softcap=0.0, window=0):
+    b, h, s, d = q.shape
+    kh = k.shape[1]
+    g = h // kh
+    kf = jnp.repeat(k, g, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, g, axis=1).astype(jnp.float32)
+    sc = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf) / d ** 0.5
+    if softcap > 0:
+        sc = softcap * jnp.tanh(sc / softcap)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    m = jnp.ones((s, s), bool)
+    if causal:
+        m = m & (kp <= qp)
+    if window > 0:
+        m = m & (qp - kp < window)
+    sc = jnp.where(m, sc, -1e30)
+    return jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(sc, -1),
+                      vf).astype(q.dtype)
+
+
+@pytest.mark.parametrize("h,kh", [(8, 8), (8, 2), (4, 1)])
+@pytest.mark.parametrize("qc,kc", [(64, 64), (32, 128), (128, 32)])
+def test_flash_values(h, kh, qc, kc):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, h, 256, 32), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, kh, 256, 32))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, kh, 256, 32))
+    o = flash_attention(q, k, v, True, 0.0, qc, kc)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(dense_ref(q, k, v)),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("softcap", [0.0, 15.0])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_grads(softcap, causal):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 4, 128, 16), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 128, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 128, 16))
+    f = lambda *a: (flash_attention(*a, causal, softcap, 32, 32) ** 2).sum()
+    fr = lambda *a: (dense_ref(*a, causal, softcap) ** 2).sum()
+    g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(fr, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("window", [8, 32, 64])
+def test_window_blocked_values_and_grads(window):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, 4, 128, 16), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 2, 128, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 2, 128, 16))
+    o = window_attention_blocked(q, k, v, window=window)
+    np.testing.assert_allclose(
+        np.asarray(o), np.asarray(dense_ref(q, k, v, window=window)),
+        rtol=2e-4, atol=2e-4)
+    g = jax.grad(lambda q: (window_attention_blocked(
+        q, k, v, window=window) ** 2).sum())(q)
+    gr = jax.grad(lambda q: (dense_ref(q, k, v, window=window) ** 2).sum())(q)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_decode_window_flag():
+    """window_flag False must reproduce full-cache attention."""
+    key = jax.random.PRNGKey(0)
+    B, KH, S, D = 2, 2, 64, 16
+    q = jax.random.normal(key, (B, 4, 1, D), jnp.float32)
+    kc = jax.random.normal(jax.random.PRNGKey(1), (B, KH, S, D))
+    vc = jax.random.normal(jax.random.PRNGKey(2), (B, KH, S, D))
+    idx = jnp.int32(40)
+    full = decode_attention(q, kc, vc, idx)
+    flag_off = decode_attention(q, kc, vc, idx, window=16,
+                                window_flag=jnp.bool_(False))
+    np.testing.assert_allclose(np.asarray(flag_off), np.asarray(full),
+                               rtol=1e-6)
+    flag_on = decode_attention(q, kc, vc, idx, window=16,
+                               window_flag=jnp.bool_(True))
+    hard = decode_attention(q, kc, vc, idx, window=16)
+    np.testing.assert_allclose(np.asarray(flag_on), np.asarray(hard),
+                               rtol=1e-6)
+    assert not np.allclose(np.asarray(flag_on), np.asarray(full))
+
+
+def test_bf16_inputs_fp32_accumulation():
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 4, 128, 16)).astype(jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 128, 16)
+                          ).astype(jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 4, 128, 16)
+                          ).astype(jnp.bfloat16)
+    o = flash_attention(q, k, v, True, 0.0, 32, 32)
+    o_ref = dense_ref(q, k, v)
+    assert o.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=2e-2, atol=2e-2)

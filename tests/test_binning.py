@@ -1,0 +1,110 @@
+"""Binning pipeline invariants (paper §2 preprocessing)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Domain, bin_particles, gather_to_particles, suggest_m_c
+from repro.core.binning import EMPTY_POS, interior
+
+
+def _random_case(seed, division, n):
+    dom = Domain.cubic(division, cutoff=1.0)
+    pos = dom.sample_uniform(jax.random.PRNGKey(seed), n)
+    return dom, pos
+
+
+@given(st.integers(0, 10_000), st.sampled_from([2, 3, 4, 6]),
+       st.integers(1, 400))
+@settings(max_examples=25, deadline=None)
+def test_every_particle_lands_in_its_cell(seed, division, n):
+    dom, pos = _random_case(seed, division, n)
+    m_c = suggest_m_c(dom, pos)
+    bins = bin_particles(dom, pos, m_c=m_c)
+
+    # counts sum to N, offsets are the exclusive scan of counts
+    counts = np.asarray(bins.counts)
+    assert counts.sum() == n
+    np.testing.assert_array_equal(
+        np.asarray(bins.offsets), np.concatenate([[0], np.cumsum(counts)[:-1]]))
+
+    # the slot of each particle holds its coordinates, in its own cell
+    sid = np.asarray(bins.slot_id).reshape(-1)
+    xs = np.asarray(bins.planes["x"]).reshape(-1)
+    pslot = np.asarray(bins.particle_slot)
+    pnp = np.asarray(pos)
+    cells = np.asarray(dom.cell_coords(pos))
+    nx, ny, nz = dom.ncells
+    row = (nx + 2) * m_c
+    for i in range(n):
+        s = pslot[i]
+        assert sid[s] == i
+        assert xs[s] == pytest.approx(pnp[i, 0], rel=1e-6)
+        z = s // ((ny + 2) * row)
+        y = (s // row) % (ny + 2)
+        x = (s % row) // m_c
+        assert (x - 1, y - 1, z - 1) == tuple(cells[i])
+
+    # every filled slot belongs to exactly one particle (bijection)
+    filled = sid[sid >= 0]
+    assert len(filled) == n and len(set(filled.tolist())) == n
+
+
+def test_gather_inverts_scatter():
+    dom, pos = _random_case(7, 4, 300)
+    m_c = suggest_m_c(dom, pos)
+    bins = bin_particles(dom, pos, m_c=m_c)
+    for k, col in (("x", 0), ("y", 1), ("z", 2)):
+        back = gather_to_particles(bins, bins.planes[k])
+        np.testing.assert_allclose(np.asarray(back), np.asarray(pos[:, col]),
+                                   rtol=1e-6)
+
+
+def test_overflow_drops_not_corrupts():
+    """m_c smaller than a cell's population: extras are dropped cleanly."""
+    dom = Domain.cubic(2, cutoff=1.0)
+    pos = jnp.asarray(np.full((40, 3), 0.5, np.float32))  # all in one cell
+    bins = bin_particles(dom, pos, m_c=8)
+    sid = np.asarray(bins.slot_id)
+    assert (sid >= 0).sum() == 8            # capacity respected
+    assert int(bins.max_count) == 40        # caller can detect overflow
+
+
+def test_ghost_ring_empty_when_open():
+    dom, pos = _random_case(3, 4, 200)
+    m_c = suggest_m_c(dom, pos)
+    bins = bin_particles(dom, pos, m_c=m_c)
+    sid = np.asarray(bins.slot_id)
+    nx, ny, nz = dom.ncells
+    assert (sid[0] == -1).all() and (sid[-1] == -1).all()
+    assert (sid[:, 0] == -1).all() and (sid[:, ny + 1] == -1).all()
+    assert (sid[:, :, :m_c] == -1).all()
+    assert (sid[:, :, (nx + 1) * m_c:] == -1).all()
+    x = np.asarray(bins.planes["x"])
+    assert (x[0] == EMPTY_POS).all()
+
+
+def test_periodic_ghosts_are_shifted_images():
+    dom = Domain.cubic(4, cutoff=1.0, periodic=True)
+    pos = dom.sample_uniform(jax.random.PRNGKey(5), 300)
+    m_c = suggest_m_c(dom, pos)
+    bins = bin_particles(dom, pos, m_c=m_c)
+    x = np.asarray(bins.planes["x"])
+    m = x[:, :, :m_c] < 1e7                 # filled left ghosts
+    # left ghost = rightmost interior cell shifted by -Lx
+    src = x[:, :, 4 * m_c:5 * m_c]
+    np.testing.assert_allclose(x[:, :, :m_c][m], (src - dom.box[0])[m],
+                               rtol=1e-6)
+    sid = np.asarray(bins.slot_id)
+    ghost_ids = sid[:, :, :m_c][sid[:, :, :m_c] >= 0]
+    assert (ghost_ids >= 1_000_000_000).all()   # image ids offset
+
+
+def test_interior_view_shape():
+    dom, pos = _random_case(1, 3, 100)
+    m_c = suggest_m_c(dom, pos)
+    bins = bin_particles(dom, pos, m_c=m_c)
+    v = interior(dom, bins.planes["x"], m_c)
+    assert v.shape == (3, 3, 3, m_c)

@@ -1,0 +1,79 @@
+"""Lock the assigned architecture configs to their exact assignment values."""
+
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+
+# (arch, layers, d_model, heads, kv, d_ff, vocab) straight from the
+# assignment block — a failing row means someone edited a config.
+ASSIGNED = {
+    "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+    "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+    "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    "mamba2-130m": (24, 768, None, None, 0, 50280),
+    "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+    "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+    "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+    "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+    "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+    "whisper-base": (6, 512, 8, 8, 2048, 51865),
+}
+
+EXTRAS = {
+    "grok-1-314b": dict(n_experts=8, top_k=2),
+    "arctic-480b": dict(n_experts=128, top_k=2, moe_dense_residual=True),
+    "zamba2-1.2b": dict(ssm_state=64, family="hybrid"),
+    "mamba2-130m": dict(ssm_state=128, family="ssm"),
+    "qwen1.5-0.5b": dict(qkv_bias=True),
+    "codeqwen1.5-7b": dict(qkv_bias=True),
+    "gemma2-2b": dict(local_global=True, logit_softcap=30.0),
+    "whisper-base": dict(n_enc_layers=6),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_assigned_values(arch):
+    cfg = get_config(arch)
+    l, d, h, kv, ff, v = ASSIGNED[arch]
+    assert cfg.n_layers == l
+    assert cfg.d_model == d
+    if h is not None:
+        assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff and cfg.vocab_size == v
+    for k, want in EXTRAS.get(arch, {}).items():
+        assert getattr(cfg, k) == want, (arch, k)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_is_reduced_same_family(arch):
+    full, smoke = get_config(arch), get_smoke_config(arch)
+    assert smoke.family == full.family
+    assert smoke.n_layers < full.n_layers
+    assert smoke.d_model < full.d_model
+    assert smoke.vocab_size < full.vocab_size
+    if full.n_experts:
+        assert 0 < smoke.n_experts < full.n_experts
+
+
+def test_param_counts_are_assigned_scale():
+    """Names carry the scale — check the configs actually hit it."""
+    sizes = {"grok-1-314b": (280e9, 350e9), "arctic-480b": (420e9, 520e9),
+             "zamba2-1.2b": (0.9e9, 1.6e9), "mamba2-130m": (0.1e9, 0.17e9),
+             # the assigned d_ff=13440 (vs the checkpoint's 11008) puts
+             # codeqwen above its nameplate — assignment values win
+             "codeqwen1.5-7b": (6e9, 8.5e9), "starcoder2-3b": (2.5e9, 3.6e9),
+             "qwen1.5-0.5b": (0.4e9, 0.7e9), "gemma2-2b": (2e9, 3.3e9),
+             "phi-3-vision-4.2b": (3.3e9, 4.6e9),
+             "whisper-base": (0.05e9, 0.12e9)}
+    for arch, (lo, hi) in sizes.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, f"{n / 1e9:.2f}B not in "
+                               f"[{lo / 1e9}B, {hi / 1e9}B]")
+
+
+def test_long500k_eligibility():
+    from repro.configs import cell_is_runnable, shape_by_name
+    long = shape_by_name("long_500k")
+    eligible = {a for a in ARCH_IDS
+                if cell_is_runnable(get_config(a), long)[0]}
+    assert eligible == {"mamba2-130m", "zamba2-1.2b"}

@@ -1,0 +1,116 @@
+"""Pallas kernels vs ref.py oracles — shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CellListEngine, Domain, bin_particles,
+                        make_lennard_jones, make_low_flop, suggest_m_c)
+from repro.kernels import (allin_interactions, window_attention,
+                           xpencil_interactions)
+from repro.kernels import ref as KR
+
+
+def _bins(division, n, seed=0, periodic=False, kernel=None):
+    dom = Domain.cubic(division, cutoff=1.0, periodic=periodic)
+    pos = dom.sample_uniform(jax.random.PRNGKey(seed), n)
+    m_c = suggest_m_c(dom, pos)
+    bins = bin_particles(dom, pos, m_c=m_c)
+    kern = kernel or make_lennard_jones()
+    f_ref, p_ref = CellListEngine(dom, kern, m_c=m_c,
+                                  strategy="naive_n2").compute(pos)
+    return dom, pos, bins, kern, f_ref, p_ref
+
+
+@pytest.mark.parametrize("division,n", [(2, 60), (3, 200), (4, 500),
+                                        (5, 700)])
+def test_xpencil_kernel_sweep(division, n):
+    dom, pos, bins, kern, f_ref, p_ref = _bins(division, n)
+    f, p = xpencil_interactions(dom, bins, kern, interpret=True)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(f_ref),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(p_ref),
+                               rtol=3e-4, atol=3e-5)
+
+
+def test_xpencil_kernel_periodic():
+    dom, pos, bins, kern, f_ref, p_ref = _bins(4, 300, seed=3, periodic=True)
+    f, p = xpencil_interactions(dom, bins, kern, interpret=True)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(f_ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_xpencil_kernel_low_flop():
+    dom, pos, bins, kern, f_ref, p_ref = _bins(3, 150, kernel=make_low_flop())
+    f, p = xpencil_interactions(dom, bins, kern, interpret=True)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(f_ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("division,n,box", [(4, 400, (2, 2, 2)),
+                                            (4, 300, (4, 2, 1)),
+                                            (6, 800, (3, 3, 2))])
+def test_allin_kernel_sweep(division, n, box):
+    dom, pos, bins, kern, f_ref, p_ref = _bins(division, n)
+    f, p = allin_interactions(dom, bins, kern, box, interpret=True)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(f_ref),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(p_ref),
+                               rtol=3e-4, atol=3e-5)
+
+
+def test_kernel_matches_jnp_strategy_planes():
+    """Pallas xpencil output == the jnp xpencil schedule, slot for slot."""
+    dom, pos, bins, kern, _, _ = _bins(4, 500, seed=8)
+    ref_planes = KR.xpencil_ref(dom, bins, kern)
+    from repro.kernels.xpencil import xpencil_forces
+    got = xpencil_forces(bins.planes, bins.slot_id, nx=dom.nx, m_c=bins.m_c,
+                         kernel=kern, cutoff2=1.0, interpret=True)
+    for g, r in zip(got, ref_planes):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# window attention kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("h,kh", [(4, 4), (8, 2), (6, 1)])
+@pytest.mark.parametrize("window,blk", [(16, 8), (32, 16), (64, 8)])
+def test_window_attention_sweep(h, kh, window, blk):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, h, 64, 16), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, kh, 64, 16), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, kh, 64, 16), jnp.float32)
+    o = window_attention(q, k, v, window=window, blk=blk, interpret=True)
+    o_ref = KR.window_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_window_attention_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 4, 32, 8)).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 32, 8)).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 32, 8)).astype(dtype)
+    o = window_attention(q, k, v, window=8, blk=8, interpret=True)
+    o_ref = KR.window_attention_ref(q, k, v, window=8)
+    tol = 3e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=tol, atol=tol)
+    assert o.dtype == dtype
+
+
+def test_window_attention_softcap():
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 4, 32, 8), jnp.float32) * 3
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 32, 8), jnp.float32) * 3
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 4, 32, 8), jnp.float32)
+    o = window_attention(q, k, v, window=16, blk=8, softcap=20.0,
+                         interpret=True)
+    o_ref = KR.window_attention_ref(q, k, v, window=16, softcap=20.0)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=3e-4, atol=3e-4)

@@ -1,0 +1,61 @@
+"""Paper §6 prefix sum: correctness, complexity claims, Pallas kernel."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blelloch_counts, operation_counts, paper_prefix_sum
+from repro.core.prefix import exclusive_prefix_sum, paper_height
+from repro.kernels import prefix_sum as pallas_prefix_sum
+
+
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=600))
+@settings(max_examples=60, deadline=None)
+def test_paper_scan_matches_cumsum(xs):
+    x = jnp.asarray(np.asarray(xs, np.int64))
+    np.testing.assert_array_equal(np.asarray(paper_prefix_sum(x)),
+                                  np.cumsum(xs))
+
+
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=300))
+@settings(max_examples=30, deadline=None)
+def test_exclusive_scan(xs):
+    x = jnp.asarray(np.asarray(xs, np.int64))
+    got = np.asarray(exclusive_prefix_sum(x))
+    want = np.concatenate([[0], np.cumsum(xs)[:-1]])
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("n", [8, 16, 32, 64, 128, 256, 1024])
+def test_paper_complexity_claims_at_powers_of_two(n):
+    """Paper: N-1 upward updates, N-h downward, 2h-3 barriers (< Blelloch)."""
+    up, down, barriers = operation_counts(n)
+    h = paper_height(n)
+    assert up == n - 1
+    assert down == n - h
+    assert barriers == 2 * h - 3
+    _, _, blelloch_barriers = blelloch_counts(n)
+    assert barriers < blelloch_barriers
+
+
+@pytest.mark.parametrize("n", [3, 5, 13, 100, 255, 1000])
+def test_general_lengths(n):
+    x = jnp.asarray(np.random.randint(0, 50, n), jnp.int32)
+    np.testing.assert_array_equal(np.asarray(paper_prefix_sum(x)),
+                                  np.cumsum(np.asarray(x)))
+
+
+@pytest.mark.parametrize("n", [1, 2, 4, 8, 37, 128, 255, 1024])
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.float32])
+def test_pallas_prefix_kernel(n, dtype):
+    x = jnp.asarray(np.random.randint(0, 9, n)).astype(dtype)
+    got = np.asarray(pallas_prefix_sum(x, interpret=True))
+    want = np.cumsum(np.asarray(x)).astype(np.asarray(x).dtype)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_batched_leading_dims():
+    x = jnp.asarray(np.random.randint(0, 9, (4, 33)), jnp.int32)
+    got = np.asarray(paper_prefix_sum(x))
+    np.testing.assert_array_equal(got, np.cumsum(np.asarray(x), axis=-1))

@@ -1,0 +1,112 @@
+"""All scheduling strategies against the naive oracle + physics properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CellListEngine, Domain, make_gravity,
+                        make_high_flop, make_lennard_jones, make_low_flop,
+                        suggest_m_c)
+
+ALL = ["par_part", "cell_dense", "xpencil", "allin"]
+
+
+def _case(division, n, seed=0, periodic=False):
+    dom = Domain.cubic(division, cutoff=1.0, periodic=periodic)
+    pos = dom.sample_uniform(jax.random.PRNGKey(seed), n)
+    return dom, pos, suggest_m_c(dom, pos)
+
+
+@pytest.mark.parametrize("strategy", ALL)
+@pytest.mark.parametrize("division,n", [(2, 40), (3, 150), (4, 500), (6, 900)])
+def test_matches_naive(strategy, division, n):
+    dom, pos, m_c = _case(division, n)
+    f_ref, p_ref = CellListEngine(dom, m_c=m_c,
+                                  strategy="naive_n2").compute(pos)
+    f, p = CellListEngine(dom, m_c=m_c, strategy=strategy).compute(pos)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(f_ref),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(p_ref),
+                               rtol=3e-4, atol=3e-5)
+
+
+@pytest.mark.parametrize("strategy", ALL)
+def test_matches_naive_periodic(strategy):
+    dom, pos, m_c = _case(4, 400, seed=2, periodic=True)
+    f_ref, p_ref = CellListEngine(dom, m_c=m_c,
+                                  strategy="naive_n2").compute(pos)
+    f, p = CellListEngine(dom, m_c=m_c, strategy=strategy).compute(pos)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(f_ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("make", [make_low_flop, make_gravity,
+                                  make_high_flop])
+def test_other_kernels(make):
+    dom, pos, m_c = _case(3, 200, seed=4)
+    kern = make()
+    f_ref, p_ref = CellListEngine(dom, kern, m_c=m_c,
+                                  strategy="naive_n2").compute(pos)
+    f, p = CellListEngine(dom, kern, m_c=m_c,
+                          strategy="xpencil").compute(pos)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(f_ref),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(p_ref),
+                               rtol=3e-4, atol=3e-5)
+
+
+@given(seed=st.integers(0, 10_000), division=st.sampled_from([2, 3, 4]),
+       n=st.integers(2, 300))
+@settings(max_examples=15, deadline=None)
+def test_newtons_third_law(seed, division, n):
+    """Central pair forces: total internal force is 0 (open boundaries)."""
+    dom, pos, m_c = _case(division, n, seed)
+    f, _ = CellListEngine(dom, m_c=m_c, strategy="xpencil").compute(pos)
+    total = np.asarray(jnp.sum(f, axis=0))
+    scale = float(jnp.max(jnp.abs(f))) + 1e-9
+    np.testing.assert_allclose(total / scale, np.zeros(3), atol=5e-4)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_potential_pair_symmetry(seed):
+    """Per-particle potential sums each pair twice: total = 2 * pair sum."""
+    dom, pos, m_c = _case(2, 30, seed)
+    _, pot = CellListEngine(dom, m_c=m_c, strategy="cell_dense").compute(pos)
+    kern = make_lennard_jones()
+    pnp = np.asarray(pos)
+    total = 0.0
+    for i in range(len(pnp)):
+        for j in range(i + 1, len(pnp)):
+            r2 = float(((pnp[i] - pnp[j]) ** 2).sum())
+            if r2 < 1.0:
+                total += float(kern.potential(jnp.float32(r2)))
+    np.testing.assert_allclose(float(jnp.sum(pot)), 2 * total,
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_permutation_invariance():
+    """Shuffling particle order must not change each particle's force."""
+    dom, pos, m_c = _case(3, 120, seed=9)
+    eng = CellListEngine(dom, m_c=m_c, strategy="xpencil")
+    f1, _ = eng.compute(pos)
+    perm = jax.random.permutation(jax.random.PRNGKey(1), pos.shape[0])
+    f2, _ = eng.compute(pos[perm])
+    np.testing.assert_allclose(np.asarray(f2), np.asarray(f1)[np.asarray(perm)],
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_subbox_dims_respects_budget():
+    from repro.core.strategies import subbox_dims
+    dom = Domain.cubic(8, cutoff=1.0)
+    bx, by, bz = subbox_dims(dom, m_c=16, vmem_budget_bytes=64 * 1024)
+    halo = (bx + 2) * (by + 2) * (bz + 2)
+    assert halo * 16 * 16 <= 64 * 1024 or (bx, by, bz) == (1, 1, 1)
+
+
+def test_engine_rejects_unknown_strategy():
+    dom = Domain.cubic(2)
+    with pytest.raises(ValueError):
+        CellListEngine(dom, strategy="nope")
