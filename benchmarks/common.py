@@ -16,8 +16,8 @@ from typing import Callable, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import (CellListEngine, Domain, make_lennard_jones,
-                        suggest_m_c)
+from repro.core import (CellListEngine, Domain, ParticleState,
+                        make_lennard_jones, plan, suggest_m_c)
 
 
 def time_fn(fn: Callable, *args, reps: int | None = None,
@@ -42,7 +42,7 @@ def paper_case(division: int, ppc: int, seed: int = 0,
                strategy: str = "xpencil", kernel=None,
                batch_size: int = 64):
     """One paper benchmark case: division^3 cells, ppc particles/cell avg,
-    uniform positions (paper §7.1)."""
+    uniform positions (paper §7.1). Engine-shim flavour (legacy call sites)."""
     dom = Domain.cubic(division, cutoff=1.0)
     n = division ** 3 * ppc
     pos = dom.sample_uniform(jax.random.PRNGKey(seed), n)
@@ -50,6 +50,20 @@ def paper_case(division: int, ppc: int, seed: int = 0,
     eng = CellListEngine(dom, kernel or make_lennard_jones(), m_c=m_c,
                          strategy=strategy, batch_size=batch_size)
     return dom, pos, eng
+
+
+def paper_plan(division: int, ppc: int, seed: int = 0,
+               strategy: str = "xpencil", kernel=None,
+               batch_size: int = 64, backend: str = "reference"):
+    """Plan/execute flavour of ``paper_case``: returns
+    ``(dom, state, plan, execute)`` where ``execute(state)`` is the timed
+    hot path (static planning excluded, as the paper excludes setup)."""
+    dom = Domain.cubic(division, cutoff=1.0)
+    n = division ** 3 * ppc
+    pos = dom.sample_uniform(jax.random.PRNGKey(seed), n)
+    p = plan(dom, kernel or make_lennard_jones(), positions=pos,
+             strategy=strategy, backend=backend, batch_size=batch_size)
+    return dom, ParticleState(pos), p, p.execute
 
 
 _COUNT_KERNEL = None

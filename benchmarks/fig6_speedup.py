@@ -12,7 +12,7 @@ from __future__ import annotations
 import argparse
 from typing import List
 
-from .common import interactions_per_particle, paper_case, time_fn
+from .common import interactions_per_particle, paper_plan, time_fn
 
 STRATEGIES = ["par_part", "cell_dense", "xpencil", "allin"]
 
@@ -22,7 +22,8 @@ DEFAULT_GRID = [(2, 1), (4, 1), (8, 1), (16, 1), (32, 1),
 FULL_GRID = [(d, p) for p in (1, 10, 100) for d in (2, 4, 8, 16, 32)]
 
 
-def run(full: bool = False, csv: bool = True) -> List[dict]:
+def run(full: bool = False, csv: bool = True,
+        backend: str = "reference") -> List[dict]:
     grid = FULL_GRID if full else DEFAULT_GRID
     rows = []
     if csv:
@@ -31,10 +32,14 @@ def run(full: bool = False, csv: bool = True) -> List[dict]:
         times = {}
         for strat in STRATEGIES:
             try:
-                dom, pos, eng = paper_case(division, ppc, strategy=strat)
-                secs, reps = time_fn(eng.compute, pos)
+                strat_backend = backend if strat in ("xpencil", "allin") \
+                    else "reference"
+                _, state, _, execute = paper_plan(division, ppc,
+                                                  strategy=strat,
+                                                  backend=strat_backend)
+                secs, reps = time_fn(execute, state)
                 times[strat] = secs
-            except Exception as e:  # allin needs >= 27 cells etc.
+            except Exception:   # allin needs >= 27 cells etc.
                 times[strat] = float("nan")
         ipp = interactions_per_particle(division, ppc)
         base = times["par_part"]
@@ -55,8 +60,13 @@ def run(full: bool = False, csv: bool = True) -> List[dict]:
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--backend", default="reference",
+                    choices=["reference", "pallas"],
+                    help="pallas times the TPU kernels (native on TPU; "
+                         "interpret mode elsewhere benchmarks the "
+                         "interpreter, so keep reference on CPU)")
     args = ap.parse_args()
-    run(full=args.full)
+    run(full=args.full, backend=args.backend)
 
 
 if __name__ == "__main__":

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import argparse
 
-from .common import interactions_per_particle, paper_case, time_fn
+from .common import interactions_per_particle, paper_plan, time_fn
 
 DEFAULT_GRID = [(2, 1), (4, 1), (8, 1), (16, 1), (32, 1),
                 (2, 10), (4, 10), (8, 10), (16, 10),
@@ -17,16 +17,17 @@ DEFAULT_GRID = [(2, 1), (4, 1), (8, 1), (16, 1), (32, 1),
 FULL_GRID = [(d, p) for p in (1, 10, 100) for d in (2, 4, 8, 16, 32)]
 
 
-def run(full: bool = False, csv: bool = True):
+def run(full: bool = False, csv: bool = True, backend: str = "reference"):
     rows = []
     if csv:
         print("name,us_per_call,derived")
     for division, ppc in (FULL_GRID if full else DEFAULT_GRID):
         ipp = interactions_per_particle(division, ppc)
-        _, pos, eng_pp = paper_case(division, ppc, strategy="par_part")
-        t_pp, _ = time_fn(eng_pp.compute, pos)
-        _, _, eng_xp = paper_case(division, ppc, strategy="xpencil")
-        t_xp, _ = time_fn(eng_xp.compute, pos)
+        _, state, _, ex_pp = paper_plan(division, ppc, strategy="par_part")
+        t_pp, _ = time_fn(ex_pp, state)
+        _, _, _, ex_xp = paper_plan(division, ppc, strategy="xpencil",
+                                    backend=backend)
+        t_xp, _ = time_fn(ex_xp, state)
         rows.append({"division": division, "ppc": ppc, "ipp": ipp,
                      "ppnl_s": t_pp, "xpencil_s": t_xp})
         if csv:
@@ -39,8 +40,10 @@ def run(full: bool = False, csv: bool = True):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--backend", default="reference",
+                    choices=["reference", "pallas"])
     args = ap.parse_args()
-    run(full=args.full)
+    run(full=args.full, backend=args.backend)
 
 
 if __name__ == "__main__":

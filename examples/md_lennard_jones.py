@@ -2,9 +2,9 @@
 
     PYTHONPATH=src python examples/md_lennard_jones.py [--steps 300]
 
-The paper's kind of workload run end to end: bin -> X-pencil interactions ->
-velocity-Verlet, under jit (lax.scan over steps), reporting energy
-conservation — the physical correctness check for the whole engine stack.
+The paper's kind of workload run end to end: plan once -> bin -> X-pencil
+interactions -> velocity-Verlet, under jit (lax.scan over steps), reporting
+energy conservation — the physical correctness check for the whole stack.
 """
 
 import argparse
@@ -17,7 +17,8 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 import jax
 import jax.numpy as jnp
 
-from repro.core import CellListEngine, Domain, make_lennard_jones, suggest_m_c
+from repro.core import (Domain, ParticleState, make_lennard_jones, plan,
+                        suggest_m_c)
 from repro.physics import init_state, run
 
 
@@ -28,6 +29,8 @@ def main():
     ap.add_argument("--ppc", type=int, default=8)
     ap.add_argument("--dt", type=float, default=1e-4)
     ap.add_argument("--strategy", default="xpencil")
+    ap.add_argument("--backend", default="reference",
+                    choices=["reference", "pallas"])
     args = ap.parse_args()
 
     domain = Domain.cubic(args.division, cutoff=1.0, periodic=True)
@@ -39,22 +42,23 @@ def main():
 
     kernel = make_lennard_jones(sigma=0.25, eps=1.0, softening=1e-4)
     m_c = max(16, suggest_m_c(domain, positions))
-    engine = CellListEngine(domain, kernel, m_c=m_c, strategy=args.strategy)
+    p = plan(domain, kernel, m_c=m_c, strategy=args.strategy,
+             backend=args.backend)
 
     # relaxation: uniform-random placement overlaps particles inside the LJ
     # core; descend along clipped forces first (standard MD minimization)
     # so the dynamics start from a physical configuration.
     box = jnp.asarray(domain.box)
     for _ in range(60):
-        f, _ = engine.compute(positions)
+        f, _ = p.execute(ParticleState(positions))
         step_vec = jnp.clip(f, -1.0, 1.0) * 2e-3
         positions = jnp.mod(positions + step_vec, box)
-    state = init_state(engine, positions, velocities)
+    state = init_state(p, positions, velocities)
 
     print(f"N={n} particles, grid {domain.ncells}, M_C={m_c}, "
-          f"strategy={args.strategy}")
+          f"strategy={args.strategy}, backend={args.backend}")
     t0 = time.time()
-    final, traces = run(engine, state, n_steps=args.steps, dt=args.dt)
+    final, traces = run(p, state, n_steps=args.steps, dt=args.dt)
     jax.block_until_ready(final.positions)
     dt_wall = time.time() - t0
 

@@ -1,11 +1,12 @@
-"""Quickstart: cutoff pair interactions through every schedule.
+"""Quickstart: cutoff pair interactions through the plan/execute API.
 
     PYTHONPATH=src python examples/quickstart.py
 
 Builds the paper's benchmark scene (uniform particles, LJ kernel, cell width
-= cutoff), runs all five schedules including the two proposed in the paper
-(All-in-SM, X-pencil) and the Pallas TPU kernels (interpret mode on CPU),
-and cross-checks them against the O(N^2) oracle.
+= cutoff), plans every schedule x backend combination — including the two
+proposed in the paper (All-in-SM, X-pencil) as Pallas TPU kernels (interpret
+mode on CPU) — and cross-checks all of them against the O(N^2) oracle
+through the same ``plan(...).execute(state)`` front door.
 """
 
 import pathlib
@@ -17,9 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (CellListEngine, Domain, bin_particles,
-                        make_lennard_jones, suggest_m_c)
-from repro.kernels import allin_interactions, xpencil_interactions
+from repro.core import (Domain, ParticleState, backend_matrix,
+                        make_lennard_jones, plan)
 
 
 def main():
@@ -27,36 +27,36 @@ def main():
     key = jax.random.PRNGKey(0)
     positions = domain.sample_uniform(key, 2_000)
     kernel = make_lennard_jones(sigma=0.2)
-    m_c = suggest_m_c(domain, positions)
-    print(f"grid {domain.ncells}, N={positions.shape[0]}, M_C={m_c}")
+    state = ParticleState(positions)
 
-    f_ref, pot_ref = CellListEngine(domain, kernel, m_c=m_c,
-                                    strategy="naive_n2").compute(positions)
+    # one-off static planning: measures M_C, and "auto" picks the schedule
+    # with the least modelled HBM traffic per interaction
+    auto = plan(domain, kernel, positions=positions, strategy="auto")
+    print(f"grid {domain.ncells}, N={positions.shape[0]}, M_C={auto.m_c}, "
+          f'auto -> "{auto.strategy}"')
+
+    oracle = plan(domain, kernel, m_c=auto.m_c, strategy="naive_n2")
+    f_ref, pot_ref = oracle.execute(state)
     e_ref = 0.5 * float(jnp.sum(pot_ref))
     fscale = float(jnp.max(jnp.abs(f_ref)))
-    print(f"naive_n2      : E = {e_ref:+.4e} (oracle)")
+    print(f"naive_n2 oracle          : E = {e_ref:+.4e}")
 
-    for strategy in ("par_part", "cell_dense", "xpencil", "allin"):
-        eng = CellListEngine(domain, kernel, m_c=m_c, strategy=strategy)
-        forces, pot = eng.compute(positions)
-        err = float(jnp.max(jnp.abs(forces - f_ref))) / fscale
-        print(f"{strategy:14s}: E = {0.5 * float(jnp.sum(pot)):+.4e} "
-              f"rel|dF| = {err:.2e}")
+    for backend, strategies in sorted(backend_matrix().items()):
+        for strategy in strategies:
+            p = plan(domain, kernel, m_c=auto.m_c, strategy=strategy,
+                     backend=backend, interpret=True)
+            forces, pot = p.execute(state)
+            err = float(jnp.max(jnp.abs(forces - f_ref))) / fscale
+            print(f"{backend:9s} {strategy:11s}: "
+                  f"E = {0.5 * float(jnp.sum(pot)):+.4e} rel|dF| = {err:.2e}")
+            np.testing.assert_allclose(np.asarray(forces) / fscale,
+                                       np.asarray(f_ref) / fscale,
+                                       rtol=3e-4, atol=3e-4)
 
-    bins = bin_particles(domain, positions, m_c=m_c)
-    f, pot = xpencil_interactions(domain, bins, kernel)
-    print(f"pallas xpencil: E = {0.5 * float(jnp.sum(pot)):+.4e} "
-          f"rel|dF| = {float(jnp.max(jnp.abs(f - f_ref))) / fscale:.2e} "
-          f"(interpret mode)")
-    f, pot = allin_interactions(domain, bins, kernel, (2, 2, 2))
-    print(f"pallas allin  : E = {0.5 * float(jnp.sum(pot)):+.4e} "
-          f"rel|dF| = {float(jnp.max(jnp.abs(f - f_ref))) / fscale:.2e} "
-          f"(interpret mode)")
-
-    np.testing.assert_allclose(np.asarray(f) / fscale,
-                               np.asarray(f_ref) / fscale,
-                               rtol=3e-4, atol=3e-4)
-    print("all schedules agree.")
+    # the M_C safety net: many executes, replan only when a cell overflows
+    (forces, _), p2 = auto.execute_or_replan(state)
+    assert p2 is auto, "uniform scene should not need a replan"
+    print("all schedules x backends agree; overflow check passed.")
 
 
 if __name__ == "__main__":

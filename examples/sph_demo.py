@@ -4,7 +4,9 @@
 
 SPH is the paper's motivating application (30-40 neighbors/particle = few
 particles per cell). The density loop and pressure forces both run through
-the engine's X-pencil schedule.
+the plan/execute API's X-pencil schedule (``repro.physics.sph`` plans once
+per static config and executes per step; pass ``backend="pallas"`` to the
+sph functions to serve the sums from the Pallas kernels).
 """
 
 import pathlib

@@ -1,7 +1,17 @@
-"""Core: the paper's cell-list interaction engine (DESIGN.md §1-2)."""
+"""Core: the paper's cell-list interaction engine (DESIGN.md §1-2).
+
+The public front door is the plan/execute API (``core.api``):
+``plan(...)`` fixes every static choice once, ``plan.execute(state)`` is the
+jitted hot path, and backends ("reference" pure-JAX / "pallas" TPU kernels)
+register per strategy behind one normalized signature. ``CellListEngine``
+and ``compute_interactions`` are compatibility shims over it.
+"""
 
 from .domain import Domain
-from .binning import CellBins, bin_particles, gather_to_particles
+from .api import (InteractionPlan, ParticleState, backend_matrix,
+                  choose_strategy, plan, register_backend)
+from .binning import (CellBins, bin_particles, dense_to_particles,
+                      gather_to_particles, interior_to_padded)
 from .engine import CellListEngine, compute_interactions, suggest_m_c
 from .interactions import (
     PairKernel,
@@ -22,6 +32,9 @@ from . import strategies, traffic
 
 __all__ = [
     "Domain", "CellBins", "bin_particles", "gather_to_particles",
+    "dense_to_particles", "interior_to_padded",
+    "InteractionPlan", "ParticleState", "plan", "register_backend",
+    "backend_matrix", "choose_strategy",
     "CellListEngine", "compute_interactions", "suggest_m_c",
     "PairKernel", "make_gravity", "make_high_flop", "make_lennard_jones",
     "make_low_flop", "make_sph_density", "pair_contribution",

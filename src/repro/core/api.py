@@ -1,0 +1,319 @@
+"""Plan/execute interaction API — the front door to every schedule + backend.
+
+The paper's subject is choosing among interchangeable schedules (Par-Part,
+Par-Cell, X-pencil, All-in-SM) for the same cutoff interaction. This module
+separates that choice (static, made once) from the traced computation (made
+every step):
+
+    state = ParticleState(positions)                        # traced pytree
+    p = plan(domain, kernel, positions=positions,           # static choices
+             strategy="auto", backend="pallas")
+    forces, potential = p.execute(state)                    # jitted hot path
+    (forces, potential), p = p.execute_or_replan(state)     # + M_C safety net
+
+Three layers:
+
+  ``ParticleState``    the universal traced input: positions plus optional
+                       per-particle fields (velocity, mass, ...).
+  ``InteractionPlan``  all static choices — domain, kernel, ``m_c``,
+                       strategy, backend, batch/grid sizing — hashable, so
+                       one jit trace per distinct plan. ``strategy="auto"``
+                       is driven by the ``core.traffic`` cost model.
+  backend registry     one normalized signature
+                       ``(plan, bins, state) -> (forces (N,3), pot (N,))``
+                       under which the pure-JAX references
+                       (``core.strategies``) and the Pallas kernels
+                       (``repro.kernels``) register per strategy name, so
+                       ``backend="pallas"`` routes ``xpencil``/``allin``
+                       through the same front door as their oracles.
+
+``CellListEngine`` / ``compute_interactions`` in ``core.engine`` are thin
+compatibility shims over this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import strategies as S
+from . import traffic
+from .binning import CellBins, bin_particles, dense_to_particles
+from .domain import Domain
+from .interactions import PairKernel, make_lennard_jones
+
+Array = jnp.ndarray
+
+STRATEGY_NAMES = ("par_part", "cell_dense", "xpencil", "allin")
+
+
+# --------------------------------------------------------------------------
+# traced input
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ParticleState:
+    """The universal traced input: positions + optional per-particle fields.
+
+    ``fields`` maps names ("vx", "mass", ...) to (N,) arrays that are binned
+    alongside x/y/z so schedules can read them per slot. The dict's *keys*
+    are static (part of the trace); the values are traced.
+    """
+
+    positions: Array                                   # (N, 3)
+    fields: Dict[str, Array] = dataclasses.field(default_factory=dict)
+
+    @property
+    def n(self) -> int:
+        return self.positions.shape[0]
+
+
+# --------------------------------------------------------------------------
+# backend registry
+# --------------------------------------------------------------------------
+
+# (backend, strategy) -> fn(plan, bins, state) -> (forces (N, 3), pot (N,))
+_BACKENDS: Dict[Tuple[str, str], Callable] = {}
+
+
+def register_backend(backend: str, strategy: str):
+    """Register an implementation under ``(backend, strategy)``.
+
+    The implementation receives the (static) plan, the binned slot layout,
+    and the traced state, and must return per-particle ``(forces, pot)`` —
+    the one normalized signature both the reference schedules and the Pallas
+    kernels conform to.
+    """
+    def deco(fn: Callable) -> Callable:
+        _BACKENDS[(backend, strategy)] = fn
+        return fn
+    return deco
+
+
+def get_backend(backend: str, strategy: str) -> Callable:
+    if backend == "pallas":
+        # Pallas implementations self-register on import; make sure the
+        # module ran before declaring the combination missing.
+        import repro.kernels  # noqa: F401
+    fn = _BACKENDS.get((backend, strategy))
+    if fn is None:
+        import repro.kernels  # noqa: F401  (list *all* backends in the error)
+        fn = _BACKENDS.get((backend, strategy))
+    if fn is None:
+        have = sorted(set(b for b, _ in _BACKENDS))
+        raise ValueError(
+            f"no backend {backend!r} for strategy {strategy!r}; registered "
+            f"backends: {have}, pairs: {sorted(_BACKENDS)}")
+    return fn
+
+
+def backend_matrix() -> Dict[str, Tuple[str, ...]]:
+    """backend name -> strategies it implements (docs / README helper)."""
+    import repro.kernels  # noqa: F401  (trigger pallas registration)
+    out: Dict[str, list] = {}
+    for b, s in sorted(_BACKENDS):
+        out.setdefault(b, []).append(s)
+    return {b: tuple(s) for b, s in out.items()}
+
+
+# --------------------------------------------------------------------------
+# the plan
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class InteractionPlan:
+    """All static choices for a cutoff interaction, made once.
+
+    Hashable: two equal plans share one jit trace. Everything traced lives
+    in ``ParticleState``; everything here is compile-time constant.
+    """
+
+    domain: Domain
+    kernel: PairKernel
+    m_c: int
+    strategy: str = "xpencil"
+    backend: str = "reference"
+    batch_size: int = 64
+    box: Optional[Tuple[int, int, int]] = None   # allin sub-box (bx, by, bz)
+    interpret: Optional[bool] = None             # pallas: None = auto
+
+    def __post_init__(self):
+        if self.strategy not in ("naive_n2", *STRATEGY_NAMES):
+            raise ValueError(
+                f"unknown strategy {self.strategy!r}; have "
+                f"{sorted(STRATEGY_NAMES)} + ['naive_n2']")
+        if self.strategy == "allin" and self.box is None:
+            # directly-constructed plans get the VMEM-budget sub-box too —
+            # the pallas backend needs a concrete tiling at trace time
+            object.__setattr__(self, "box", _allin_box(self.domain, self.m_c))
+
+    # -- hot path ----------------------------------------------------------
+
+    def execute(self, state: ParticleState) -> Tuple[Array, Array]:
+        """-> (forces (N, 3), per-particle potential (N,)). Jitted; one
+        trace per (plan, state structure). Total potential energy is
+        ``0.5 * potential.sum()`` (each pair counted twice, the paper's
+        convention)."""
+        return _executor(self, tuple(sorted(state.fields)))(state)
+
+    def __call__(self, state: ParticleState) -> Tuple[Array, Array]:
+        return self.execute(state)
+
+    # -- M_C safety net ----------------------------------------------------
+
+    def check_overflow(self, state: ParticleState) -> bool:
+        """True if some cell holds more than ``m_c`` particles (the static
+        bound no longer covers these positions and forces would be wrong)."""
+        return int(_max_cell_count(self.domain, state.positions)) > self.m_c
+
+    def replan(self, state: ParticleState, slack: float = 1.5,
+               align: int = 8) -> "InteractionPlan":
+        """A new plan whose ``m_c`` covers ``state`` with slack (sublane
+        aligned, via ``suggest_m_c``) and strictly exceeds the current
+        bound. Sub-box sizing is recomputed since it depends on ``m_c``."""
+        from .engine import suggest_m_c
+        measured = suggest_m_c(self.domain, state.positions, slack=slack,
+                               align=align)
+        grow = -(-(self.m_c + 1) // align) * align   # smallest aligned > m_c
+        return dataclasses.replace(self, m_c=max(measured, grow), box=None)
+
+    def execute_or_replan(self, state: ParticleState
+                          ) -> Tuple[Tuple[Array, Array], "InteractionPlan"]:
+        """Overflow-safe execute: detects an exceeded ``m_c`` bound (outside
+        jit — replanning changes statics) and re-executes under a replanned
+        bound. Returns ``((forces, potential), plan)`` where ``plan`` is
+        ``self`` when the bound held."""
+        p: InteractionPlan = self
+        while p.check_overflow(state):
+            p = p.replan(state)
+        return p.execute(state), p
+
+    # -- introspection -----------------------------------------------------
+
+    def bin(self, state: ParticleState) -> CellBins:
+        return bin_particles(self.domain, state.positions, state.fields,
+                             m_c=self.m_c)
+
+    def traffic_report(self, avg_ppc: float) -> "traffic.TrafficReport":
+        return traffic.model(self.domain, self.m_c, avg_ppc)[self.strategy]
+
+
+def plan(domain: Domain, kernel: Optional[PairKernel] = None, *,
+         positions: Optional[Array] = None, m_c: Optional[int] = None,
+         strategy: str = "auto", backend: str = "reference",
+         batch_size: int = 64, box: Optional[Tuple[int, int, int]] = None,
+         interpret: Optional[bool] = None,
+         m_c_slack: float = 1.5) -> InteractionPlan:
+    """Build an :class:`InteractionPlan` (static planning, done once).
+
+    Args:
+      domain: the cell grid.
+      kernel: pair kernel (default Lennard-Jones).
+      positions: representative positions; required when ``m_c`` is None
+        (measured bound) or ``strategy="auto"`` (fill ratio for the cost
+        model).
+      m_c: static max-particles-per-cell bound; measured from ``positions``
+        with slack + sublane alignment when omitted.
+      strategy: one of ``par_part | cell_dense | xpencil | allin |
+        naive_n2``, or ``"auto"`` to pick the minimum modelled HBM traffic
+        per interaction (``core.traffic``).
+      backend: ``"reference"`` (pure-JAX schedules) or ``"pallas"`` (TPU
+        kernels; interpret mode off-TPU).
+      box: All-in-SM sub-box override; sized from the VMEM budget otherwise.
+      interpret: force Pallas interpret mode (None = auto by platform).
+    """
+    kernel = kernel or make_lennard_jones()
+    if m_c is None:
+        if positions is None:
+            raise ValueError("plan() needs either m_c or positions "
+                             "(to measure the M_C bound)")
+        from .engine import suggest_m_c
+        m_c = suggest_m_c(domain, positions, slack=m_c_slack)
+    if strategy == "auto":
+        if positions is None:
+            raise ValueError('strategy="auto" needs positions (the cost '
+                             "model is parameterized by the fill ratio)")
+        strategy = choose_strategy(domain, m_c,
+                                   positions.shape[0] / domain.n_cells)
+    p = InteractionPlan(domain=domain, kernel=kernel, m_c=m_c,
+                        strategy=strategy, backend=backend,
+                        batch_size=batch_size, box=box, interpret=interpret)
+    if strategy != "naive_n2":
+        get_backend(backend, strategy)   # fail at plan time, not execute time
+    return p
+
+
+def choose_strategy(domain: Domain, m_c: int, avg_ppc: float) -> str:
+    """``strategy="auto"``: minimize modelled HBM bytes per interaction.
+
+    The paper's Fig. 7 argument as a decision rule — the schedule that moves
+    the fewest global-memory bytes per interaction wins in the memory-bound
+    regime the paper targets. Ties break toward the paper's X-pencil.
+    """
+    reports = traffic.model(domain, m_c, max(avg_ppc, 1e-3))
+    order = {"xpencil": 0, "allin": 1, "cell_dense": 2, "par_part": 3}
+    return min(reports.values(),
+               key=lambda r: (r.hbm_bytes_per_interaction,
+                              order[r.strategy])).strategy
+
+
+def _allin_box(domain: Domain, m_c: int) -> Tuple[int, int, int]:
+    """VMEM-budget sub-box, shrunk to divisors of the grid (static)."""
+    return S.shrink_to_divisors(domain, S.subbox_dims(domain, m_c))
+
+
+def _max_cell_count(domain: Domain, positions: Array) -> Array:
+    counts = jax.ops.segment_sum(
+        jnp.ones((positions.shape[0],), jnp.int32),
+        domain.cell_ids(positions), num_segments=domain.n_cells)
+    return jnp.max(counts)
+
+
+# --------------------------------------------------------------------------
+# execution (jitted per plan)
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _executor(p: InteractionPlan, field_names: Tuple[str, ...]) -> Callable:
+    """One jitted executor per (plan, state structure)."""
+
+    def impl(state: ParticleState) -> Tuple[Array, Array]:
+        if p.strategy == "naive_n2":
+            fx, fy, fz, pot = S.naive_n2(p.domain, state.positions, p.kernel)
+            return jnp.stack([fx, fy, fz], axis=-1), pot
+        bins = bin_particles(p.domain, state.positions, state.fields,
+                             m_c=p.m_c)
+        return get_backend(p.backend, p.strategy)(p, bins, state)
+
+    return jax.jit(impl)
+
+
+# --------------------------------------------------------------------------
+# reference backend: the pure-JAX schedules of core.strategies
+# --------------------------------------------------------------------------
+
+@register_backend("reference", "par_part")
+def _ref_par_part(p: InteractionPlan, bins: CellBins, state: ParticleState):
+    fx, fy, fz, pot = S.par_part(p.domain, bins, state.positions, p.kernel,
+                                 p.batch_size)
+    return jnp.stack([fx, fy, fz], axis=-1), pot
+
+
+def _ref_dense(fn):
+    def impl(p: InteractionPlan, bins: CellBins, state: ParticleState):
+        kwargs = {"batch_size": p.batch_size}
+        if fn is S.allin:
+            kwargs["box"] = p.box
+        fx, fy, fz, pot = fn(p.domain, bins, p.kernel, **kwargs)
+        return dense_to_particles(p.domain, bins, fx, fy, fz, pot)
+    return impl
+
+
+register_backend("reference", "cell_dense")(_ref_dense(S.cell_dense))
+register_backend("reference", "xpencil")(_ref_dense(S.xpencil))
+register_backend("reference", "allin")(_ref_dense(S.allin))

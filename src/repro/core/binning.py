@@ -65,13 +65,15 @@ def padded_shape(domain: Domain, m_c: int) -> Tuple[int, int, int]:
 
 def bin_particles(domain: Domain, positions: Array,
                   fields: Dict[str, Array] | None = None, *,
-                  m_c: int) -> CellBins:
+                  m_c: int, valid: Array | None = None) -> CellBins:
     """Bin particles into the dense slot layout.
 
     Args:
       positions: (N, 3) float array.
       fields: optional extra per-particle scalars to bin alongside x/y/z.
       m_c: static max-particles-per-cell bound (paper's M_C).
+      valid: optional (N,) bool mask; False rows (e.g. the sentinel padding a
+        halo shard carries) are excluded from counts and never land in a slot.
     """
     n = positions.shape[0]
     nx, ny, nz = domain.ncells
@@ -80,15 +82,24 @@ def bin_particles(domain: Domain, positions: Array,
     coords = domain.cell_coords(positions)          # (N, 3) int32
     cids = domain.linearize(coords)                 # (N,)
 
-    counts = jax.ops.segment_sum(
-        jnp.ones((n,), jnp.int32), cids, num_segments=n_cells)
+    if valid is None:
+        weights = jnp.ones((n,), jnp.int32)
+        sort_key = cids
+    else:
+        # invalid rows carry weight 0 in cell 0 and sort past every real cell
+        weights = valid.astype(jnp.int32)
+        cids = jnp.where(valid, cids, 0)
+        sort_key = jnp.where(valid, cids, n_cells)
+
+    counts = jax.ops.segment_sum(weights, cids, num_segments=n_cells)
     offsets = exclusive_prefix_sum(counts)          # (n_cells,)
 
     # Rank of each particle within its cell via one stable sort (the paper's
     # atomic slot-grab, determinized).
-    order = jnp.argsort(cids, stable=True)          # (N,) particle ids, sorted
-    sorted_cids = cids[order]
-    rank = jnp.arange(n, dtype=jnp.int32) - offsets[sorted_cids]
+    order = jnp.argsort(sort_key, stable=True)      # (N,) particle ids, sorted
+    sorted_key = sort_key[order]
+    rank = jnp.arange(n, dtype=jnp.int32) - offsets[
+        jnp.clip(sorted_key, 0, n_cells - 1)]
 
     # Flat index into the padded planes; ranks >= m_c fall off the end of the
     # cell's slot range — push them fully out of bounds so 'drop' removes them.
@@ -97,7 +108,8 @@ def bin_particles(domain: Domain, positions: Array,
     slot_col = (cxyz[:, 0] + 1) * m_c + rank
     flat = ((cxyz[:, 2] + 1) * (ny + 2) + (cxyz[:, 1] + 1)) * row_len + slot_col
     total = (nz + 2) * (ny + 2) * row_len
-    flat = jnp.where(rank < m_c, flat, total)       # out of range -> dropped
+    keep = (rank < m_c) & (sorted_key < n_cells)
+    flat = jnp.where(keep, flat, total)             # out of range -> dropped
 
     shape = padded_shape(domain, m_c)
 
@@ -192,3 +204,27 @@ def interior(domain: Domain, plane: Array, m_c: int) -> Array:
     nx, ny, nz = domain.ncells
     core = plane[1:nz + 1, 1:ny + 1, m_c:(nx + 1) * m_c]
     return core.reshape(nz, ny, nx, m_c)
+
+
+def interior_to_padded(domain: Domain, plane: Array, m_c: int) -> Array:
+    """(nz, ny, nx, m_c) interior tensor -> padded plane (ghosts zero).
+
+    Inverse of ``interior`` up to the ghost ring; the step every dense
+    schedule output goes through before ``gather_to_particles``.
+    """
+    nx, ny, nz = domain.ncells
+    padded = jnp.zeros((nz + 2, ny + 2, (nx + 2) * m_c), dtype=plane.dtype)
+    return padded.at[1:nz + 1, 1:ny + 1, m_c:(nx + 1) * m_c].set(
+        plane.reshape(nz, ny, nx * m_c))
+
+
+def dense_to_particles(domain: Domain, bins: CellBins, fx: Array, fy: Array,
+                       fz: Array, pot: Array) -> Tuple[Array, Array]:
+    """Normalize dense (nz, ny, nx, m_c) schedule outputs to per-particle
+    (forces (N, 3), potential (N,)) — the backend-registry output contract."""
+    out = []
+    for plane in (fx, fy, fz, pot):
+        shaped = plane.reshape(domain.nz, domain.ny, domain.nx, bins.m_c)
+        out.append(gather_to_particles(
+            bins, interior_to_padded(domain, shaped, bins.m_c)))
+    return jnp.stack(out[:3], axis=-1), out[3]

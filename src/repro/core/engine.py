@@ -1,12 +1,15 @@
-"""Public API: the cell-list interaction engine.
+"""Compatibility engine API over the plan/execute layer (``core.api``).
 
-    engine = CellListEngine(domain, kernel=make_lennard_jones(), strategy="xpencil")
-    forces, potential = engine.compute(positions)
+New code should use the plan/execute API directly:
 
-The engine owns: the static M_C bound (paper's M_C, tracked like the paper
-does while computing the prefix sum), strategy dispatch, the bin -> compute ->
-scatter-back sequence, and jit caching. ``m_c`` and the strategy are static;
-everything else is traced.
+    p = plan(domain, make_lennard_jones(), positions=pos,
+             strategy="auto", backend="pallas")
+    forces, potential = p.execute(ParticleState(pos))
+
+``CellListEngine`` and ``compute_interactions`` below are thin shims kept so
+pre-existing call sites keep working unchanged; each one owns exactly one
+:class:`~repro.core.api.InteractionPlan` and delegates to it. ``m_c`` and
+the strategy/backend are static; everything else is traced.
 """
 
 from __future__ import annotations
@@ -17,8 +20,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import strategies as S
-from .binning import CellBins, bin_particles, gather_to_particles
+from .api import InteractionPlan, ParticleState, plan as make_plan
+from .binning import CellBins, bin_particles
 from .domain import Domain
 from .interactions import PairKernel, make_lennard_jones
 
@@ -31,31 +34,51 @@ def suggest_m_c(domain: Domain, positions, slack: float = 1.5,
 
     The paper keeps the running max while building the prefix sum; we do the
     same but add slack so the bound survives a few integration steps before a
-    re-bin with a larger M_C is needed, and round to a sublane multiple.
+    re-bin with a larger M_C is needed, and round *up* to a sublane multiple
+    — unconditionally, since ``kernels/xpencil.py`` documents sublane-aligned
+    slices as an invariant (small maxima used to leak through unrounded).
     """
     counts = jax.ops.segment_sum(
         jnp.ones((positions.shape[0],), jnp.int32),
         domain.cell_ids(positions), num_segments=domain.n_cells)
     mx = int(jnp.max(counts))
     m_c = max(1, int(mx * slack + 0.999))
-    return -(-m_c // align) * align if m_c > align else m_c
+    return -(-m_c // align) * align
 
 
 class CellListEngine:
-    """Cutoff pair-interaction engine over a uniform cell grid."""
+    """Cutoff pair-interaction engine over a uniform cell grid (shim)."""
 
     def __init__(self, domain: Domain, kernel: Optional[PairKernel] = None,
                  m_c: int = 8, strategy: str = "xpencil",
-                 batch_size: int = 64, jit: bool = True):
-        if strategy not in ("naive_n2", *S.STRATEGIES):
-            raise ValueError(f"unknown strategy {strategy!r}; "
-                             f"have {sorted(S.STRATEGIES)} + ['naive_n2']")
-        self.domain = domain
-        self.kernel = kernel or make_lennard_jones()
-        self.m_c = m_c
-        self.strategy = strategy
-        self.batch_size = batch_size
-        self._compute = jax.jit(self._compute_impl) if jit else self._compute_impl
+                 batch_size: int = 64, jit: bool = True,
+                 backend: str = "reference"):
+        self.plan = make_plan(domain, kernel or make_lennard_jones(),
+                              m_c=m_c, strategy=strategy, backend=backend,
+                              batch_size=batch_size)
+        self._jit = jit
+
+    # -- plan attributes, mirrored for old call sites ------------------------
+
+    @property
+    def domain(self) -> Domain:
+        return self.plan.domain
+
+    @property
+    def kernel(self) -> PairKernel:
+        return self.plan.kernel
+
+    @property
+    def m_c(self) -> int:
+        return self.plan.m_c
+
+    @property
+    def strategy(self) -> str:
+        return self.plan.strategy
+
+    @property
+    def batch_size(self) -> int:
+        return self.plan.batch_size
 
     # -- pipeline ------------------------------------------------------------
 
@@ -63,54 +86,33 @@ class CellListEngine:
             ) -> CellBins:
         return bin_particles(self.domain, positions, fields, m_c=self.m_c)
 
-    def _compute_impl(self, positions: Array) -> Tuple[Array, Array]:
-        if self.strategy == "naive_n2":
-            fx, fy, fz, pot = S.naive_n2(self.domain, positions, self.kernel)
-            return jnp.stack([fx, fy, fz], axis=-1), pot
-
-        bins = self.bin(positions)
-        if self.strategy == "par_part":
-            fx, fy, fz, pot = S.par_part(self.domain, bins, positions,
-                                         self.kernel, self.batch_size)
-            return jnp.stack([fx, fy, fz], axis=-1), pot
-
-        fn = S.STRATEGIES[self.strategy]
-        fx, fy, fz, pot = fn(self.domain, bins, self.kernel,
-                             batch_size=self.batch_size)
-        # dense interior (nz, ny, nx, m_c) -> per-particle via slot mapping
-        out = []
-        for plane in (fx, fy, fz, pot):
-            padded = _interior_to_padded(self.domain, plane, self.m_c)
-            out.append(gather_to_particles(bins, padded))
-        return jnp.stack(out[:3], axis=-1), out[3]
-
     def compute(self, positions: Array) -> Tuple[Array, Array]:
         """-> (forces (N, 3), per-particle potential (N,)).
 
         Total potential energy = 0.5 * potential.sum() (each pair counted
         twice, the paper's convention)."""
-        return self._compute(positions)
+        state = ParticleState(positions)
+        if not self._jit:
+            with jax.disable_jit():
+                return self.plan.execute(state)
+        return self.plan.execute(state)
 
     def check_m_c(self, positions: Array) -> bool:
         """True if the current M_C bound still holds for these positions."""
-        counts = jax.ops.segment_sum(
-            jnp.ones((positions.shape[0],), jnp.int32),
-            self.domain.cell_ids(positions), num_segments=self.domain.n_cells)
-        return bool(jnp.max(counts) <= self.m_c)
+        return not self.plan.check_overflow(ParticleState(positions))
 
 
 def _interior_to_padded(domain: Domain, plane: Array, m_c: int) -> Array:
-    """(nz, ny, nx, m_c) interior tensor -> padded plane (ghosts zero)."""
-    nx, ny, nz = domain.ncells
-    padded = jnp.zeros((nz + 2, ny + 2, (nx + 2) * m_c), dtype=plane.dtype)
-    return padded.at[1:nz + 1, 1:ny + 1, m_c:(nx + 1) * m_c].set(
-        plane.reshape(nz, ny, nx * m_c))
+    """Deprecated alias; see ``binning.interior_to_padded``."""
+    from .binning import interior_to_padded
+    return interior_to_padded(domain, plane, m_c)
 
 
 @functools.lru_cache(maxsize=None)
-def _cached_engine(domain: Domain, kernel: PairKernel, m_c: int,
-                   strategy: str, batch_size: int) -> CellListEngine:
-    return CellListEngine(domain, kernel, m_c, strategy, batch_size)
+def _cached_plan(domain: Domain, kernel: PairKernel, m_c: int,
+                 strategy: str, batch_size: int) -> InteractionPlan:
+    return make_plan(domain, kernel, m_c=m_c, strategy=strategy,
+                     batch_size=batch_size)
 
 
 def compute_interactions(domain: Domain, positions: Array,
@@ -118,9 +120,9 @@ def compute_interactions(domain: Domain, positions: Array,
                          m_c: Optional[int] = None,
                          strategy: str = "xpencil",
                          batch_size: int = 64) -> Tuple[Array, Array]:
-    """Functional one-shot API (engines cached by static config)."""
+    """Functional one-shot API (plans cached by static config)."""
     kernel = kernel or make_lennard_jones()
     if m_c is None:
         m_c = suggest_m_c(domain, positions)
-    eng = _cached_engine(domain, kernel, m_c, strategy, batch_size)
-    return eng.compute(positions)
+    p = _cached_plan(domain, kernel, m_c, strategy, batch_size)
+    return p.execute(ParticleState(positions))

@@ -21,7 +21,7 @@ model (the paper's own counting convention: distance + kernel, sqrt = 1 FLOP).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,18 +31,29 @@ Array = jnp.ndarray
 
 @dataclasses.dataclass(frozen=True)
 class PairKernel:
-    """A cutoff pair interaction. Hashable; safe to close over under jit."""
+    """A cutoff pair interaction. Hashable; safe to close over under jit.
+
+    Hash/eq are *value-based* on ``(name, flops, static_params)`` rather than
+    identity, so two ``make_lennard_jones()`` calls produce equal kernels and
+    hit the same jit trace / ``_cached_plan`` entry instead of retracing.
+    Factories must fold every behaviour-affecting argument into
+    ``static_params`` — equal tuples promise equal ``coeff``/``potential``.
+    """
 
     name: str
     coeff: Callable[[Array], Array]
     potential: Callable[[Array], Array]
     flops: int  # per-interaction FLOP count, paper's convention
+    static_params: Tuple = ()  # factory args that define coeff/potential
 
-    def __hash__(self):  # identity hash: instances are module-level constants
-        return id(self)
+    def __hash__(self):
+        return hash((self.name, self.flops, self.static_params))
 
     def __eq__(self, other):
-        return self is other
+        if not isinstance(other, PairKernel):
+            return NotImplemented
+        return (self.name, self.flops, self.static_params) == \
+            (other.name, other.flops, other.static_params)
 
 
 def _lj_terms(r2: Array, sigma2: float, eps: float):
@@ -67,7 +78,8 @@ def make_lennard_jones(sigma: float = 0.2, eps: float = 1.0,
         a6, a12 = _lj_terms(r2, sigma2, eps)
         return 4.0 * eps * (a12 - a6)
 
-    return PairKernel("lennard_jones", coeff, potential, flops=21)
+    return PairKernel("lennard_jones", coeff, potential, flops=21,
+                      static_params=(sigma, eps, softening))
 
 
 def make_low_flop() -> PairKernel:
@@ -101,7 +113,9 @@ def make_high_flop(extra_terms: int = 25, sigma: float = 0.2,
     def potential(r2):
         return lj.potential(r2) + extra(r2)
 
-    return PairKernel("high_flop", coeff, potential, flops=21 + 6 * extra_terms)
+    return PairKernel("high_flop", coeff, potential,
+                      flops=21 + 6 * extra_terms,
+                      static_params=(extra_terms, sigma, eps, softening))
 
 
 def make_gravity(g: float = 1.0, softening: float = 1e-4) -> PairKernel:
@@ -114,7 +128,8 @@ def make_gravity(g: float = 1.0, softening: float = 1e-4) -> PairKernel:
     def potential(r2):
         return -g * jax.lax.rsqrt(r2 + softening)
 
-    return PairKernel("gravity", coeff, potential, flops=14)
+    return PairKernel("gravity", coeff, potential, flops=14,
+                      static_params=(g, softening))
 
 
 def make_sph_density(h: float) -> PairKernel:
@@ -145,7 +160,8 @@ def make_sph_density(h: float) -> PairKernel:
         r = jnp.maximum(jnp.sqrt(r2), 1e-12)
         return s * g / (hh * r)
 
-    return PairKernel("sph_density", coeff, potential, flops=18)
+    return PairKernel("sph_density", coeff, potential, flops=18,
+                      static_params=(h,))
 
 
 KERNELS: Dict[str, Callable[[], PairKernel]] = {

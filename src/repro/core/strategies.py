@@ -278,6 +278,19 @@ def subbox_dims(domain: Domain, m_c: int, fields: int = 4,
     return bx, by, bz
 
 
+def shrink_to_divisors(domain: Domain,
+                       box: Tuple[int, int, int]) -> Tuple[int, int, int]:
+    """Shrink a sub-box to a divisor of each grid axis (exact tiling)."""
+    def divisor_leq(n, b):
+        b = min(b, n)
+        while n % b:
+            b -= 1
+        return b
+
+    return tuple(divisor_leq(n, b)
+                 for n, b in zip(domain.ncells, box))
+
+
 def allin(domain: Domain, bins: CellBins, kernel: PairKernel,
           box: Tuple[int, int, int] | None = None,
           batch_size: int = 8) -> ForceOut:
@@ -292,13 +305,7 @@ def allin(domain: Domain, bins: CellBins, kernel: PairKernel,
     if box is None:
         box = subbox_dims(domain, m_c)
 
-    def divisor_leq(n, b):
-        b = min(b, n)
-        while n % b:
-            b -= 1
-        return b
-
-    bx, by, bz = (divisor_leq(n, b) for n, b in zip((nx, ny, nz), box))
+    bx, by, bz = shrink_to_divisors(domain, box)
     gx, gy, gz = nx // bx, ny // by, nz // bz
     row_len_blk = (bx + 2) * m_c
 

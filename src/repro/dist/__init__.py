@@ -1,0 +1,18 @@
+"""Distribution layer: sharding rules, halo exchange, fault tolerance,
+gradient compression.
+
+Modules:
+  sharding   role-based constraints ("dp"/"tp" -> mesh axes) + NamedSharding
+             trees for params/opt/batch/cache; ``sanitize`` drops axes that
+             don't divide.
+  halo       the distributed particle engine: shard_map over Z-slabs with
+             ghost-plane exchange (the paper's grid stretched across chips).
+  fault      straggler watchdog, restart-from-latest-checkpoint driver,
+             elastic re-mesh restore.
+  compress   int8 gradient compression with error feedback (slow inter-pod
+             links).
+"""
+
+from . import compress, fault, halo, sharding
+
+__all__ = ["compress", "fault", "halo", "sharding"]

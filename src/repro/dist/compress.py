@@ -1,0 +1,58 @@
+"""Gradient compression for slow inter-pod links: int8 + error feedback.
+
+Per-tensor symmetric int8 quantization (scale = max|g| / 127). Error
+feedback carries the quantization residual into the next step, which is
+what keeps compressed SGD/Adam converging to the uncompressed optimum
+(Karimireddy et al., 2019) — tested on a quadratic in
+tests/test_train_ckpt_fault.py.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _compress_leaf(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    gf = g.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads_int8(grads: PyTree) -> Tuple[PyTree, PyTree]:
+    """-> (int8 tree, per-tensor fp32 scale tree). 4x wire bytes saved."""
+    pairs = jax.tree.map(_compress_leaf, grads)
+    is_pair = lambda t: isinstance(t, tuple)
+    packed = jax.tree.map(lambda t: t[0], pairs, is_leaf=is_pair)
+    scales = jax.tree.map(lambda t: t[1], pairs, is_leaf=is_pair)
+    return packed, scales
+
+
+def decompress_grads_int8(packed: PyTree, scales: PyTree) -> PyTree:
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s,
+                        packed, scales)
+
+
+def init_residual(params: PyTree) -> PyTree:
+    """Zero error-feedback residual matching the grad tree."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_feedback(grads: PyTree, residual: PyTree
+                           ) -> Tuple[PyTree, PyTree]:
+    """-> (decompressed grads to apply, new residual).
+
+    Compresses ``grads + residual`` and carries the quantization error into
+    the next step.
+    """
+    corrected = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r,
+                             grads, residual)
+    packed, scales = compress_grads_int8(corrected)
+    decompressed = decompress_grads_int8(packed, scales)
+    new_residual = jax.tree.map(lambda c, d: c - d, corrected, decompressed)
+    return decompressed, new_residual

@@ -1,0 +1,85 @@
+"""Fault tolerance: straggler detection, restart driver, elastic restore.
+
+The production contract (ckpt/checkpoint.py provides the atomic-commit
+half): a training loop that checkpoints every K steps can be killed at any
+point — by a straggler watchdog or a real failure — and the driver restarts
+it from the latest committed checkpoint, possibly on a *different* mesh
+(elastic re-mesh restore: host arrays are device_put against the new mesh's
+shardings).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional, Tuple
+
+from ..ckpt import checkpoint as C
+
+PyTree = Any
+
+
+class StragglerDetected(RuntimeError):
+    """A step exceeded the deadline — treat the worker as failed."""
+
+
+@dataclasses.dataclass
+class FaultConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    step_deadline_s: float = 300.0   # watchdog deadline per step
+    max_restarts: int = 10
+    backoff_s: float = 0.0           # sleep between restarts (0 in tests)
+
+
+class StragglerWatchdog:
+    """Per-step deadline monitor (the TPU analogue of a straggling worker:
+    one slow participant stalls every collective, so we fail fast and let
+    the restart driver take over)."""
+
+    def __init__(self, deadline_s: float):
+        self.deadline_s = float(deadline_s)
+        self.history: list = []
+
+    def observe(self, step_seconds: float) -> None:
+        self.history.append(float(step_seconds))
+        if step_seconds > self.deadline_s:
+            raise StragglerDetected(
+                f"step took {step_seconds:.3f}s > deadline "
+                f"{self.deadline_s:.3f}s")
+
+
+def run_with_restarts(train_loop: Callable[[int], Any],
+                      cfg: FaultConfig) -> Any:
+    """Drive ``train_loop(start_step)`` to completion with restarts.
+
+    On ``StragglerDetected`` (or any RuntimeError), the loop is restarted
+    from the latest committed checkpoint step; the loop itself is
+    responsible for restoring state from ``cfg.ckpt_dir``.
+    """
+    restarts = 0
+    while True:
+        start = C.latest_step(cfg.ckpt_dir) or 0
+        try:
+            return train_loop(start)
+        except StragglerDetected as e:
+            restarts += 1
+            if restarts > cfg.max_restarts:
+                raise
+            print(f"[fault] restart {restarts}/{cfg.max_restarts} "
+                  f"from step {C.latest_step(cfg.ckpt_dir) or 0}: {e}")
+            if cfg.backoff_s:
+                time.sleep(cfg.backoff_s)
+
+
+def elastic_restore(ckpt_dir, tree_like: PyTree,
+                    shardings_fn: Callable[[], PyTree],
+                    step: Optional[int] = None) -> Tuple[PyTree, dict]:
+    """Restore a checkpoint onto a *new* mesh (elastic re-mesh restart).
+
+    ``shardings_fn`` is called after the new mesh exists and returns the
+    sharding tree to device_put against; leaves come back resharded for the
+    surviving device set. Returns ``(tree, extra)``.
+    """
+    return C.restore(ckpt_dir, tree_like, step=step,
+                     shardings=shardings_fn())

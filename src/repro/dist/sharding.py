@@ -1,0 +1,162 @@
+"""Role-based sharding rules.
+
+Model code never names mesh axes; it names *roles*:
+
+    x = constrain(x, "dp", None, "tp")     # batch over DP, last dim over TP
+
+and this module resolves roles against the active mesh — "dp" is the data
+hierarchy (``("pod", "data")``, plus "model" when the config runs pure-DP),
+"tp" is the "model" axis. Outside any mesh context ``constrain`` is a no-op,
+which is what lets the same model run in 1-device smoke tests and on the
+production mesh unchanged.
+
+``sanitize`` enforces GSPMD's divisibility rule: a spec entry whose axis
+product does not divide the dimension is dropped (to ``None``) rather than
+left to error at lowering.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+_STATE = threading.local()
+
+
+def set_pure_dp(flag: bool) -> None:
+    """Small models fold the model axis into DP (no tensor parallelism)."""
+    _STATE.pure_dp = bool(flag)
+
+
+def _pure_dp() -> bool:
+    return getattr(_STATE, "pure_dp", False)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    """Make ``mesh`` the resolution target for in-model ``constrain`` calls.
+
+    (jax 0.4.x has no public ``use_abstract_mesh``; this module-level context
+    is what the dry-run and the SPMD tests wrap lowering in.)
+    """
+    prev = getattr(_STATE, "mesh", None)
+    _STATE.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _STATE.mesh = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    return int(np.prod([mesh.shape[n] for n in names]))
+
+
+def sanitize(mesh: Mesh, spec: P, shape) -> P:
+    """Drop spec entries whose mesh-axis product doesn't divide the dim."""
+    out = []
+    for entry, dim in zip(spec, shape):
+        if entry is not None and dim % _axis_size(mesh, entry) != 0:
+            entry = None
+        out.append(entry)
+    return P(*out)
+
+
+def _role_axes(mesh: Mesh, role: Optional[str]):
+    names = mesh.axis_names
+    if role is None:
+        return None
+    if role == "dp":
+        axes = [a for a in ("pod", "data") if a in names]
+        if _pure_dp() and "model" in names:
+            axes.append("model")
+        return tuple(axes) if axes else None
+    if role == "tp":
+        return "model" if ("model" in names and not _pure_dp()) else None
+    if role in names:                      # raw axis name passes through
+        return role
+    raise ValueError(f"unknown sharding role {role!r}")
+
+
+def constrain(x, *roles):
+    """``with_sharding_constraint`` by role; no-op without a mesh context."""
+    mesh = current_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    entries = [_role_axes(mesh, r) for r in roles]
+    spec = sanitize(mesh, P(*entries), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# --------------------------------------------------------------------------
+# NamedSharding trees (params / optimizer / batch / kv-cache)
+# --------------------------------------------------------------------------
+
+def _leaf_spec(mesh: Mesh, shape) -> P:
+    """FSDP-flavoured default: biggest divisible dim over DP, and (2-D+
+    leaves) the last other divisible dim over TP."""
+    dp = _role_axes(mesh, "dp")
+    tp = _role_axes(mesh, "tp")
+    entries = [None] * len(shape)
+    if shape:
+        dp_dim = None
+        if dp is not None:
+            divisible = [i for i, d in enumerate(shape)
+                         if d % _axis_size(mesh, dp) == 0 and d > 1]
+            if divisible:
+                dp_dim = max(divisible, key=lambda i: shape[i])
+                entries[dp_dim] = dp
+        if tp is not None and len(shape) >= 2:
+            for i in range(len(shape) - 1, -1, -1):
+                if i != dp_dim and shape[i] % _axis_size(mesh, tp) == 0 \
+                        and shape[i] > 1:
+                    entries[i] = tp
+                    break
+    return P(*entries)
+
+
+def _shard_tree(mesh: Mesh, tree: PyTree) -> PyTree:
+    def one(leaf):
+        spec = _leaf_spec(mesh, tuple(leaf.shape)) if leaf.ndim else P()
+        return NamedSharding(mesh, sanitize(mesh, spec, leaf.shape))
+    return jax.tree.map(one, tree)
+
+
+def params_shardings(cfg, mesh: Mesh, params: PyTree) -> PyTree:
+    set_pure_dp(getattr(cfg, "pure_dp", False))
+    return _shard_tree(mesh, params)
+
+
+def opt_shardings(cfg, mesh: Mesh, opt: PyTree, params: PyTree) -> PyTree:
+    """Optimizer moments shard exactly like the params (ZeRO)."""
+    set_pure_dp(getattr(cfg, "pure_dp", False))
+    return _shard_tree(mesh, opt)
+
+
+def batch_shardings(cfg, mesh: Mesh, batch: Dict) -> PyTree:
+    set_pure_dp(getattr(cfg, "pure_dp", False))
+    dp = _role_axes(mesh, "dp")
+
+    def one(leaf):
+        spec = P(*([dp] + [None] * (leaf.ndim - 1))) if leaf.ndim else P()
+        return NamedSharding(mesh, sanitize(mesh, spec, leaf.shape))
+    return jax.tree.map(one, batch)
+
+
+def cache_shardings(cfg, mesh: Mesh, cache: PyTree) -> PyTree:
+    """KV caches: batch dim over DP, head dim (when present) over TP."""
+    set_pure_dp(getattr(cfg, "pure_dp", False))
+    return _shard_tree(mesh, cache)

@@ -6,10 +6,39 @@ prefix_sum   the paper's §6 scan (VMEM, 2h-3 vector passes)
 window_attn  the technique transferred to LM local attention
 
 Each kernel has a pure-jnp oracle in ref.py and a jit wrapper in ops.py.
+
+The interaction kernels are wired into the plan/execute front door
+(``repro.core.api``): importing this package registers them as the
+``"pallas"`` backend under the same strategy names as their pure-JAX
+oracles, so
+
+    plan(domain, kernel, positions=pos, strategy="xpencil",
+         backend="pallas").execute(ParticleState(pos))
+
+runs the Pallas X-pencil kernel (natively on TPU, interpret mode elsewhere)
+through exactly the API users already select strategies with.
 """
 
+from ..core.api import InteractionPlan, ParticleState, register_backend
+from ..core.binning import CellBins
 from .ops import (allin_interactions, prefix_sum, window_attention,
                   xpencil_interactions)
 
 __all__ = ["allin_interactions", "prefix_sum", "window_attention",
            "xpencil_interactions"]
+
+
+# -- plan/execute backend registration (normalized signature) ---------------
+
+@register_backend("pallas", "xpencil")
+def _pallas_xpencil(plan: InteractionPlan, bins: CellBins,
+                    state: ParticleState):
+    return xpencil_interactions(plan.domain, bins, plan.kernel,
+                                interpret=plan.interpret)
+
+
+@register_backend("pallas", "allin")
+def _pallas_allin(plan: InteractionPlan, bins: CellBins,
+                  state: ParticleState):
+    return allin_interactions(plan.domain, bins, plan.kernel, plan.box,
+                              interpret=plan.interpret)

@@ -112,7 +112,7 @@ def allin_forces(planes: dict, slot_id: Array, *, box: Tuple[int, int, int],
     assert nx % bx == 0 and ny % by == 0 and nz % bz == 0, (nx, ny, nz, box)
     gz, gy, gx = nz // bz, ny // by, nx // bx
 
-    any_spec = pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY)
+    any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
     out_block = pl.BlockSpec((bz, by, bx * m_c), lambda z, y, xk: (z, y, xk))
     out_shape = jax.ShapeDtypeStruct((nz, ny, nx * m_c), x.dtype)
     scratch = [pltpu.VMEM((bz + 2, by + 2, (bx + 2) * m_c), x.dtype)

@@ -13,9 +13,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core.binning import CellBins, gather_to_particles
+from ..core.binning import CellBins, dense_to_particles
 from ..core.domain import Domain
-from ..core.engine import _interior_to_padded
 from ..core.interactions import PairKernel
 from .allin import allin_forces
 from .prefix_sum import prefix_sum as _prefix_sum
@@ -53,13 +52,7 @@ def allin_interactions(domain: Domain, bins: CellBins, kernel: PairKernel,
 
 
 def _to_particles(domain, bins, fx, fy, fz, pot):
-    nx, ny, nz = domain.ncells
-    outs = []
-    for plane in (fx, fy, fz, pot):
-        shaped = plane.reshape(nz, ny, nx, bins.m_c)
-        outs.append(gather_to_particles(
-            bins, _interior_to_padded(domain, shaped, bins.m_c)))
-    return jnp.stack(outs[:3], axis=-1), outs[3]
+    return dense_to_particles(domain, bins, fx, fy, fz, pot)
 
 
 def prefix_sum(x: Array, interpret: Optional[bool] = None) -> Array:

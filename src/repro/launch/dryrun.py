@@ -78,9 +78,9 @@ def lower_cell(cfg: ModelConfig, shape_name: str, mesh,
     n_dev = mesh.size
     SH.set_pure_dp(cfg.pure_dp)
 
-    # in_shardings are explicit NamedShardings; the abstract-mesh context is
-    # what lets the in-model ``constrain`` calls resolve role specs.
-    with jax.sharding.use_abstract_mesh(mesh.abstract_mesh):
+    # in_shardings are explicit NamedShardings; the mesh context is what
+    # lets the in-model ``constrain`` calls resolve role specs.
+    with SH.use_mesh(mesh):
         if shape.kind == "train":
             params = _param_structs(cfg)
             opt_cfg = AdamConfig(moment_dtype=cfg.moment_dtype)

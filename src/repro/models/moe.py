@@ -50,8 +50,8 @@ def moe_capacity(n_tokens: int, n_experts: int, top_k: int,
 
 def _ep(n_experts: int) -> bool:
     """True when the ambient mesh can shard the expert dim (EP)."""
-    import jax
-    mesh = jax.sharding.get_abstract_mesh()
+    from ..dist.sharding import current_mesh
+    mesh = current_mesh()
     if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
         return False
     return n_experts % mesh.shape["model"] == 0
@@ -59,8 +59,8 @@ def _ep(n_experts: int) -> bool:
 
 def _dp_groups() -> int:
     """Number of data-parallel shards in the ambient mesh (1 when unset)."""
-    import jax as _jax
-    mesh = _jax.sharding.get_abstract_mesh()
+    from ..dist.sharding import current_mesh
+    mesh = current_mesh()
     if mesh is None:
         return 1
     g = 1

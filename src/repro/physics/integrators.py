@@ -1,17 +1,31 @@
-"""Time integrators driving the cell-list engine (MD/SPH substrate)."""
+"""Time integrators driving the interaction engine (MD/SPH substrate).
+
+Ported to the plan/execute API: every entry point accepts either an
+:class:`~repro.core.api.InteractionPlan` (the front door) or the legacy
+``CellListEngine`` shim — both expose the same ``(positions) -> (forces,
+potential)`` hot path under jit.
+"""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Tuple
+from typing import Callable, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
+from ..core.api import InteractionPlan, ParticleState
 from ..core.domain import Domain
 from ..core.engine import CellListEngine
 
 Array = jnp.ndarray
+Engine = Union[InteractionPlan, CellListEngine]
+
+
+def _forces_fn(engine: Engine) -> Callable[[Array], Tuple[Array, Array]]:
+    if isinstance(engine, InteractionPlan):
+        return lambda pos: engine.execute(ParticleState(pos))
+    return engine.compute
 
 
 @jax.tree_util.register_dataclass
@@ -24,11 +38,11 @@ class MDState:
     step: Array        # scalar int32
 
 
-def init_state(engine: CellListEngine, positions: Array,
+def init_state(engine: Engine, positions: Array,
                velocities: Array | None = None) -> MDState:
     if velocities is None:
         velocities = jnp.zeros_like(positions)
-    forces, pot = engine.compute(positions)
+    forces, pot = _forces_fn(engine)(positions)
     return MDState(positions, velocities, forces, pot,
                    jnp.zeros((), jnp.int32))
 
@@ -41,35 +55,37 @@ def _wrap(domain: Domain, positions: Array) -> Array:
     return jnp.where(per, jnp.mod(positions, box), positions)
 
 
-def velocity_verlet(engine: CellListEngine, dt: float, mass: float = 1.0
+def velocity_verlet(engine: Engine, dt: float, mass: float = 1.0
                     ) -> Callable[[MDState], MDState]:
     """Symplectic velocity-Verlet step. One force evaluation per step."""
     inv_m = 1.0 / mass
+    compute = _forces_fn(engine)
 
     def step(state: MDState) -> MDState:
         v_half = state.velocities + (0.5 * dt * inv_m) * state.forces
         pos = _wrap(engine.domain, state.positions + dt * v_half)
-        forces, pot = engine.compute(pos)
+        forces, pot = compute(pos)
         vel = v_half + (0.5 * dt * inv_m) * forces
         return MDState(pos, vel, forces, pot, state.step + 1)
 
     return step
 
 
-def leapfrog(engine: CellListEngine, dt: float, mass: float = 1.0
+def leapfrog(engine: Engine, dt: float, mass: float = 1.0
              ) -> Callable[[MDState], MDState]:
     inv_m = 1.0 / mass
+    compute = _forces_fn(engine)
 
     def step(state: MDState) -> MDState:
         vel = state.velocities + dt * inv_m * state.forces
         pos = _wrap(engine.domain, state.positions + dt * vel)
-        forces, pot = engine.compute(pos)
+        forces, pot = compute(pos)
         return MDState(pos, vel, forces, pot, state.step + 1)
 
     return step
 
 
-def run(engine: CellListEngine, state: MDState, n_steps: int, dt: float,
+def run(engine: Engine, state: MDState, n_steps: int, dt: float,
         mass: float = 1.0, integrator: str = "velocity_verlet",
         ) -> Tuple[MDState, dict]:
     """Run ``n_steps`` under jit (lax.scan); returns final state + traces."""

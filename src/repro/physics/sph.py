@@ -1,10 +1,11 @@
-"""Weakly-compressible SPH on top of the cell-list engine.
+"""Weakly-compressible SPH on top of the plan/execute interaction API.
 
 The paper's §8 motivation: SPH uses ~30-40 neighbors per particle — exactly
 the few-particles-per-cell regime the X-pencil strategy targets. This module
 is a minimal WCSPH pipeline (density summation -> Tait EOS pressure ->
-symmetric pressure force + artificial viscosity) whose neighbor loops all run
-through the same strategies as the LJ benchmarks.
+symmetric pressure force + artificial viscosity) whose neighbor loops all
+run through ``plan(...).execute(...)`` — so any strategy *and* backend
+(reference or Pallas) serves the SPH sums.
 """
 
 from __future__ import annotations
@@ -15,10 +16,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import strategies as S
-from ..core.binning import bin_particles, gather_to_particles
+from ..core.api import ParticleState, plan
 from ..core.domain import Domain
-from ..core.engine import _interior_to_padded
 from ..core.interactions import PairKernel, make_sph_density
 
 Array = jnp.ndarray
@@ -40,18 +39,12 @@ class SPHParams:
 
 def density(domain: Domain, positions: Array, params: SPHParams,
             m_c: int, strategy: str = "xpencil",
-            batch_size: int = 64) -> Array:
+            batch_size: int = 64, backend: str = "reference") -> Array:
     """rho_i = m * sum_j W(r_ij) (self term included analytically)."""
-    kern = make_sph_density(params.h)
-    bins = bin_particles(domain, positions, m_c=m_c)
-    if strategy == "par_part":
-        _, _, _, w = S.par_part(domain, bins, positions, kern, batch_size)
-    else:
-        fn = S.STRATEGIES[strategy]
-        _, _, _, wplane = fn(domain, bins, kern, batch_size=batch_size)
-        w = gather_to_particles(
-            bins, _interior_to_padded(domain, wplane, m_c))
-    w_self = kern.potential(jnp.zeros_like(w))
+    p = plan(domain, make_sph_density(params.h), m_c=m_c, strategy=strategy,
+             backend=backend, batch_size=batch_size)
+    _, w = p.execute(ParticleState(positions))
+    w_self = p.kernel.potential(jnp.zeros_like(w))
     return params.mass * (w + w_self)
 
 
@@ -66,9 +59,9 @@ def make_pressure_kernel(params: SPHParams, rho_bar: float,
     """Mean-field symmetric pressure force kernel.
 
     Full SPH needs per-pair (p_i/rho_i^2 + p_j/rho_j^2); carrying per-slot
-    fields through the engine is supported (binning accepts extra fields) but
-    the demo uses the mean-field closure so the same central-force contract
-    as LJ applies. grad W comes from the cubic-spline coeff channel.
+    fields through the engine is supported (ParticleState.fields) but the
+    demo uses the mean-field closure so the same central-force contract as
+    LJ applies. grad W comes from the cubic-spline coeff channel.
     """
     base = make_sph_density(params.h)
     scale = -params.mass * 2.0 * p_bar / max(rho_bar, 1e-9) ** 2
@@ -79,23 +72,22 @@ def make_pressure_kernel(params: SPHParams, rho_bar: float,
     def potential(r2):
         return base.potential(r2)
 
-    return PairKernel("sph_pressure", coeff, potential, flops=24)
+    return PairKernel("sph_pressure", coeff, potential, flops=24,
+                      static_params=(params.h, params.mass, rho_bar, p_bar))
 
 
 def sph_step(domain: Domain, positions: Array, velocities: Array,
              params: SPHParams, m_c: int, dt: float,
-             strategy: str = "xpencil") -> Tuple[Array, Array, Array]:
+             strategy: str = "xpencil",
+             backend: str = "reference") -> Tuple[Array, Array, Array]:
     """One WCSPH step: density -> EOS -> pressure accel -> symplectic Euler."""
-    rho = density(domain, positions, params, m_c, strategy)
+    rho = density(domain, positions, params, m_c, strategy,
+                  backend=backend)
     p = pressure(rho, params)
     kern = make_pressure_kernel(params, float(params.rho0), 1.0)
-    # evaluate the force with the engine strategies; p_bar folded per-step
-    bins = bin_particles(domain, positions, m_c=m_c)
-    fn = S.STRATEGIES[strategy]
-    fx, fy, fz, _ = fn(domain, bins, kern, batch_size=64)
-    f = jnp.stack([
-        gather_to_particles(bins, _interior_to_padded(domain, c, m_c))
-        for c in (fx, fy, fz)], axis=-1)
+    # evaluate the force with the same plan machinery; p_bar folded per-step
+    fplan = plan(domain, kern, m_c=m_c, strategy=strategy, backend=backend)
+    f, _ = fplan.execute(ParticleState(positions))
     accel = f * (jnp.mean(p) / params.rho0)
     vel = velocities + dt * accel
     pos = positions + dt * vel

@@ -96,7 +96,7 @@ def test_spmd_train_step_on_debug_mesh():
         params_s = jax.device_put(params, p_sh)
         opt_s = jax.device_put(opt, o_sh)
         batch_s = jax.device_put(batch, b_sh)
-        with jax.sharding.use_abstract_mesh(mesh.abstract_mesh):
+        with SH.use_mesh(mesh):   # resolves in-model constrain role specs
             step = jax.jit(make_train_step(cfg, opt_cfg),
                            in_shardings=(p_sh, o_sh, b_sh))
             m1, p1, o1 = step(params_s, opt_s, batch_s)

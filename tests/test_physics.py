@@ -18,6 +18,13 @@ def md_setup():
     kern = make_lennard_jones(sigma=0.25, eps=1.0, softening=1e-4)
     eng = CellListEngine(dom, kern, m_c=max(16, suggest_m_c(dom, pos)),
                          strategy="xpencil")
+    # relax overlaps first (uniform-random placement puts particles inside
+    # the LJ core; conservation only holds on a physical trajectory) —
+    # clipped-force descent, same recipe as examples/md_lennard_jones.py
+    box = jnp.asarray(dom.box)
+    for _ in range(120):
+        f, _ = eng.compute(pos)
+        pos = jnp.mod(pos + jnp.clip(f, -1.0, 1.0) * 2e-3, box)
     vel = 0.05 * jax.random.normal(jax.random.PRNGKey(1), pos.shape)
     state = init_state(eng, pos, vel)
     return dom, eng, state

@@ -1,0 +1,205 @@
+"""Plan/execute API: backend parity, overflow->replan, auto strategy, shims."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CellListEngine, Domain, InteractionPlan,
+                        ParticleState, backend_matrix, choose_strategy,
+                        compute_interactions, make_lennard_jones,
+                        make_low_flop, plan, suggest_m_c)
+from repro.core import traffic
+
+
+def _case(division, n, seed=0, periodic=False):
+    dom = Domain.cubic(division, cutoff=1.0, periodic=periodic)
+    pos = dom.sample_uniform(jax.random.PRNGKey(seed), n)
+    return dom, pos, suggest_m_c(dom, pos)
+
+
+# ---------------------------------------------------------------------------
+# backend parity: pallas == reference == naive oracle through plan.execute
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["xpencil", "allin"])
+@pytest.mark.parametrize("division,n", [(3, 200), (4, 500)])
+def test_pallas_backend_parity(strategy, division, n):
+    dom, pos, m_c = _case(division, n)
+    kern = make_lennard_jones()
+    state = ParticleState(pos)
+    f_oracle, p_oracle = plan(dom, kern, m_c=m_c,
+                              strategy="naive_n2").execute(state)
+    f_ref, p_ref = plan(dom, kern, m_c=m_c, strategy=strategy,
+                        backend="reference").execute(state)
+    f_pl, p_pl = plan(dom, kern, m_c=m_c, strategy=strategy,
+                      backend="pallas", interpret=True).execute(state)
+    for f, p in ((f_ref, p_ref), (f_pl, p_pl)):
+        np.testing.assert_allclose(np.asarray(f), np.asarray(f_oracle),
+                                   rtol=3e-4, atol=3e-4)
+        np.testing.assert_allclose(np.asarray(p), np.asarray(p_oracle),
+                                   rtol=3e-4, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(f_pl), np.asarray(f_ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("strategy", ["xpencil", "allin"])
+def test_pallas_backend_parity_periodic(strategy):
+    dom, pos, m_c = _case(4, 300, seed=3, periodic=True)
+    kern = make_low_flop()
+    state = ParticleState(pos)
+    f_ref, _ = plan(dom, kern, m_c=m_c, strategy=strategy).execute(state)
+    f_pl, _ = plan(dom, kern, m_c=m_c, strategy=strategy,
+                   backend="pallas", interpret=True).execute(state)
+    np.testing.assert_allclose(np.asarray(f_pl), np.asarray(f_ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_backend_matrix_covers_paper_kernels():
+    m = backend_matrix()
+    assert set(m["pallas"]) == {"xpencil", "allin"}
+    assert set(m["reference"]) == {"par_part", "cell_dense", "xpencil",
+                                   "allin"}
+
+
+def test_unknown_backend_fails_at_plan_time():
+    dom = Domain.cubic(3)
+    with pytest.raises(ValueError, match="no backend"):
+        plan(dom, m_c=8, strategy="xpencil", backend="cuda")
+    with pytest.raises(ValueError, match="unknown strategy"):
+        plan(dom, m_c=8, strategy="ypencil")
+
+
+# ---------------------------------------------------------------------------
+# overflow -> replan
+# ---------------------------------------------------------------------------
+
+def test_overflow_detection_and_replan():
+    dom, pos, _ = _case(4, 400, seed=1)
+    # cluster a quarter of the particles into one corner cell
+    clustered = jnp.concatenate([pos[:100] * 0.04 + 0.3, pos[100:]])
+    state = ParticleState(clustered)
+    p0 = plan(dom, make_lennard_jones(), m_c=8, strategy="xpencil")
+    assert p0.check_overflow(state)
+
+    (forces, pot), p1 = p0.execute_or_replan(state)
+    assert p1.m_c > p0.m_c
+    assert p1.m_c % 8 == 0                     # sublane alignment preserved
+    assert not p1.check_overflow(state)
+    f_oracle, _ = plan(dom, make_lennard_jones(), m_c=p1.m_c,
+                       strategy="naive_n2").execute(state)
+    np.testing.assert_allclose(np.asarray(forces), np.asarray(f_oracle),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_no_replan_when_bound_holds():
+    dom, pos, m_c = _case(3, 150)
+    p0 = plan(dom, make_lennard_jones(), m_c=m_c, strategy="xpencil")
+    state = ParticleState(pos)
+    assert not p0.check_overflow(state)
+    _, p1 = p0.execute_or_replan(state)
+    assert p1 is p0                            # same plan object: no retrace
+
+
+def test_replan_resizes_allin_subbox():
+    dom, pos, _ = _case(4, 300)
+    clustered = jnp.concatenate([pos[:150] * 0.04 + 0.3, pos[150:]])
+    state = ParticleState(clustered)
+    p0 = plan(dom, make_lennard_jones(), m_c=8, strategy="allin")
+    (forces, _), p1 = p0.execute_or_replan(state)
+    assert p1.m_c > 8 and p1.box is not None
+    f_oracle, _ = plan(dom, make_lennard_jones(), m_c=p1.m_c,
+                       strategy="naive_n2").execute(state)
+    np.testing.assert_allclose(np.asarray(forces), np.asarray(f_oracle),
+                               rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# strategy="auto" (traffic-model driven)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("division,ppc", [(4, 2), (6, 10), (8, 1)])
+def test_auto_strategy_follows_cost_model(division, ppc):
+    dom = Domain.cubic(division, cutoff=1.0)
+    n = division ** 3 * ppc
+    pos = dom.sample_uniform(jax.random.PRNGKey(0), n)
+    p = plan(dom, make_lennard_jones(), positions=pos, strategy="auto")
+    m_c = suggest_m_c(dom, pos)
+    reports = traffic.model(dom, m_c, n / dom.n_cells)
+    best = min(reports.values(),
+               key=lambda r: r.hbm_bytes_per_interaction)
+    assert p.strategy == best.strategy
+    # and the auto plan actually runs + matches the oracle
+    f, _ = p.execute(ParticleState(pos))
+    f_oracle, _ = plan(dom, make_lennard_jones(), m_c=p.m_c,
+                       strategy="naive_n2").execute(ParticleState(pos))
+    np.testing.assert_allclose(np.asarray(f), np.asarray(f_oracle),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_auto_needs_positions():
+    with pytest.raises(ValueError, match="auto"):
+        plan(Domain.cubic(4), m_c=8, strategy="auto")
+
+
+def test_choose_strategy_is_deterministic():
+    dom = Domain.cubic(8, cutoff=1.0)
+    assert choose_strategy(dom, 8, 10.0) == choose_strategy(dom, 8, 10.0)
+
+
+# ---------------------------------------------------------------------------
+# static caching / shims
+# ---------------------------------------------------------------------------
+
+def test_plans_are_hashable_and_cache_by_value():
+    dom = Domain.cubic(3)
+    p1 = plan(dom, make_lennard_jones(), m_c=8, strategy="xpencil")
+    p2 = plan(Domain.cubic(3), make_lennard_jones(), m_c=8,
+              strategy="xpencil")
+    assert p1 == p2 and hash(p1) == hash(p2)
+    assert hash(make_lennard_jones()) == hash(make_lennard_jones())
+    assert make_lennard_jones(sigma=0.3) != make_lennard_jones()
+
+
+def test_particle_state_carries_fields_through_binning():
+    dom, pos, m_c = _case(3, 100)
+    state = ParticleState(pos, {"mass": jnp.ones(pos.shape[0])})
+    p = plan(dom, make_lennard_jones(), m_c=m_c, strategy="xpencil")
+    bins = p.bin(state)
+    assert "mass" in bins.planes
+    f, _ = p.execute(state)
+    f_ref, _ = p.execute(ParticleState(pos))
+    np.testing.assert_allclose(np.asarray(f), np.asarray(f_ref))
+
+
+def test_engine_shim_delegates_to_plan():
+    dom, pos, m_c = _case(3, 150)
+    eng = CellListEngine(dom, m_c=m_c, strategy="xpencil")
+    assert isinstance(eng.plan, InteractionPlan)
+    f_eng, p_eng = eng.compute(pos)
+    f_plan, p_plan = eng.plan.execute(ParticleState(pos))
+    np.testing.assert_allclose(np.asarray(f_eng), np.asarray(f_plan))
+    f_fn, _ = compute_interactions(dom, pos, m_c=m_c, strategy="xpencil")
+    np.testing.assert_allclose(np.asarray(f_fn), np.asarray(f_plan))
+
+
+def test_engine_shim_pallas_backend():
+    dom, pos, m_c = _case(3, 150)
+    eng = CellListEngine(dom, m_c=m_c, strategy="xpencil", backend="pallas")
+    f, _ = eng.compute(pos)
+    f_ref, _ = CellListEngine(dom, m_c=m_c, strategy="xpencil").compute(pos)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(f_ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_suggest_m_c_always_sublane_aligned():
+    # regression: values <= align used to be returned unrounded, violating
+    # the alignment assumption documented in kernels/xpencil.py
+    dom = Domain.cubic(6, cutoff=1.0)
+    pos = dom.sample_uniform(jax.random.PRNGKey(0), 40)   # sparse: tiny max
+    m_c = suggest_m_c(dom, pos)
+    assert m_c % 8 == 0 and m_c >= 8
+    pos2 = dom.sample_uniform(jax.random.PRNGKey(0), 4000)
+    assert suggest_m_c(dom, pos2) % 8 == 0
