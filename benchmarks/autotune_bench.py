@@ -1,0 +1,82 @@
+"""Autotune benchmark: does the stopwatch beat the traffic model?
+
+For each paper case this times every candidate the tuner keeps, then
+reports the analytical model's pick (what ``strategy="auto"`` would run),
+the measured winner (what ``strategy="autotune"`` runs), and the *regret*
+of trusting the model — t(model pick) / t(measured best). Regret 1.0 means
+the model named the winner; the paper's Fig. 6/7 point is that it cannot
+be trusted to on every hardware x fill-ratio cell.
+
+    PYTHONPATH=src python -m benchmarks.autotune_bench [--json PATH]
+
+``--json PATH`` emits the per-candidate timings as BENCH_*.json records.
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import List, Optional, Tuple
+
+import jax
+
+from repro.core import Domain, choose_strategy, make_lennard_jones, tune
+from repro.core.engine import suggest_m_c
+
+from .common import bench_record, write_bench_json
+
+DEFAULT_CASES: List[Tuple[int, int]] = [(2, 4), (4, 2), (4, 10), (6, 4)]
+
+
+def run(cases: List[Tuple[int, int]] = DEFAULT_CASES, csv: bool = True,
+        json_path: Optional[str] = None, top_k: int = 8,
+        record_sink: Optional[List[dict]] = None) -> List[dict]:
+    rows = []
+    records = []
+    if csv:
+        print("name,us_per_call,derived")
+    for division, ppc in cases:
+        dom = Domain.cubic(division, cutoff=1.0)
+        n = division ** 3 * ppc
+        pos = dom.sample_uniform(jax.random.PRNGKey(0), n)
+        res = tune(dom, make_lennard_jones(), pos, top_k=top_k,
+                   use_cache=False)
+        model_pick = choose_strategy(dom, suggest_m_c(dom, pos),
+                                     n / dom.n_cells)
+        best_s = res.timings[res.candidate]
+        model_best = min((s for c, s in res.timings.items()
+                          if c.strategy == model_pick), default=float("nan"))
+        regret = model_best / best_s
+        case = f"autotune/d{division}_p{ppc}"
+        for cand, secs in sorted(res.timings.items(), key=lambda kv: kv[1]):
+            records.append(bench_record(case, cand.strategy, cand.backend,
+                                        secs, res.reps[cand]))
+        row = {"division": division, "ppc": ppc,
+               "measured_winner": res.candidate.strategy,
+               "model_pick": model_pick, "best_s": best_s,
+               "model_pick_best_s": model_best, "regret": regret,
+               "n_timed": len(res.timings), "n_pruned": len(res.pruned)}
+        rows.append(row)
+        if csv:
+            print(f"{case},{best_s * 1e6:.1f},"
+                  f"winner={res.candidate.strategy};model={model_pick};"
+                  f"regret={regret:.3f};timed={len(res.timings)};"
+                  f"pruned={len(res.pruned)}")
+    if json_path:
+        write_bench_json(json_path, records)
+    if record_sink is not None:
+        record_sink.extend(records)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write BENCH_*.json perf records to PATH")
+    ap.add_argument("--top-k", type=int, default=8,
+                    help="candidates surviving model pruning")
+    args = ap.parse_args()
+    run(json_path=args.json, top_k=args.top_k)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,32 +10,36 @@ interpret mode; timing interpret mode would benchmark the interpreter).
 
 from __future__ import annotations
 
-import time
-from typing import Callable, Dict, Tuple
+import json
+import pathlib
+from typing import List
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import (CellListEngine, Domain, ParticleState,
                         make_lennard_jones, plan, suggest_m_c)
+# The stopwatch moved into the library so the measured autotuner
+# (repro.core.autotune) shares it; re-exported here for benchmark code.
+from repro.core.timing import time_fn  # noqa: F401
 
 
-def time_fn(fn: Callable, *args, reps: int | None = None,
-            budget_s: float = 3.0) -> Tuple[float, int]:
-    """-> (mean_seconds, reps). First call compiles (excluded)."""
-    out = fn(*args)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    out = fn(*args)
-    jax.block_until_ready(out)
-    once = time.perf_counter() - t0
-    if reps is None:
-        reps = max(2, min(50, int(budget_s / max(once, 1e-6))))
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps, reps
+def bench_record(case: str, strategy: str, backend: str, seconds: float,
+                 reps: int) -> dict:
+    """One BENCH_*.json perf record — the schema the perf trajectory
+    accumulates across PRs (CI uploads these files as artifacts)."""
+    return {"case": case, "strategy": strategy, "backend": backend,
+            "us_per_call": seconds * 1e6, "reps": reps,
+            "platform": jax.default_backend()}
+
+
+def write_bench_json(path: str | pathlib.Path, records: List[dict]) -> None:
+    """Write perf records as a JSON array (one BENCH_*.json file)."""
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    with open(p, "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"wrote {len(records)} perf records to {p}")
 
 
 def paper_case(division: int, ppc: int, seed: int = 0,

@@ -5,14 +5,20 @@ Paper grid: box division d in {2,4,8,16,32} x avg particles/cell in
 speedup = t(par_part) / t(strategy); the x-axis is measured interactions per
 particle. CPU sizing note: the largest cases are capped unless --full
 (1-core container; the paper's trend region is fully covered).
+
+``--json PATH`` additionally emits the timings as BENCH_*.json perf records
+(case, strategy, backend, us_per_call, reps, platform).
 """
 
 from __future__ import annotations
 
 import argparse
-from typing import List
+import math
+import sys
+from typing import List, Optional
 
-from .common import interactions_per_particle, paper_plan, time_fn
+from .common import (bench_record, interactions_per_particle, paper_plan,
+                     time_fn, write_bench_json)
 
 STRATEGIES = ["par_part", "cell_dense", "xpencil", "allin"]
 
@@ -22,38 +28,54 @@ DEFAULT_GRID = [(2, 1), (4, 1), (8, 1), (16, 1), (32, 1),
 FULL_GRID = [(d, p) for p in (1, 10, 100) for d in (2, 4, 8, 16, 32)]
 
 
-def run(full: bool = False, csv: bool = True,
-        backend: str = "reference") -> List[dict]:
+def run(full: bool = False, csv: bool = True, backend: str = "reference",
+        json_path: Optional[str] = None,
+        record_sink: Optional[List[dict]] = None) -> List[dict]:
     grid = FULL_GRID if full else DEFAULT_GRID
     rows = []
+    records = []
     if csv:
         print("name,us_per_call,derived")
     for division, ppc in grid:
         times = {}
+        reps = {}
+        backends = {strat: backend if strat in ("xpencil", "allin")
+                    else "reference" for strat in STRATEGIES}
         for strat in STRATEGIES:
+            strat_backend = backends[strat]
             try:
-                strat_backend = backend if strat in ("xpencil", "allin") \
-                    else "reference"
                 _, state, _, execute = paper_plan(division, ppc,
                                                   strategy=strat,
                                                   backend=strat_backend)
-                secs, reps = time_fn(execute, state)
-                times[strat] = secs
-            except Exception:   # allin needs >= 27 cells etc.
+                times[strat], reps[strat] = time_fn(execute, state)
+            except Exception as e:   # allin needs >= 27 cells etc. — but a
+                # real failure (bad backend registration, shape bug) must
+                # not silently become a NaN row:
+                print(f"fig6: strategy {strat!r} (backend {strat_backend!r})"
+                      f" failed on d{division}_p{ppc}: {e!r}",
+                      file=sys.stderr)
                 times[strat] = float("nan")
         ipp = interactions_per_particle(division, ppc)
         base = times["par_part"]
         for strat in STRATEGIES:
-            speedup = base / times[strat] if times[strat] == times[strat] \
-                else float("nan")
+            failed = math.isnan(times[strat])
+            speedup = float("nan") if failed else base / times[strat]
             row = {"division": division, "ppc": ppc, "strategy": strat,
                    "seconds": times[strat], "speedup_vs_par_part": speedup,
                    "interactions_per_particle": ipp}
             rows.append(row)
+            if not failed:
+                records.append(bench_record(
+                    f"fig6/d{division}_p{ppc}", strat, backends[strat],
+                    times[strat], reps[strat]))
             if csv:
                 print(f"fig6/{strat}/d{division}_p{ppc},"
                       f"{times[strat] * 1e6:.1f},"
                       f"speedup={speedup:.3f};ipp={ipp:.1f}")
+    if json_path:
+        write_bench_json(json_path, records)
+    if record_sink is not None:
+        record_sink.extend(records)
     return rows
 
 
@@ -65,8 +87,10 @@ def main():
                     help="pallas times the TPU kernels (native on TPU; "
                          "interpret mode elsewhere benchmarks the "
                          "interpreter, so keep reference on CPU)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write BENCH_*.json perf records to PATH")
     args = ap.parse_args()
-    run(full=args.full, backend=args.backend)
+    run(full=args.full, backend=args.backend, json_path=args.json)
 
 
 if __name__ == "__main__":

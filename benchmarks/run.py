@@ -1,14 +1,20 @@
 """Benchmark runner: one section per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--full] [--skip-timing]``
-prints ``name,us_per_call,derived`` CSV blocks:
+``PYTHONPATH=src python -m benchmarks.run [--full] [--skip-timing]
+[--json PATH]`` prints ``name,us_per_call,derived`` CSV blocks:
 
-  fig6/*     strategy speedups vs Par-Part (paper Fig. 6)
-  table1/*   PPNL vs X-pencil seconds (paper Table 1)
-  fig8/*     arithmetic-intensity sweep (paper Fig. 8)
-  prefix/*   §6 prefix-sum op/barrier counts + timing
-  traffic/*  Fig. 7 analogue (TPU staging-traffic model)
-  dryrun/*   LM roofline terms from the multi-pod dry-run artifacts
+  fig6/*      strategy speedups vs Par-Part (paper Fig. 6)
+  table1/*    PPNL vs X-pencil seconds (paper Table 1)
+  fig8/*      arithmetic-intensity sweep (paper Fig. 8)
+  prefix/*    §6 prefix-sum op/barrier counts + timing
+  traffic/*   Fig. 7 analogue (TPU staging-traffic model)
+  autotune/*  measured winner vs the traffic model's pick
+  dryrun/*    LM roofline terms from the multi-pod dry-run artifacts
+
+``--json PATH`` additionally writes every timed section's perf records
+(case, strategy, backend, us_per_call, reps, platform) as one BENCH_*.json
+file — the per-commit record the perf trajectory accumulates (CI uploads it
+as an artifact).
 """
 
 from __future__ import annotations
@@ -22,10 +28,12 @@ def main() -> None:
                     help="the complete paper grid (slow on 1 CPU core)")
     ap.add_argument("--skip-timing", action="store_true",
                     help="only the analytical/artifact-reading sections")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write all perf records to one BENCH_*.json file")
     args = ap.parse_args()
 
-    from . import (fig6_speedup, fig8_flop_sweep, lm_roofline, prefix_bench,
-                   table1_timing, traffic_model)
+    from . import (autotune_bench, fig6_speedup, fig8_flop_sweep,
+                   lm_roofline, prefix_bench, table1_timing, traffic_model)
 
     print("# traffic model (paper Fig. 7 analogue)", flush=True)
     traffic_model.run()
@@ -33,15 +41,27 @@ def main() -> None:
     lm_roofline.run()
     lm_roofline.run(sub="costrun")
     if args.skip_timing:
+        if args.json:
+            import sys
+            print("run: --skip-timing produces no perf records; writing an "
+                  f"empty {args.json}", file=sys.stderr)
+            from .common import write_bench_json
+            write_bench_json(args.json, [])
         return
+    records: list = []
     print("# prefix sum (paper §6)", flush=True)
     prefix_bench.run()
     print("# fig6 speedups", flush=True)
-    fig6_speedup.run(full=args.full)
+    fig6_speedup.run(full=args.full, record_sink=records)
     print("# table1 PPNL vs X-pencil", flush=True)
-    table1_timing.run(full=args.full)
+    table1_timing.run(full=args.full, record_sink=records)
     print("# fig8 FLOP sweep", flush=True)
     fig8_flop_sweep.run()
+    print("# autotune: measured winner vs model pick", flush=True)
+    autotune_bench.run(record_sink=records)
+    if args.json:
+        from .common import write_bench_json
+        write_bench_json(args.json, records)
 
 
 if __name__ == "__main__":

@@ -8,8 +8,10 @@ format, with the measured interactions-per-particle first column.
 from __future__ import annotations
 
 import argparse
+from typing import Optional
 
-from .common import interactions_per_particle, paper_plan, time_fn
+from .common import (bench_record, interactions_per_particle, paper_plan,
+                     time_fn, write_bench_json)
 
 DEFAULT_GRID = [(2, 1), (4, 1), (8, 1), (16, 1), (32, 1),
                 (2, 10), (4, 10), (8, 10), (16, 10),
@@ -17,23 +19,34 @@ DEFAULT_GRID = [(2, 1), (4, 1), (8, 1), (16, 1), (32, 1),
 FULL_GRID = [(d, p) for p in (1, 10, 100) for d in (2, 4, 8, 16, 32)]
 
 
-def run(full: bool = False, csv: bool = True, backend: str = "reference"):
+def run(full: bool = False, csv: bool = True, backend: str = "reference",
+        json_path: Optional[str] = None,
+        record_sink: Optional[list] = None):
     rows = []
+    records = []
     if csv:
         print("name,us_per_call,derived")
     for division, ppc in (FULL_GRID if full else DEFAULT_GRID):
         ipp = interactions_per_particle(division, ppc)
         _, state, _, ex_pp = paper_plan(division, ppc, strategy="par_part")
-        t_pp, _ = time_fn(ex_pp, state)
+        t_pp, r_pp = time_fn(ex_pp, state)
         _, _, _, ex_xp = paper_plan(division, ppc, strategy="xpencil",
                                     backend=backend)
-        t_xp, _ = time_fn(ex_xp, state)
+        t_xp, r_xp = time_fn(ex_xp, state)
         rows.append({"division": division, "ppc": ppc, "ipp": ipp,
                      "ppnl_s": t_pp, "xpencil_s": t_xp})
+        case = f"table1/d{division}_p{ppc}"
+        records.append(bench_record(case, "par_part", "reference",
+                                    t_pp, r_pp))
+        records.append(bench_record(case, "xpencil", backend, t_xp, r_xp))
         if csv:
             print(f"table1/d{division}_p{ppc},{t_pp * 1e6:.1f},"
                   f"ipp={ipp:.1f};ppnl_s={t_pp:.3e};xpencil_s={t_xp:.3e};"
                   f"ratio={t_pp / t_xp:.3f}")
+    if json_path:
+        write_bench_json(json_path, records)
+    if record_sink is not None:
+        record_sink.extend(records)
     return rows
 
 
@@ -42,8 +55,10 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--backend", default="reference",
                     choices=["reference", "pallas"])
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write BENCH_*.json perf records to PATH")
     args = ap.parse_args()
-    run(full=args.full, backend=args.backend)
+    run(full=args.full, backend=args.backend, json_path=args.json)
 
 
 if __name__ == "__main__":

@@ -9,7 +9,8 @@ and ``compute_interactions`` are compatibility shims over it.
 
 from .domain import Domain
 from .api import (InteractionPlan, ParticleState, backend_matrix,
-                  choose_strategy, plan, register_backend)
+                  choose_strategy, clear_executor_cache, dispatch_count,
+                  plan, register_backend)
 from .binning import (CellBins, bin_particles, dense_to_particles,
                       gather_to_particles, interior_to_padded)
 from .engine import CellListEngine, compute_interactions, suggest_m_c
@@ -28,13 +29,16 @@ from .prefix import (
     operation_counts,
     paper_prefix_sum,
 )
-from . import strategies, traffic
+from .timing import time_fn
+from . import autotune, strategies, traffic
+from .autotune import TuneResult, tune
 
 __all__ = [
     "Domain", "CellBins", "bin_particles", "gather_to_particles",
     "dense_to_particles", "interior_to_padded",
     "InteractionPlan", "ParticleState", "plan", "register_backend",
-    "backend_matrix", "choose_strategy",
+    "backend_matrix", "choose_strategy", "clear_executor_cache",
+    "dispatch_count", "tune", "TuneResult", "time_fn", "autotune",
     "CellListEngine", "compute_interactions", "suggest_m_c",
     "PairKernel", "make_gravity", "make_high_flop", "make_lennard_jones",
     "make_low_flop", "make_sph_density", "pair_contribution",

@@ -159,7 +159,21 @@ class InteractionPlan:
         trace per (plan, state structure). Total potential energy is
         ``0.5 * potential.sum()`` (each pair counted twice, the paper's
         convention)."""
+        _count_dispatch()
         return _executor(self, tuple(sorted(state.fields)))(state)
+
+    def execute_batch(self, states: ParticleState) -> Tuple[Array, Array]:
+        """Batched hot path: one jitted vmapped call over stacked states.
+
+        ``states`` holds B independent systems stacked on a leading axis —
+        positions ``(B, N, 3)``, each field ``(B, N)`` — all sharing this
+        plan's domain and ``m_c``. Binning and interaction run under one
+        ``vmap`` inside a single jit trace, so B small systems (the paper's
+        few-particles-per-cell regime) cost one dispatch instead of B.
+        Returns ``(forces (B, N, 3), potential (B, N))``, bit-identical to
+        executing each system separately."""
+        _count_dispatch()
+        return _batch_executor(self, tuple(sorted(states.fields)))(states)
 
     def __call__(self, state: ParticleState) -> Tuple[Array, Array]:
         return self.execute(state)
@@ -220,14 +234,32 @@ def plan(domain: Domain, kernel: Optional[PairKernel] = None, *,
       m_c: static max-particles-per-cell bound; measured from ``positions``
         with slack + sublane alignment when omitted.
       strategy: one of ``par_part | cell_dense | xpencil | allin |
-        naive_n2``, or ``"auto"`` to pick the minimum modelled HBM traffic
-        per interaction (``core.traffic``).
+        naive_n2``; ``"auto"`` to pick the minimum modelled HBM traffic
+        per interaction (``core.traffic``); or ``"autotune"`` to *measure*
+        candidate schedules on ``positions`` and return the empirically
+        fastest (``core.autotune``; winners persist in an on-disk cache).
       backend: ``"reference"`` (pure-JAX schedules) or ``"pallas"`` (TPU
-        kernels; interpret mode off-TPU).
+        kernels; interpret mode off-TPU). With ``strategy="autotune"``,
+        ``"all"`` defers to the tuner's platform default set (reference
+        everywhere, plus native Pallas on TPU).
       box: All-in-SM sub-box override; sized from the VMEM budget otherwise.
       interpret: force Pallas interpret mode (None = auto by platform).
     """
     kernel = kernel or make_lennard_jones()
+    if strategy == "autotune":
+        from . import autotune
+        if positions is None:
+            raise ValueError('strategy="autotune" needs positions (the '
+                             "tuner times real executions)")
+        backends = None if backend == "all" else (backend,)
+        # the caller's batch_size/box join the sweep as candidates rather
+        # than pinning it — the stopwatch gets the final word
+        batch_sizes = tuple(dict.fromkeys(
+            (batch_size, *autotune.DEFAULT_BATCH_SIZES)))
+        return autotune.tune(domain, kernel, positions, m_c=m_c,
+                             backends=backends, batch_sizes=batch_sizes,
+                             box=box, m_c_slack=m_c_slack,
+                             interpret=interpret).plan
     if m_c is None:
         if positions is None:
             raise ValueError("plan() needs either m_c or positions "
@@ -278,9 +310,24 @@ def _max_cell_count(domain: Domain, positions: Array) -> Array:
 # execution (jitted per plan)
 # --------------------------------------------------------------------------
 
-@functools.lru_cache(maxsize=None)
-def _executor(p: InteractionPlan, field_names: Tuple[str, ...]) -> Callable:
-    """One jitted executor per (plan, state structure)."""
+# Dispatch accounting: incremented once per execute/execute_batch call (i.e.
+# per jitted dispatch, not per traced system). Lets tests and benchmarks
+# assert that the batched path really amortizes dispatch — B systems through
+# ``execute_batch`` move this by 1, a Python loop moves it by B.
+_dispatches = 0
+
+
+def dispatch_count() -> int:
+    return _dispatches
+
+
+def _count_dispatch() -> None:
+    global _dispatches
+    _dispatches += 1
+
+
+def _impl(p: InteractionPlan) -> Callable:
+    """The traced executor body shared by the single and batched paths."""
 
     def impl(state: ParticleState) -> Tuple[Array, Array]:
         if p.strategy == "naive_n2":
@@ -290,7 +337,29 @@ def _executor(p: InteractionPlan, field_names: Tuple[str, ...]) -> Callable:
                              m_c=p.m_c)
         return get_backend(p.backend, p.strategy)(p, bins, state)
 
-    return jax.jit(impl)
+    return impl
+
+
+# Bounded LRU (not unbounded): the autotuner times throwaway candidate plans
+# by the dozen, and an unbounded cache would pin every one of their traces
+# (and their compiled executables) for the process lifetime.
+@functools.lru_cache(maxsize=128)
+def _executor(p: InteractionPlan, field_names: Tuple[str, ...]) -> Callable:
+    """One jitted executor per (plan, state structure)."""
+    return jax.jit(_impl(p))
+
+
+@functools.lru_cache(maxsize=32)
+def _batch_executor(p: InteractionPlan, field_names: Tuple[str, ...]
+                    ) -> Callable:
+    """One jitted executor per (plan, state structure) for stacked states."""
+    return jax.jit(jax.vmap(_impl(p)))
+
+
+def clear_executor_cache() -> None:
+    """Drop every cached executor trace (single and batched)."""
+    _executor.cache_clear()
+    _batch_executor.cache_clear()
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,404 @@
+"""Measured autotuner: pick schedules by stopwatch, not by model.
+
+The paper's central finding is that the winning schedule (X-pencil vs
+All-in-SM vs Par-Part) depends on hardware and fill ratio in ways an
+analytical model cannot fully predict — its own Fig. 6/7 results had to be
+*measured* on three GPUs. ``strategy="auto"`` trusts the ``core.traffic``
+HBM-bytes model alone; ``strategy="autotune"`` (this module) uses the model
+only to *prune* the candidate space, then times the survivors with the same
+compile-excluded stopwatch the benchmark figures use and returns the
+empirically fastest plan.
+
+    result = tune(domain, kernel, positions)        # enumerate -> prune ->
+    forces, pot = result.plan.execute(state)        #   time -> pick winner
+
+or through the front door::
+
+    p = plan(domain, kernel, positions=pos, strategy="autotune")
+
+Winners persist in an on-disk JSON cache keyed by (platform, grid shape,
+m_c, ppc bucket, kernel identity, backends, candidate-space digest), so
+re-tuning the same regime costs one dict lookup and zero timing runs. Point
+``REPRO_AUTOTUNE_CACHE`` at a directory to relocate the cache (tests use a
+tmpdir); delete the file to invalidate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+import json
+import math
+import os
+import pathlib
+import sys
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+
+from . import strategies as S
+from . import traffic
+from .api import (InteractionPlan, ParticleState, STRATEGY_NAMES,
+                  _allin_box, _max_cell_count, get_backend)
+from .domain import Domain
+from .interactions import PairKernel, make_lennard_jones
+from .timing import time_fn
+
+Array = jax.Array
+
+# Bump when the candidate space or cache schema changes: stale entries from
+# an older tuner are skipped (and overwritten), not misread.
+CACHE_VERSION = 1
+
+_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+_CACHE_FILE = "autotune_cache.json"
+
+DEFAULT_BATCH_SIZES = (32, 64, 128)
+DEFAULT_TOP_K = 8
+
+
+# --------------------------------------------------------------------------
+# candidates
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One point of the tuning space — exactly the static knobs of a plan."""
+
+    strategy: str
+    backend: str
+    batch_size: int
+    m_c: int
+    box: Optional[Tuple[int, int, int]] = None   # allin sub-box
+
+    def plan(self, domain: Domain, kernel: PairKernel,
+             interpret: Optional[bool] = None) -> InteractionPlan:
+        return InteractionPlan(domain=domain, kernel=kernel, m_c=self.m_c,
+                               strategy=self.strategy, backend=self.backend,
+                               batch_size=self.batch_size, box=self.box,
+                               interpret=interpret)
+
+    def to_json(self) -> dict:
+        return {"strategy": self.strategy, "backend": self.backend,
+                "batch_size": self.batch_size, "m_c": self.m_c,
+                "box": list(self.box) if self.box else None}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Candidate":
+        return cls(strategy=d["strategy"], backend=d["backend"],
+                   batch_size=int(d["batch_size"]), m_c=int(d["m_c"]),
+                   box=tuple(d["box"]) if d.get("box") else None)
+
+
+def enumerate_candidates(domain: Domain, m_c_choices: Sequence[int], *,
+                         backends: Sequence[str] = ("reference",),
+                         batch_sizes: Sequence[int] = DEFAULT_BATCH_SIZES,
+                         strategies: Sequence[str] = STRATEGY_NAMES,
+                         extra_allin_boxes: Sequence[Tuple[int, int, int]]
+                         = ()) -> List[Candidate]:
+    """The candidate space: (strategy, backend, batch_size, m_c, allin box).
+
+    Only (backend, strategy) pairs actually registered survive — the tuner
+    can never return an unimplemented combination (``naive_n2`` is the one
+    registry-free strategy: the executor special-cases it, so it is emitted
+    whenever explicitly requested, once per ``m_c`` — it reads neither
+    backend nor batch size). ``batch_size`` is a reference-schedule knob
+    (the Pallas kernels ignore it), so Pallas candidates are emitted once
+    per remaining axis, pinned to ``min(batch_sizes)`` so the candidate
+    space — and the cache key derived from it — does not depend on the
+    order callers list batch sizes in.
+    """
+    out: List[Candidate] = []
+    canon_bs = min(batch_sizes)
+    for backend in backends:
+        for strategy in strategies:
+            if strategy == "naive_n2":
+                if backend != backends[0]:
+                    continue
+                bss: Sequence[int] = (canon_bs,)
+            else:
+                try:
+                    get_backend(backend, strategy)
+                except ValueError:
+                    continue
+                bss = batch_sizes if backend == "reference" else (canon_bs,)
+            for m_c in dict.fromkeys(m_c_choices):
+                boxes: Iterable[Optional[Tuple[int, int, int]]] = (None,)
+                if strategy == "allin":
+                    boxes = _allin_boxes(domain, m_c, extra_allin_boxes)
+                for box in boxes:
+                    for bs in dict.fromkeys(bss):
+                        out.append(Candidate(strategy, backend, bs, m_c, box))
+    return out
+
+
+def _allin_boxes(domain: Domain, m_c: int,
+                 extra: Sequence[Tuple[int, int, int]] = ()
+                 ) -> List[Tuple[int, int, int]]:
+    """VMEM-budget sub-box plus a small-box alternative (more parallelism,
+    less reuse — the trade the paper's §5.1 occupancy discussion is about);
+    user-supplied boxes are shrunk to valid grid divisors and appended."""
+    boxes = [_allin_box(domain, m_c),
+             S.shrink_to_divisors(domain, (2, 2, 2))]
+    boxes += [S.shrink_to_divisors(domain, tuple(b)) for b in extra]
+    return list(dict.fromkeys(boxes))
+
+
+def _cost(domain: Domain, avg_ppc: float, c: Candidate) -> float:
+    return traffic.candidate_cost(domain, c.m_c, avg_ppc, c.strategy,
+                                  subbox=c.box)
+
+
+def prune_candidates(domain: Domain, avg_ppc: float,
+                     candidates: Sequence[Candidate],
+                     top_k: int = DEFAULT_TOP_K
+                     ) -> Tuple[List[Candidate], List[Candidate]]:
+    """Model-guided pruning to ``top_k`` candidates. -> (kept, pruned).
+
+    The ``traffic.candidate_cost`` ranking orders candidates *within* each
+    strategy, and strategies are then drained round-robin (cheapest
+    strategy first). The model therefore shapes the field but can never
+    eliminate a whole strategy by itself — its cost is identical across
+    batch-size variants, so a straight global sort would fill ``top_k``
+    with duplicates of its favourite schedule and the stopwatch would
+    never get to contradict it (the exact failure this tuner exists for).
+    """
+    def order_key(c: Candidate):
+        return (_cost(domain, avg_ppc, c), c.backend, c.batch_size, c.m_c,
+                c.box or ())
+
+    by_strategy: Dict[str, List[Candidate]] = {}
+    for c in sorted(candidates, key=order_key):
+        by_strategy.setdefault(c.strategy, []).append(c)
+    queues = sorted(by_strategy.values(),
+                    key=lambda q: order_key(q[0]))
+    interleaved = [c for round_ in itertools.zip_longest(*queues)
+                   for c in round_ if c is not None]
+    k = max(1, int(top_k))
+    kept = interleaved[:k]
+    return kept, [c for c in interleaved[k:]]
+
+
+# --------------------------------------------------------------------------
+# on-disk cache
+# --------------------------------------------------------------------------
+
+def cache_dir() -> pathlib.Path:
+    env = os.environ.get(_CACHE_ENV)
+    if env:
+        return pathlib.Path(env)
+    xdg = os.environ.get("XDG_CACHE_HOME",
+                         os.path.join(os.path.expanduser("~"), ".cache"))
+    return pathlib.Path(xdg) / "repro_autotune"
+
+
+def cache_path() -> pathlib.Path:
+    return cache_dir() / _CACHE_FILE
+
+
+def ppc_bucket(avg_ppc: float) -> str:
+    """Log2 fill-ratio bucket: nearby fill ratios share a tuning decision
+    (the paper's regimes — 1, 10, 100 ppc — land in distinct buckets)."""
+    return f"2^{round(math.log2(max(avg_ppc, 0.125)))}"
+
+
+def _kernel_id(kernel: PairKernel) -> str:
+    """Stable kernel identity for the disk cache: name plus a digest of the
+    value-based identity tuple ``(name, flops, static_params)`` (PairKernel's
+    own hash contract), so two kernels sharing a name but differing in FLOPs
+    or parameters never share a cached winner. ``hash()`` itself is unusable
+    here — Python randomizes string hashes per process."""
+    ident = repr((kernel.name, kernel.flops, kernel.static_params))
+    return f"{kernel.name}-{hashlib.sha1(ident.encode()).hexdigest()[:10]}"
+
+
+def cache_key(platform: str, domain: Domain, m_c: int, avg_ppc: float,
+              kernel: PairKernel, backends: Sequence[str]) -> str:
+    return "|".join([
+        platform,
+        "x".join(str(n) for n in domain.ncells),
+        f"mc{m_c}",
+        f"ppc{ppc_bucket(avg_ppc)}",
+        _kernel_id(kernel),
+        "+".join(sorted(backends)),
+    ])
+
+
+def _space_id(candidates: Sequence[Candidate]) -> str:
+    """Order-independent digest of a candidate space."""
+    blob = "\n".join(sorted(json.dumps(c.to_json(), sort_keys=True)
+                            for c in candidates))
+    return hashlib.sha1(blob.encode()).hexdigest()[:10]
+
+
+def _load_cache(path: pathlib.Path) -> dict:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return {}
+    return data if isinstance(data, dict) else {}
+
+
+def _store_cache(path: pathlib.Path, key: str, entry: dict) -> None:
+    """Merge one entry into the cache file.
+
+    The tmp file is per-process and the final rename is atomic, so readers
+    never see a truncated JSON. Two processes storing *concurrently* can
+    still lose one another's new entry (last rename wins) — an acceptable
+    cost for a cache whose entries are all re-derivable by re-tuning."""
+    path.parent.mkdir(parents=True, exist_ok=True)
+    data = _load_cache(path)
+    data[key] = entry
+    tmp = path.with_name(f"{path.name}.{os.getpid()}.tmp")
+    try:
+        with open(tmp, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    finally:
+        if tmp.exists():
+            tmp.unlink()
+
+
+# --------------------------------------------------------------------------
+# the tuner
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TuneResult:
+    """Winner plan plus the evidence: what was timed, what was pruned."""
+
+    plan: InteractionPlan
+    candidate: Candidate
+    timings: Dict[Candidate, float]          # measured mean seconds
+    reps: Dict[Candidate, int]               # stopwatch reps per candidate
+    pruned: Tuple[Candidate, ...]            # enumerated but never timed
+    cache_hit: bool
+    cache_file: str
+
+
+def tune(domain: Domain, kernel: Optional[PairKernel] = None,
+         positions: Optional[Array] = None, *,
+         m_c: Optional[int] = None,
+         backends: Optional[Sequence[str]] = None,
+         batch_sizes: Sequence[int] = DEFAULT_BATCH_SIZES,
+         strategies: Sequence[str] = STRATEGY_NAMES,
+         box: Optional[Tuple[int, int, int]] = None,
+         candidates: Optional[Sequence[Candidate]] = None,
+         m_c_slack: float = 1.5,
+         top_k: int = DEFAULT_TOP_K,
+         reps: Optional[int] = None, budget_s: float = 0.5,
+         interpret: Optional[bool] = None,
+         use_cache: bool = True) -> TuneResult:
+    """Measure candidate schedules on ``positions`` and return the fastest.
+
+    Enumerates (strategy, backend, batch_size, m_c, allin box) candidates,
+    prunes to ``top_k`` with the traffic model, times each survivor with a
+    compile-excluded stopwatch (``core.timing.time_fn``), and returns the
+    empirically fastest :class:`InteractionPlan`. Winners persist in the
+    JSON cache (``cache_path()``), so the same regime re-tunes for free.
+
+    Args:
+      positions: representative positions — required; the tuner times real
+        executions and measures the M_C bound from them.
+      m_c: pin the slot bound; by default both a tight (slack=1.0) and a
+        slacked (``m_c_slack``, default 1.5) sublane-aligned bound are
+        candidates.
+      backends: backends to tune over; default is ``("reference",)`` off-TPU
+        (interpret-mode Pallas would time the interpreter, not the kernel)
+        and ``("reference", "pallas")`` on TPU.
+      box: extra All-in-SM sub-box to try alongside the derived candidates
+        (shrunk to grid divisors).
+      candidates: explicit candidate list (overrides enumeration).
+      top_k: survivors after model pruning; raise it if you suspect the
+        model is mis-ranking your regime.
+      reps / budget_s: stopwatch controls (see ``time_fn``).
+      use_cache: disable to force re-measurement (the winner still
+        overwrites the cache entry).
+    """
+    if positions is None:
+        raise ValueError("tune() needs positions (it measures real "
+                         "executions, not a model)")
+    kernel = kernel or make_lennard_jones()
+    platform = jax.default_backend()
+    if backends is None:
+        backends = (("reference", "pallas") if platform == "tpu"
+                    else ("reference",))
+
+    from .engine import suggest_m_c
+    max_count = int(_max_cell_count(domain, positions))
+    if m_c is not None:
+        m_c_choices = [m_c]
+    else:
+        m_c_choices = list(dict.fromkeys(
+            [suggest_m_c(domain, positions, slack=1.0),
+             suggest_m_c(domain, positions, slack=m_c_slack)]))
+    key_m_c = min(m_c_choices)
+    avg_ppc = positions.shape[0] / domain.n_cells
+
+    key = cache_key(platform, domain, key_m_c, avg_ppc, kernel, backends)
+    cfile = cache_path()
+
+    # build the requested candidate space first (cheap — no timing): the
+    # cache is only consulted *within* it, so a restricted call
+    # (strategies=..., candidates=..., pinned m_c) can never be answered
+    # with a cached winner from outside its space
+    if candidates is None:
+        candidates = enumerate_candidates(
+            domain, m_c_choices, backends=backends, batch_sizes=batch_sizes,
+            strategies=strategies,
+            extra_allin_boxes=(box,) if box is not None else ())
+    candidates = [c for c in candidates if c.m_c >= max_count]
+    if not candidates:
+        raise ValueError(
+            f"no overflow-safe candidates: max cell count {max_count} "
+            f"exceeds every candidate m_c")
+
+    # the candidate space is part of the key: a restricted call (explicit
+    # strategies/candidates/batch sizes) owns its own entry instead of
+    # answering from — or clobbering — the unrestricted one
+    key += f"|space{_space_id(candidates)}"
+
+    if use_cache:
+        entry = _load_cache(cfile).get(key)
+        if entry and entry.get("version") == CACHE_VERSION:
+            cand = Candidate.from_json(entry["candidate"])
+            # trust the entry only if it is overflow-safe for *these*
+            # positions (bucket collisions can cache a smaller bound) and
+            # inside the requested space — otherwise re-measure
+            if cand.m_c >= max_count and cand in set(candidates):
+                return TuneResult(
+                    plan=cand.plan(domain, kernel, interpret), candidate=cand,
+                    timings={}, reps={}, pruned=(), cache_hit=True,
+                    cache_file=str(cfile))
+    kept, pruned = prune_candidates(domain, avg_ppc, candidates, top_k=top_k)
+
+    state = ParticleState(positions)
+    timings: Dict[Candidate, float] = {}
+    nreps: Dict[Candidate, int] = {}
+    for cand in kept:
+        try:
+            p = cand.plan(domain, kernel, interpret)
+            secs, r = time_fn(p.execute, state, reps=reps, budget_s=budget_s)
+        except Exception as e:  # noqa: BLE001 — a broken candidate loses,
+            print(f"autotune: candidate {cand} failed: {e!r}",  # not the run
+                  file=sys.stderr)
+            continue
+        timings[cand] = secs
+        nreps[cand] = r
+    if not timings:
+        raise RuntimeError(
+            f"autotune: all {len(kept)} timed candidates failed (see stderr)")
+
+    winner = min(timings, key=timings.get)
+    _store_cache(cfile, key, {
+        "version": CACHE_VERSION,
+        "candidate": winner.to_json(),
+        "seconds": timings[winner],
+        "platform": platform,
+    })
+    return TuneResult(plan=winner.plan(domain, kernel, interpret),
+                      candidate=winner, timings=timings, reps=nreps,
+                      pruned=tuple(pruned), cache_hit=False,
+                      cache_file=str(cfile))

@@ -1,0 +1,38 @@
+"""Stopwatch utilities shared by the autotuner and the benchmark suite.
+
+Timing convention (paper §7.1): jit + warm-up call first so compilation is
+excluded, then ``reps`` timed calls, report the mean. The paper uses 200
+async calls on real GPUs; on a 1-core CPU container reps are adaptive (big
+cases get few reps, small get many) and are returned so every record is
+self-describing.
+
+This lives in the library (not ``benchmarks/``) because the measured
+autotuner (``core.autotune``) is a user-facing feature, not a benchmark:
+``plan(..., strategy="autotune")`` needs the same compile-excluded stopwatch
+the figures use.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+import jax
+
+
+def time_fn(fn: Callable, *args, reps: int | None = None,
+            budget_s: float = 3.0) -> Tuple[float, int]:
+    """-> (mean_seconds, reps). First call compiles (excluded)."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    once = time.perf_counter() - t0
+    if reps is None:
+        reps = max(2, min(50, int(budget_s / max(once, 1e-6))))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps, reps

@@ -88,3 +88,22 @@ def model(domain: Domain, m_c: int, avg_ppc: float,
         reuse, 1.0 - 1.0 / pad2, n_boxes)
 
     return out
+
+
+def candidate_cost(domain: Domain, m_c: int, avg_ppc: float, strategy: str,
+                   subbox: Tuple[int, int, int] | None = None) -> float:
+    """Pruning hook for the measured autotuner (``core.autotune``).
+
+    Scores one candidate configuration by its modelled HBM bytes per
+    interaction — the quantity ``strategy="auto"`` minimizes outright. The
+    autotuner only uses it to *rank* candidates before timing the top-k, so
+    the model's job here is softer: it must keep the true winner in the
+    field, not name it. ``naive_n2`` has no staging and is modelled as one
+    full pass over all pairs (it never survives pruning on real grids).
+    """
+    if strategy == "naive_n2":
+        n = domain.n_cells * max(avg_ppc, 1e-3)
+        total_inter = domain.n_cells * 27.0 * max(avg_ppc, 1e-3) ** 2
+        return n * n * FIELD_BYTES / max(total_inter, 1e-9)
+    reports = model(domain, m_c, max(avg_ppc, 1e-3), subbox=subbox)
+    return reports[strategy].hbm_bytes_per_interaction

@@ -1,0 +1,20 @@
+"""Shared interpret-mode resolution for every Pallas kernel entry point.
+
+``interpret=None`` (the default everywhere) means: run the kernel natively
+on TPU, fall back to the Pallas interpreter elsewhere — the same rule
+``InteractionPlan.interpret`` uses, so calling a kernel directly behaves
+like calling it through the plan API. Pass an explicit bool to override
+(tests force ``interpret=True`` for determinism off-TPU).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def resolve_interpret(flag: Optional[bool]) -> bool:
+    if flag is None:
+        return jax.default_backend() != "tpu"
+    return bool(flag)

@@ -21,7 +21,7 @@ quantifies this; the kernel exists to reproduce the schedule faithfully.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +29,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.interactions import PairKernel
+from ._platform import resolve_interpret
 
 Array = jnp.ndarray
 
@@ -99,11 +100,14 @@ def _kernel(xp, yp, zp, ip,             # HBM-resident padded planes
 @functools.partial(jax.jit, static_argnames=("box", "m_c", "kernel", "cutoff2", "interpret"))
 def allin_forces(planes: dict, slot_id: Array, *, box: Tuple[int, int, int],
                  m_c: int, kernel: PairKernel, cutoff2: float,
-                 interpret: bool = True
+                 interpret: Optional[bool] = None
                  ) -> Tuple[Array, Array, Array, Array]:
     """Run the All-in-SM kernel. ``box`` = (bx, by, bz) interior sub-box;
     must divide the grid (``core.strategies.subbox_dims`` + divisor shrink).
+    ``interpret=None`` resolves by platform (native on TPU, interpreter
+    elsewhere), matching ``InteractionPlan.interpret``.
     Returns (fx, fy, fz, pot), each (nz, ny, nx*m_c)."""
+    interpret = resolve_interpret(interpret)
     x = planes["x"]
     nzp, nyp, w = x.shape
     nz, ny = nzp - 2, nyp - 2

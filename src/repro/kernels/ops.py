@@ -10,24 +10,18 @@ from __future__ import annotations
 
 from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from ..core.binning import CellBins, dense_to_particles
 from ..core.domain import Domain
 from ..core.interactions import PairKernel
+from ._platform import resolve_interpret as _interpret
 from .allin import allin_forces
 from .prefix_sum import prefix_sum as _prefix_sum
 from .window_attn import window_attention as _window_attention
 from .xpencil import xpencil_forces
 
 Array = jnp.ndarray
-
-
-def _interpret(flag: Optional[bool]) -> bool:
-    if flag is None:
-        return jax.default_backend() != "tpu"
-    return flag
 
 
 def xpencil_interactions(domain: Domain, bins: CellBins, kernel: PairKernel,

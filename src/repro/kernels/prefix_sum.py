@@ -53,12 +53,15 @@ def _kernel(x_ref, o_ref, *, n: int):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def prefix_sum(x: Array, interpret: bool = True) -> Array:
+def prefix_sum(x: Array, interpret: bool | None = None) -> Array:
     """Inclusive prefix sum of a rank-1 array (paper §6 schedule).
 
     The whole array must fit in VMEM (the paper's setting: the per-cell count
     array of one sub-box). Larger arrays belong to the host-level scan.
+    ``interpret=None`` resolves by platform (native on TPU).
     """
+    from ._platform import resolve_interpret
+    interpret = resolve_interpret(interpret)
     n = x.shape[0]
     out = pl.pallas_call(
         functools.partial(_kernel, n=n),

@@ -75,16 +75,19 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
                                              "interpret"))
 def window_attention(q: Array, k: Array, v: Array, *, window: int,
                      blk: int = 128, softcap: float = 0.0,
-                     interpret: bool = True) -> Array:
+                     interpret: bool | None = None) -> Array:
     """Sliding-window causal attention.
 
     Args:
       q: (B, H, S, D); k, v: (B, KH, S, D), H % KH == 0.
       window: tokens visible to each query (self included): k in
         (q - window, q].
+      interpret: None = native on TPU, interpreter elsewhere.
     Returns:
       (B, H, S, D) in q's dtype.
     """
+    from ._platform import resolve_interpret
+    interpret = resolve_interpret(interpret)
     b, h, s, d = q.shape
     kh = k.shape[1]
     assert h % kh == 0 and s % blk == 0, (q.shape, k.shape, blk)

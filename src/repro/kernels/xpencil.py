@@ -29,13 +29,14 @@ multiple of 8 keeps slices sublane-aligned (``suggest_m_c`` does this).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from ..core.interactions import PairKernel
+from ._platform import resolve_interpret
 
 Array = jnp.ndarray
 
@@ -88,16 +89,19 @@ def _kernel(xt_ref, yt_ref, zt_ref, it_ref,
 @functools.partial(jax.jit, static_argnames=("nx", "m_c", "kernel", "cutoff2", "interpret"))
 def xpencil_forces(planes: dict, slot_id: Array, *, nx: int, m_c: int,
                    kernel: PairKernel, cutoff2: float,
-                   interpret: bool = True
+                   interpret: Optional[bool] = None
                    ) -> Tuple[Array, Array, Array, Array]:
     """Run the X-pencil kernel over padded planes.
 
     Args:
       planes: dict with "x","y","z" padded planes (nz+2, ny+2, (nx+2)*m_c).
       slot_id: matching int32 plane, -1 for empty slots.
+      interpret: None = native on TPU, interpreter elsewhere (matching
+        ``InteractionPlan.interpret``); bool forces the mode.
     Returns:
       (fx, fy, fz, pot), each (nz, ny, nx*m_c) over interior slots.
     """
+    interpret = resolve_interpret(interpret)
     x = planes["x"]
     nzp, nyp, w = x.shape
     nz, ny = nzp - 2, nyp - 2

@@ -1,0 +1,219 @@
+"""Measured autotuner: overflow-safe winners, disk cache, honest pruning."""
+
+import json
+import pathlib
+
+import jax
+import pytest
+
+from repro.core import (Domain, ParticleState, make_lennard_jones, plan,
+                        tune)
+from repro.core import autotune as at
+from repro.core.api import STRATEGY_NAMES, get_backend
+from repro.core.engine import suggest_m_c
+
+# keep tuner runs cheap: 2 reps, tiny budget — correctness, not precision
+FAST = dict(reps=2, budget_s=0.01)
+
+
+@pytest.fixture()
+def cache_dir(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path))
+    return tmp_path
+
+
+def _case(division=4, n=300, seed=0):
+    dom = Domain.cubic(division, cutoff=1.0)
+    pos = dom.sample_uniform(jax.random.PRNGKey(seed), n)
+    return dom, pos
+
+
+# ---------------------------------------------------------------------------
+# the winner is a real plan
+# ---------------------------------------------------------------------------
+
+def test_tune_returns_registered_overflow_safe_plan(cache_dir):
+    dom, pos = _case()
+    res = tune(dom, make_lennard_jones(), pos, top_k=4, **FAST)
+    p = res.plan
+    assert p.strategy in STRATEGY_NAMES
+    get_backend(p.backend, p.strategy)          # registered, or raises
+    assert not p.check_overflow(ParticleState(pos))
+    # the winner really is the measured minimum among timed candidates
+    assert res.timings[res.candidate] == min(res.timings.values())
+    # and it executes
+    forces, pot = p.execute(ParticleState(pos))
+    assert forces.shape == (pos.shape[0], 3)
+
+
+def test_tune_requires_positions():
+    with pytest.raises(ValueError, match="positions"):
+        tune(Domain.cubic(3))
+    with pytest.raises(ValueError, match="autotune"):
+        plan(Domain.cubic(3), m_c=8, strategy="autotune")
+
+
+def test_pinned_m_c_below_occupancy_is_rejected(cache_dir):
+    dom, pos = _case(3, 400)
+    with pytest.raises(ValueError, match="overflow-safe"):
+        tune(dom, make_lennard_jones(), pos, m_c=1, **FAST)
+
+
+# ---------------------------------------------------------------------------
+# disk cache
+# ---------------------------------------------------------------------------
+
+def test_cache_round_trips_through_disk(cache_dir, monkeypatch):
+    dom, pos = _case()
+    res1 = tune(dom, make_lennard_jones(), pos, top_k=4, **FAST)
+    assert not res1.cache_hit and res1.timings
+
+    cfile = pathlib.Path(res1.cache_file)
+    assert cfile.exists() and cfile.parent == cache_dir
+    data = json.loads(cfile.read_text())
+    [entry] = data.values()
+    assert entry["version"] == at.CACHE_VERSION
+    assert entry["candidate"]["strategy"] == res1.candidate.strategy
+
+    # second call: zero timing runs — a stopwatch call would blow up here
+    def bomb(*a, **k):
+        raise AssertionError("cache hit must not time anything")
+    monkeypatch.setattr(at, "time_fn", bomb)
+    res2 = tune(dom, make_lennard_jones(), pos, top_k=4, **FAST)
+    assert res2.cache_hit and not res2.timings
+    assert res2.plan == res1.plan
+
+
+def test_plan_autotune_front_door_reuses_cache(cache_dir, monkeypatch):
+    dom, pos = _case()
+    p1 = plan(dom, make_lennard_jones(), positions=pos, strategy="autotune")
+
+    def bomb(*a, **k):
+        raise AssertionError("cached plan() must not time anything")
+    monkeypatch.setattr(at, "time_fn", bomb)
+    p2 = plan(dom, make_lennard_jones(), positions=pos, strategy="autotune")
+    assert p2 == p1
+    assert p1.strategy in STRATEGY_NAMES
+
+
+def test_cache_hit_respects_restricted_candidate_space(cache_dir):
+    """A cached winner from an unrestricted run must not answer a call
+    that explicitly excludes it."""
+    dom, pos = _case()
+    res1 = tune(dom, make_lennard_jones(), pos, **FAST)
+    other = [s for s in STRATEGY_NAMES if s != res1.candidate.strategy]
+    res2 = tune(dom, make_lennard_jones(), pos, strategies=tuple(other),
+                **FAST)
+    assert not res2.cache_hit                  # space changed: re-measured
+    assert res2.candidate.strategy != res1.candidate.strategy
+    # the restricted run got its own entry: the unrestricted regime still
+    # hits its original winner, unclobbered
+    res3 = tune(dom, make_lennard_jones(), pos, **FAST)
+    assert res3.cache_hit and res3.plan == res1.plan
+
+
+def test_cache_entry_ignored_when_bound_overflows(cache_dir):
+    """A bucket collision must never hand back an overflow-unsafe plan."""
+    dom, pos = _case(3, 120)
+    res1 = tune(dom, make_lennard_jones(), pos, top_k=2, **FAST)
+    # forge the cached bound down below this scene's occupancy
+    cfile = pathlib.Path(res1.cache_file)
+    data = json.loads(cfile.read_text())
+    [key] = data
+    data[key]["candidate"]["m_c"] = 0
+    cfile.write_text(json.dumps(data))
+    res2 = tune(dom, make_lennard_jones(), pos, top_k=2, **FAST)
+    assert not res2.cache_hit                   # re-measured, not trusted
+    assert not res2.plan.check_overflow(ParticleState(pos))
+
+
+def test_cache_key_separates_same_name_kernels(cache_dir):
+    """Two kernels sharing a name but differing in params/FLOPs must not
+    share a cached winner (PairKernel identity is value-based)."""
+    from repro.core import make_high_flop
+    dom = Domain.cubic(4)
+    k_small = make_high_flop(extra_terms=5)
+    k_big = make_high_flop(extra_terms=200)
+    assert k_small.name == k_big.name and k_small != k_big
+    key_small = at.cache_key("cpu", dom, 16, 1.0, k_small, ("reference",))
+    key_big = at.cache_key("cpu", dom, 16, 1.0, k_big, ("reference",))
+    assert key_small != key_big
+
+
+def test_cache_key_separates_regimes():
+    dom = Domain.cubic(4)
+    kern = make_lennard_jones()
+    k1 = at.cache_key("cpu", dom, 16, 1.0, kern, ("reference",))
+    assert k1 != at.cache_key("tpu", dom, 16, 1.0, kern, ("reference",))
+    assert k1 != at.cache_key("cpu", dom, 32, 1.0, kern, ("reference",))
+    assert k1 != at.cache_key("cpu", dom, 16, 100.0, kern, ("reference",))
+    assert k1 != at.cache_key("cpu", Domain.cubic(8), 16, 1.0, kern,
+                              ("reference",))
+    # nearby fill ratios share a bucket (and therefore a tuning decision)
+    assert at.ppc_bucket(9.0) == at.ppc_bucket(10.0)
+    assert at.ppc_bucket(1.0) != at.ppc_bucket(10.0)
+
+
+# ---------------------------------------------------------------------------
+# pruning
+# ---------------------------------------------------------------------------
+
+def test_pruning_never_drops_measured_winner_on_seeded_case(cache_dir):
+    """Time the *whole* candidate space, then check the default model
+    pruning would have kept the measured winner in the field."""
+    dom, pos = _case(4, 300)
+    m_c = suggest_m_c(dom, pos)
+    cands = at.enumerate_candidates(dom, [m_c], backends=("reference",),
+                                    batch_sizes=(64, 128))
+    full = tune(dom, make_lennard_jones(), pos, candidates=cands,
+                top_k=len(cands), use_cache=False, **FAST)
+    assert len(full.timings) == len(cands) and not full.pruned
+    kept, pruned = at.prune_candidates(
+        dom, pos.shape[0] / dom.n_cells, cands, top_k=at.DEFAULT_TOP_K)
+    assert full.candidate in kept
+    assert set(kept) | set(pruned) == set(cands)
+
+
+def test_prune_is_deterministic_and_ranked():
+    dom, pos = _case(4, 300)
+    m_c = suggest_m_c(dom, pos)
+    cands = at.enumerate_candidates(dom, [m_c, 2 * m_c])
+    ppc = pos.shape[0] / dom.n_cells
+    kept1, _ = at.prune_candidates(dom, ppc, cands, top_k=5)
+    kept2, _ = at.prune_candidates(dom, ppc, cands, top_k=5)
+    assert kept1 == kept2 and len(kept1) == 5
+
+
+def test_prune_cannot_eliminate_a_whole_strategy():
+    """The model ranks, the stopwatch decides: with top_k >= #strategies,
+    every strategy keeps at least one timed candidate — identical-cost
+    batch-size duplicates of the model's favourite must not crowd the
+    others out of the field."""
+    dom, pos = _case(4, 300)
+    m_c = suggest_m_c(dom, pos)
+    cands = at.enumerate_candidates(dom, [m_c])
+    ppc = pos.shape[0] / dom.n_cells
+    kept, _ = at.prune_candidates(dom, ppc, cands, top_k=at.DEFAULT_TOP_K)
+    assert {c.strategy for c in kept} == {c.strategy for c in cands}
+
+
+def test_enumerate_naive_n2_when_requested(cache_dir):
+    dom = Domain.cubic(3)
+    cands = at.enumerate_candidates(dom, [8], strategies=("naive_n2",))
+    assert cands and all(c.strategy == "naive_n2" for c in cands)
+    # and it is timeable end-to-end
+    pos = dom.sample_uniform(jax.random.PRNGKey(0), 50)
+    res = tune(dom, make_lennard_jones(), pos, candidates=cands,
+               use_cache=False, **FAST)
+    assert res.candidate.strategy == "naive_n2"
+
+
+def test_enumerate_only_registered_pairs():
+    dom = Domain.cubic(4)
+    cands = at.enumerate_candidates(dom, [16],
+                                    backends=("reference", "pallas"))
+    for c in cands:
+        get_backend(c.backend, c.strategy)      # must not raise
+    # pallas implements only the paper's two proposed schedules
+    assert {c.strategy for c in cands if c.backend == "pallas"} == {
+        "xpencil", "allin"}

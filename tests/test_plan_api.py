@@ -1,4 +1,5 @@
-"""Plan/execute API: backend parity, overflow->replan, auto strategy, shims."""
+"""Plan/execute API: backend parity, overflow->replan, auto strategy,
+batched execution, shims."""
 
 import dataclasses
 
@@ -9,9 +10,10 @@ import pytest
 
 from repro.core import (CellListEngine, Domain, InteractionPlan,
                         ParticleState, backend_matrix, choose_strategy,
-                        compute_interactions, make_lennard_jones,
+                        clear_executor_cache, compute_interactions,
+                        dispatch_count, make_lennard_jones,
                         make_low_flop, plan, suggest_m_c)
-from repro.core import traffic
+from repro.core import api, traffic
 
 
 def _case(division, n, seed=0, periodic=False):
@@ -147,6 +149,75 @@ def test_auto_needs_positions():
 def test_choose_strategy_is_deterministic():
     dom = Domain.cubic(8, cutoff=1.0)
     assert choose_strategy(dom, 8, 10.0) == choose_strategy(dom, 8, 10.0)
+
+
+# ---------------------------------------------------------------------------
+# batched execution
+# ---------------------------------------------------------------------------
+
+def _stacked(dom, b, n, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), b)
+    return jnp.stack([dom.sample_uniform(k, n) for k in keys])
+
+
+def test_execute_batch_bit_identical_to_loop_single_dispatch():
+    dom = Domain.cubic(3, cutoff=1.0)
+    b, n = 8, 120
+    pos = _stacked(dom, b, n)
+    p = plan(dom, make_lennard_jones(), m_c=16, strategy="xpencil")
+
+    c0 = dispatch_count()
+    fb, pb = p.execute_batch(ParticleState(pos))
+    batch_dispatches = dispatch_count() - c0
+
+    c1 = dispatch_count()
+    loop = [p.execute(ParticleState(pos[i])) for i in range(b)]
+    loop_dispatches = dispatch_count() - c1
+
+    assert batch_dispatches == 1                 # one jitted vmapped call
+    assert loop_dispatches == b and batch_dispatches < b
+    f_loop = jnp.stack([f for f, _ in loop])
+    p_loop = jnp.stack([q for _, q in loop])
+    assert fb.shape == (b, n, 3) and pb.shape == (b, n)
+    np.testing.assert_array_equal(np.asarray(fb), np.asarray(f_loop))
+    np.testing.assert_array_equal(np.asarray(pb), np.asarray(p_loop))
+
+
+@pytest.mark.parametrize("strategy,backend", [
+    ("par_part", "reference"), ("allin", "reference"), ("xpencil", "pallas")])
+def test_execute_batch_parity_across_backends(strategy, backend):
+    dom = Domain.cubic(3, cutoff=1.0)
+    pos = _stacked(dom, 4, 100, seed=2)
+    p = plan(dom, make_lennard_jones(), m_c=16, strategy=strategy,
+             backend=backend, interpret=True)
+    fb, _ = p.execute_batch(ParticleState(pos))
+    f_loop = jnp.stack([p.execute(ParticleState(pos[i]))[0]
+                        for i in range(4)])
+    np.testing.assert_allclose(np.asarray(fb), np.asarray(f_loop),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_execute_batch_carries_fields():
+    dom = Domain.cubic(3, cutoff=1.0)
+    pos = _stacked(dom, 3, 80)
+    mass = jnp.ones(pos.shape[:2])
+    p = plan(dom, make_lennard_jones(), m_c=16, strategy="xpencil")
+    fb, _ = p.execute_batch(ParticleState(pos, {"mass": mass}))
+    f0, _ = p.execute_batch(ParticleState(pos))
+    np.testing.assert_array_equal(np.asarray(fb), np.asarray(f0))
+
+
+def test_executor_caches_are_bounded_and_clearable():
+    # the autotuner churns through throwaway plans; traces must be evictable
+    assert api._executor.cache_info().maxsize == 128
+    assert api._batch_executor.cache_info().maxsize == 32
+    dom = Domain.cubic(3)
+    p = plan(dom, make_lennard_jones(), m_c=8, strategy="xpencil")
+    p.execute(ParticleState(dom.sample_uniform(jax.random.PRNGKey(0), 50)))
+    assert api._executor.cache_info().currsize >= 1
+    clear_executor_cache()
+    assert api._executor.cache_info().currsize == 0
+    assert api._batch_executor.cache_info().currsize == 0
 
 
 # ---------------------------------------------------------------------------
