@@ -43,22 +43,30 @@ def run(cases: List[Tuple[int, int]] = DEFAULT_CASES, csv: bool = True,
         model_pick = choose_strategy(dom, suggest_m_c(dom, pos),
                                      n / dom.n_cells)
         best_s = res.timings[res.candidate]
+        # the model pick is a *dense* schedule (strategy="auto" knows
+        # nothing of compaction) — regret compares against its dense runs
         model_best = min((s for c, s in res.timings.items()
-                          if c.strategy == model_pick), default=float("nan"))
+                          if c.strategy == model_pick and not c.compact),
+                         default=float("nan"))
         regret = model_best / best_s
         case = f"autotune/d{division}_p{ppc}"
         for cand, secs in sorted(res.timings.items(), key=lambda kv: kv[1]):
-            records.append(bench_record(case, cand.strategy, cand.backend,
+            # compacted twins share the strategy name; keep their perf
+            # records distinguishable for the perf_diff join key
+            strat = cand.strategy + ("_compact" if cand.compact else "")
+            records.append(bench_record(case, strat, cand.backend,
                                         secs, res.reps[cand]))
+        winner = res.candidate.strategy + (
+            "_compact" if res.candidate.compact else "")
         row = {"division": division, "ppc": ppc,
-               "measured_winner": res.candidate.strategy,
+               "measured_winner": winner,
                "model_pick": model_pick, "best_s": best_s,
                "model_pick_best_s": model_best, "regret": regret,
                "n_timed": len(res.timings), "n_pruned": len(res.pruned)}
         rows.append(row)
         if csv:
             print(f"{case},{best_s * 1e6:.1f},"
-                  f"winner={res.candidate.strategy};model={model_pick};"
+                  f"winner={winner};model={model_pick};"
                   f"regret={regret:.3f};timed={len(res.timings)};"
                   f"pruned={len(res.pruned)}")
     if json_path:

@@ -1,0 +1,124 @@
+"""Sparse figure: compacted-schedule speedup vs active-pencil fill fraction.
+
+The dense schedules pay for every (z, y) pencil whether or not it holds
+particles; the occupancy-compacted path (``plan(..., compact=True)``)
+iterates only active pencils. This benchmark sweeps the inhomogeneous
+scenario family (``repro.core.scenarios``) from fully uniform down to a few
+percent active pencils and reports
+
+    speedup = t(dense xpencil) / t(compacted xpencil)
+
+per case, with the measured fill fraction as the x-axis. Expectation: ~1x
+at fill 1.0 (compaction is bounded overhead), approaching 1/fill as the
+scene empties.
+
+Both plans are executed once on the same positions and checked for exact
+agreement before anything is timed — a benchmark that silently drifted from
+the oracle would be worse than no benchmark.
+
+``--json PATH`` writes the timings as BENCH_*.json perf records (case,
+strategy, backend, us_per_call, reps, platform + fill/speedup extras);
+the committed ``benchmarks/BENCH_sparse.json`` is this module's output on
+the reference container.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from repro.core import (Domain, ParticleState, active_unit_count,
+                        make_lennard_jones, plan, scenarios, suggest_m_c)
+from repro.core.api import n_units
+
+from .common import bench_record, time_fn, write_bench_json
+
+# (case name, scenario kwargs) — ordered roughly densest to sparsest; the
+# gaussian sigma sweep is the controlled fill-fraction axis, the two-phase
+# droplet and power-law cluster are the "realistic" inhomogeneous scenes.
+CASES = [
+    ("uniform", dict(name="uniform")),
+    ("two_phase", dict(name="two_phase", droplet_frac=0.9,
+                       radius_frac=0.12)),
+    ("power_law", dict(name="power_law_cluster", n_clusters=3, alpha=2.0,
+                       r_min_frac=0.04)),
+    ("blob_wide", dict(name="gaussian_blob", sigma_frac=0.10)),
+    ("blob_tight", dict(name="gaussian_blob", sigma_frac=0.05)),
+    ("blob_point", dict(name="gaussian_blob", sigma_frac=0.035)),
+]
+
+
+def run(csv: bool = True, json_path: Optional[str] = None,
+        record_sink: Optional[List[dict]] = None, division: int = 16,
+        n: int = 500, seed: int = 0) -> List[dict]:
+    dom = Domain.cubic(division, cutoff=1.0)
+    kern = make_lennard_jones()
+    rows: List[dict] = []
+    records: List[dict] = []
+    if csv:
+        print("name,us_per_call,derived")
+    for case, knobs in CASES:
+        pos = scenarios.sample(domain=dom, key=jax.random.PRNGKey(seed),
+                               n=n, **knobs)
+        m_c = suggest_m_c(dom, pos)
+        fill = active_unit_count(dom, pos, "xpencil") / n_units(dom,
+                                                                "xpencil")
+        state = ParticleState(pos)
+        p_dense = plan(dom, kern, m_c=m_c, strategy="xpencil",
+                       backend="reference")
+        p_comp = plan(dom, kern, m_c=m_c, strategy="xpencil",
+                      backend="reference", compact=True, positions=pos)
+
+        # correctness gate: the compacted path must agree with the dense
+        # schedule bit-for-bit on the scene it is about to be timed on
+        f_d, q_d = p_dense.execute(state)
+        f_c, q_c = p_comp.execute(state)
+        if not (np.array_equal(np.asarray(f_d), np.asarray(f_c))
+                and np.array_equal(np.asarray(q_d), np.asarray(q_c))):
+            print(f"fig_sparse: {case}: compacted result DIVERGED from "
+                  "dense — not timing a wrong answer", file=sys.stderr)
+            continue
+
+        t_d, r_d = time_fn(p_dense.execute, state)
+        t_c, r_c = time_fn(p_comp.execute, state)
+        speedup = t_d / t_c
+        row = {"case": case, "fill": fill, "m_c": m_c,
+               "max_active": p_comp.max_active, "dense_s": t_d,
+               "compact_s": t_c, "speedup": speedup}
+        rows.append(row)
+        records.append(dict(bench_record(f"sparse/{case}", "xpencil",
+                                         "reference", t_d, r_d),
+                            fill=fill))
+        records.append(dict(bench_record(f"sparse/{case}",
+                                         "xpencil_compact", "reference",
+                                         t_c, r_c),
+                            fill=fill, speedup_vs_dense=speedup))
+        if csv:
+            print(f"sparse/xpencil/{case},{t_d * 1e6:.1f},"
+                  f"fill={fill:.3f}")
+            print(f"sparse/xpencil_compact/{case},{t_c * 1e6:.1f},"
+                  f"fill={fill:.3f};speedup={speedup:.2f}")
+    if json_path:
+        write_bench_json(json_path, records)
+    if record_sink is not None:
+        record_sink.extend(records)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--division", type=int, default=16,
+                    help="cells per axis (division^2 pencils)")
+    ap.add_argument("--n", type=int, default=500, help="particles")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write BENCH_*.json perf records to PATH")
+    args = ap.parse_args()
+    run(division=args.division, n=args.n, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

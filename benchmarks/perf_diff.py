@@ -1,0 +1,117 @@
+"""Diff two BENCH_*.json perf-record files (the perf trajectory's delta).
+
+Every timed benchmark runner emits records of the shape
+
+    {"case": ..., "strategy": ..., "backend": ..., "us_per_call": ...,
+     "reps": ..., "platform": ...}
+
+(``benchmarks.common.bench_record``). This tool joins two such files on
+``(case, strategy, backend)`` and reports the per-case us_per_call delta,
+flagging regressions past a threshold::
+
+    python -m benchmarks.perf_diff BASELINE.json FRESH.json \
+        [--threshold 1.5] [--fail-on-regression]
+
+Exit code is 0 unless ``--fail-on-regression`` is given and at least one
+matched case regressed. Timing on shared CI runners is noisy, so the
+default is report-only with a generous threshold — the point is a visible
+per-commit trajectory, not a flaky gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+Key = Tuple[str, str, str]
+
+
+def load_records(path: str) -> Dict[Key, dict]:
+    """BENCH_*.json -> {(case, strategy, backend): record}. Duplicate keys
+    keep the *fastest* record: autotune_bench emits one record per timed
+    candidate, and several candidates (m_c / batch_size / box variants)
+    share a key — diffing best-known times avoids flagging a regression
+    just because a different slow variant survived pruning."""
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, list):
+        raise ValueError(f"{path}: expected a JSON array of perf records")
+    out: Dict[Key, dict] = {}
+    for rec in data:
+        key = (rec["case"], rec["strategy"], rec["backend"])
+        if key not in out or rec["us_per_call"] < out[key]["us_per_call"]:
+            out[key] = rec
+    return out
+
+
+def diff_records(baseline: Dict[Key, dict], fresh: Dict[Key, dict],
+                 threshold: float = 1.5) -> dict:
+    """-> {"rows": [...], "regressions": [...], "only_baseline": [...],
+    "only_fresh": [...]}. A row regresses when fresh us_per_call exceeds
+    baseline * threshold."""
+    rows: List[dict] = []
+    regressions: List[dict] = []
+    for key in sorted(set(baseline) & set(fresh)):
+        b, f = baseline[key], fresh[key]
+        base_us, fresh_us = b["us_per_call"], f["us_per_call"]
+        ratio = fresh_us / base_us if base_us > 0 else float("inf")
+        row = {"case": key[0], "strategy": key[1], "backend": key[2],
+               "baseline_us": base_us, "fresh_us": fresh_us,
+               "ratio": ratio, "delta_pct": (ratio - 1.0) * 100.0,
+               "regressed": ratio > threshold}
+        rows.append(row)
+        if row["regressed"]:
+            regressions.append(row)
+    return {
+        "rows": rows,
+        "regressions": regressions,
+        "only_baseline": sorted(set(baseline) - set(fresh)),
+        "only_fresh": sorted(set(fresh) - set(baseline)),
+    }
+
+
+def format_report(diff: dict, threshold: float) -> str:
+    lines = ["case,strategy,backend,baseline_us,fresh_us,delta_pct,flag"]
+    for r in diff["rows"]:
+        flag = "REGRESSED" if r["regressed"] else ""
+        lines.append(f"{r['case']},{r['strategy']},{r['backend']},"
+                     f"{r['baseline_us']:.1f},{r['fresh_us']:.1f},"
+                     f"{r['delta_pct']:+.1f}%,{flag}")
+    for key in diff["only_baseline"]:
+        lines.append(f"{key[0]},{key[1]},{key[2]},-,-,-,DROPPED")
+    for key in diff["only_fresh"]:
+        lines.append(f"{key[0]},{key[1]},{key[2]},-,-,-,NEW")
+    n_reg = len(diff["regressions"])
+    lines.append(f"# {len(diff['rows'])} matched, {n_reg} regressed "
+                 f"(threshold {threshold:g}x), "
+                 f"{len(diff['only_fresh'])} new, "
+                 f"{len(diff['only_baseline'])} dropped")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_*.json baseline")
+    ap.add_argument("fresh", help="freshly produced BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="regression ratio: fresh > baseline * threshold "
+                         "(default 1.5 — CI timing is noisy)")
+    ap.add_argument("--fail-on-regression", action="store_true",
+                    help="exit 1 if any matched case regressed")
+    args = ap.parse_args(argv)
+
+    diff = diff_records(load_records(args.baseline),
+                        load_records(args.fresh),
+                        threshold=args.threshold)
+    print(format_report(diff, args.threshold))
+    if args.fail_on_regression and diff["regressions"]:
+        print(f"perf_diff: {len(diff['regressions'])} regression(s) past "
+              f"{args.threshold:g}x", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

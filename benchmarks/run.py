@@ -6,6 +6,7 @@
   fig6/*      strategy speedups vs Par-Part (paper Fig. 6)
   table1/*    PPNL vs X-pencil seconds (paper Table 1)
   fig8/*      arithmetic-intensity sweep (paper Fig. 8)
+  sparse/*    compacted-schedule speedup vs fill fraction (clustered scenes)
   prefix/*    §6 prefix-sum op/barrier counts + timing
   traffic/*   Fig. 7 analogue (TPU staging-traffic model)
   autotune/*  measured winner vs the traffic model's pick
@@ -33,7 +34,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (autotune_bench, fig6_speedup, fig8_flop_sweep,
-                   lm_roofline, prefix_bench, table1_timing, traffic_model)
+                   fig_sparse, lm_roofline, prefix_bench, table1_timing,
+                   traffic_model)
 
     print("# traffic model (paper Fig. 7 analogue)", flush=True)
     traffic_model.run()
@@ -57,6 +59,8 @@ def main() -> None:
     table1_timing.run(full=args.full, record_sink=records)
     print("# fig8 FLOP sweep", flush=True)
     fig8_flop_sweep.run()
+    print("# sparse: compacted speedup vs fill fraction", flush=True)
+    fig_sparse.run(record_sink=records, division=8, n=300)
     print("# autotune: measured winner vs model pick", flush=True)
     autotune_bench.run(record_sink=records)
     if args.json:

@@ -8,11 +8,13 @@ and ``compute_interactions`` are compatibility shims over it.
 """
 
 from .domain import Domain
-from .api import (InteractionPlan, ParticleState, backend_matrix,
-                  choose_strategy, clear_executor_cache, dispatch_count,
-                  plan, register_backend)
-from .binning import (CellBins, bin_particles, dense_to_particles,
-                      gather_to_particles, interior_to_padded)
+from .api import (InteractionPlan, ParticleState, active_unit_count,
+                  backend_matrix, choose_strategy, clear_executor_cache,
+                  dispatch_count, plan, register_backend, suggest_max_active,
+                  supports_compact)
+from .binning import (CellBins, Occupancy, bin_particles, dense_to_particles,
+                      gather_pencil_rows, gather_to_particles,
+                      interior_to_padded, pencil_occupancy, subbox_occupancy)
 from .engine import CellListEngine, compute_interactions, suggest_m_c
 from .interactions import (
     PairKernel,
@@ -30,18 +32,20 @@ from .prefix import (
     paper_prefix_sum,
 )
 from .timing import time_fn
-from . import autotune, strategies, traffic
+from . import autotune, scenarios, strategies, traffic
 from .autotune import TuneResult, tune
 
 __all__ = [
-    "Domain", "CellBins", "bin_particles", "gather_to_particles",
-    "dense_to_particles", "interior_to_padded",
+    "Domain", "CellBins", "Occupancy", "bin_particles",
+    "gather_to_particles", "gather_pencil_rows", "dense_to_particles",
+    "interior_to_padded", "pencil_occupancy", "subbox_occupancy",
     "InteractionPlan", "ParticleState", "plan", "register_backend",
     "backend_matrix", "choose_strategy", "clear_executor_cache",
-    "dispatch_count", "tune", "TuneResult", "time_fn", "autotune",
+    "dispatch_count", "active_unit_count", "suggest_max_active",
+    "supports_compact", "tune", "TuneResult", "time_fn", "autotune",
     "CellListEngine", "compute_interactions", "suggest_m_c",
     "PairKernel", "make_gravity", "make_high_flop", "make_lennard_jones",
     "make_low_flop", "make_sph_density", "pair_contribution",
     "paper_prefix_sum", "exclusive_prefix_sum", "operation_counts",
-    "blelloch_counts", "strategies", "traffic",
+    "blelloch_counts", "scenarios", "strategies", "traffic",
 ]

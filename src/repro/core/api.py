@@ -42,7 +42,9 @@ import jax.numpy as jnp
 
 from . import strategies as S
 from . import traffic
-from .binning import CellBins, bin_particles, dense_to_particles
+from .binning import (CellBins, bin_particles, dense_to_particles,
+                      pencil_counts, pencil_occupancy, subbox_counts,
+                      subbox_occupancy)
 from .domain import Domain
 from .interactions import PairKernel, make_lennard_jones
 
@@ -80,19 +82,33 @@ class ParticleState:
 # (backend, strategy) -> fn(plan, bins, state) -> (forces (N, 3), pot (N,))
 _BACKENDS: Dict[Tuple[str, str], Callable] = {}
 
+# (backend, strategy) pairs whose implementation honours ``plan.compact``
+# (the occupancy-compacted execution path). Populated by register_backend.
+_COMPACT_OK: set = set()
 
-def register_backend(backend: str, strategy: str):
+
+def register_backend(backend: str, strategy: str, compact: bool = False):
     """Register an implementation under ``(backend, strategy)``.
 
     The implementation receives the (static) plan, the binned slot layout,
     and the traced state, and must return per-particle ``(forces, pot)`` —
     the one normalized signature both the reference schedules and the Pallas
-    kernels conform to.
+    kernels conform to. ``compact=True`` declares that the implementation
+    also honours ``plan.compact`` (occupancy-compacted iteration).
     """
     def deco(fn: Callable) -> Callable:
         _BACKENDS[(backend, strategy)] = fn
+        if compact:
+            _COMPACT_OK.add((backend, strategy))
         return fn
     return deco
+
+
+def supports_compact(backend: str, strategy: str) -> bool:
+    """True if ``(backend, strategy)`` implements the compacted path."""
+    if backend == "pallas":
+        import repro.kernels  # noqa: F401  (trigger registration)
+    return (backend, strategy) in _COMPACT_OK
 
 
 def get_backend(backend: str, strategy: str) -> Callable:
@@ -141,6 +157,8 @@ class InteractionPlan:
     batch_size: int = 64
     box: Optional[Tuple[int, int, int]] = None   # allin sub-box (bx, by, bz)
     interpret: Optional[bool] = None             # pallas: None = auto
+    compact: bool = False                        # occupancy-compacted path
+    max_active: Optional[int] = None             # static active-unit bound
 
     def __post_init__(self):
         if self.strategy not in ("naive_n2", *STRATEGY_NAMES):
@@ -151,6 +169,15 @@ class InteractionPlan:
             # directly-constructed plans get the VMEM-budget sub-box too —
             # the pallas backend needs a concrete tiling at trace time
             object.__setattr__(self, "box", _allin_box(self.domain, self.m_c))
+        if self.compact:
+            if self.strategy not in ("cell_dense", "xpencil", "allin"):
+                raise ValueError(
+                    f"compact=True is not defined for {self.strategy!r} "
+                    "(only the cell schedules have empty work units to skip)")
+            if not self.max_active or self.max_active < 1:
+                raise ValueError(
+                    "compact=True needs a positive static max_active bound "
+                    "(plan(..., positions=...) measures one)")
 
     # -- hot path ----------------------------------------------------------
 
@@ -181,20 +208,57 @@ class InteractionPlan:
     # -- M_C safety net ----------------------------------------------------
 
     def check_overflow(self, state: ParticleState) -> bool:
-        """True if some cell holds more than ``m_c`` particles (the static
-        bound no longer covers these positions and forces would be wrong)."""
-        return int(_max_cell_count(self.domain, state.positions)) > self.m_c
+        """True if a static bound no longer covers these positions: some
+        cell holds more than ``m_c`` particles, or (compacted plans) more
+        work units are active than ``max_active`` — either way results
+        would silently drop interactions, so the caller must replan."""
+        counts = _cell_counts(self.domain, state.positions)
+        if int(jnp.max(counts)) > self.m_c:
+            return True
+        if self.compact:
+            n_act = active_unit_count(self.domain, state.positions,
+                                      self.strategy, box=self.box,
+                                      counts=counts)
+            if n_act > self.max_active:
+                return True
+        return False
 
     def replan(self, state: ParticleState, slack: float = 1.5,
                align: int = 8) -> "InteractionPlan":
-        """A new plan whose ``m_c`` covers ``state`` with slack (sublane
-        aligned, via ``suggest_m_c``) and strictly exceeds the current
-        bound. Sub-box sizing is recomputed since it depends on ``m_c``."""
+        """A new plan whose static bounds cover ``state``.
+
+        Only the bound that actually overflowed grows (so a pencil-count
+        overflow does not churn ``m_c`` — and with it the whole slot
+        layout — for nothing): an overflowing ``m_c`` is re-measured with
+        slack (sublane aligned, via ``suggest_m_c``) and strictly exceeds
+        the current bound; a compacted plan whose active-unit count
+        outgrew ``max_active`` gets a re-measured bound the same way. The
+        allin sub-box is recomputed whenever ``m_c`` changes (its sizing
+        depends on it), and a compacted allin re-measures ``max_active``
+        against the new tiling."""
         from .engine import suggest_m_c
-        measured = suggest_m_c(self.domain, state.positions, slack=slack,
-                               align=align)
-        grow = -(-(self.m_c + 1) // align) * align   # smallest aligned > m_c
-        return dataclasses.replace(self, m_c=max(measured, grow), box=None)
+        m_c = self.m_c
+        if int(_max_cell_count(self.domain, state.positions)) > self.m_c:
+            measured = suggest_m_c(self.domain, state.positions, slack=slack,
+                                   align=align)
+            grow = -(-(self.m_c + 1) // align) * align  # aligned, > m_c
+            m_c = max(measured, grow)
+        box = self.box if m_c == self.m_c else None
+        max_active = self.max_active
+        if self.compact:
+            if self.strategy == "allin" and box is None:
+                # fix the new tiling first: the active-sub-box bound must
+                # be measured against the grid that will actually run
+                box = _allin_box(self.domain, m_c)
+            n_act = active_unit_count(self.domain, state.positions,
+                                      self.strategy, box=box)
+            if n_act > max_active or box != self.box:
+                suggested = suggest_max_active(self.domain, state.positions,
+                                               self.strategy, box=box,
+                                               align=align)
+                max_active = max(suggested, n_act)
+        return dataclasses.replace(self, m_c=m_c, box=box,
+                                   max_active=max_active)
 
     def execute_or_replan(self, state: ParticleState
                           ) -> Tuple[Tuple[Array, Array], "InteractionPlan"]:
@@ -222,6 +286,7 @@ def plan(domain: Domain, kernel: Optional[PairKernel] = None, *,
          strategy: str = "auto", backend: str = "reference",
          batch_size: int = 64, box: Optional[Tuple[int, int, int]] = None,
          interpret: Optional[bool] = None,
+         compact: bool = False, max_active: Optional[int] = None,
          m_c_slack: float = 1.5) -> InteractionPlan:
     """Build an :class:`InteractionPlan` (static planning, done once).
 
@@ -244,6 +309,15 @@ def plan(domain: Domain, kernel: Optional[PairKernel] = None, *,
         everywhere, plus native Pallas on TPU).
       box: All-in-SM sub-box override; sized from the VMEM budget otherwise.
       interpret: force Pallas interpret mode (None = auto by platform).
+      compact: occupancy-compacted execution — iterate only work units
+        (pencils / sub-boxes) that actually hold particles. Big win on
+        clustered or inhomogeneous distributions; a no-op-sized overhead on
+        uniform ones. ``strategy="autotune"`` explores compact candidates
+        on its own and ignores this flag.
+      max_active: static bound on active work units for ``compact=True``;
+        measured from ``positions`` (with slack) when omitted. Like
+        ``m_c``, an exceeded bound is caught by ``check_overflow`` /
+        ``execute_or_replan``, never silently wrong.
     """
     kernel = kernel or make_lennard_jones()
     if strategy == "autotune":
@@ -270,26 +344,51 @@ def plan(domain: Domain, kernel: Optional[PairKernel] = None, *,
         if positions is None:
             raise ValueError('strategy="auto" needs positions (the cost '
                              "model is parameterized by the fill ratio)")
+        # compact=True narrows the choice to the cell schedules that have a
+        # compacted path — otherwise whether auto+compact works would
+        # depend on which strategy the cost model happens to pick
+        among = (("cell_dense", "xpencil", "allin") if compact else None)
         strategy = choose_strategy(domain, m_c,
-                                   positions.shape[0] / domain.n_cells)
+                                   positions.shape[0] / domain.n_cells,
+                                   among=among)
+    if compact:
+        if not supports_compact(backend, strategy):
+            raise ValueError(
+                f"backend {backend!r} has no compacted path for strategy "
+                f"{strategy!r}; compact-capable pairs: "
+                f"{sorted(_COMPACT_OK)}")
+        if max_active is None:
+            if positions is None:
+                raise ValueError("compact=True needs either max_active or "
+                                 "positions (to measure the active-unit "
+                                 "bound)")
+            mbox = box
+            if strategy == "allin" and mbox is None:
+                mbox = _allin_box(domain, m_c)
+            max_active = suggest_max_active(domain, positions, strategy,
+                                            box=mbox)
     p = InteractionPlan(domain=domain, kernel=kernel, m_c=m_c,
                         strategy=strategy, backend=backend,
-                        batch_size=batch_size, box=box, interpret=interpret)
+                        batch_size=batch_size, box=box, interpret=interpret,
+                        compact=compact, max_active=max_active)
     if strategy != "naive_n2":
         get_backend(backend, strategy)   # fail at plan time, not execute time
     return p
 
 
-def choose_strategy(domain: Domain, m_c: int, avg_ppc: float) -> str:
+def choose_strategy(domain: Domain, m_c: int, avg_ppc: float,
+                    among: Optional[Tuple[str, ...]] = None) -> str:
     """``strategy="auto"``: minimize modelled HBM bytes per interaction.
 
     The paper's Fig. 7 argument as a decision rule — the schedule that moves
     the fewest global-memory bytes per interaction wins in the memory-bound
     regime the paper targets. Ties break toward the paper's X-pencil.
+    ``among`` restricts the choice (e.g. to the compact-capable schedules).
     """
     reports = traffic.model(domain, m_c, max(avg_ppc, 1e-3))
     order = {"xpencil": 0, "allin": 1, "cell_dense": 2, "par_part": 3}
-    return min(reports.values(),
+    pool = [r for r in reports.values() if among is None or r.strategy in among]
+    return min(pool,
                key=lambda r: (r.hbm_bytes_per_interaction,
                               order[r.strategy])).strategy
 
@@ -299,11 +398,60 @@ def _allin_box(domain: Domain, m_c: int) -> Tuple[int, int, int]:
     return S.shrink_to_divisors(domain, S.subbox_dims(domain, m_c))
 
 
-def _max_cell_count(domain: Domain, positions: Array) -> Array:
-    counts = jax.ops.segment_sum(
+def _cell_counts(domain: Domain, positions: Array) -> Array:
+    return jax.ops.segment_sum(
         jnp.ones((positions.shape[0],), jnp.int32),
         domain.cell_ids(positions), num_segments=domain.n_cells)
-    return jnp.max(counts)
+
+
+def _max_cell_count(domain: Domain, positions: Array) -> Array:
+    return jnp.max(_cell_counts(domain, positions))
+
+
+def active_unit_count(domain: Domain, positions: Array,
+                      strategy: str = "xpencil",
+                      box: Optional[Tuple[int, int, int]] = None,
+                      counts: Optional[Array] = None) -> int:
+    """Number of active work units — (z, y) pencils (``xpencil`` /
+    ``cell_dense``) or sub-boxes (``allin``, for the given tiling) — that
+    hold at least one particle. One-off (outside jit) occupancy probe;
+    pass precomputed per-cell ``counts`` to skip the binning pass."""
+    if counts is None:
+        counts = _cell_counts(domain, positions)
+    if strategy == "allin":
+        if box is None:
+            box = _allin_box(domain, 1)
+        box = S.shrink_to_divisors(domain, box)
+        uc = subbox_counts(domain, counts, box)
+    else:
+        uc = pencil_counts(domain, counts)
+    return int(jnp.sum(uc > 0))
+
+
+def n_units(domain: Domain, strategy: str = "xpencil",
+            box: Optional[Tuple[int, int, int]] = None) -> int:
+    """Total work units of a schedule (denominator of the fill fraction)."""
+    if strategy == "allin":
+        if box is None:
+            box = _allin_box(domain, 1)
+        bx, by, bz = S.shrink_to_divisors(domain, box)
+        return (domain.nx // bx) * (domain.ny // by) * (domain.nz // bz)
+    return domain.nz * domain.ny
+
+
+def suggest_max_active(domain: Domain, positions: Array,
+                       strategy: str = "xpencil",
+                       box: Optional[Tuple[int, int, int]] = None,
+                       slack: float = 1.25, align: int = 8) -> int:
+    """One-off static ``max_active`` bound: measured active units with
+    slack, rounded up to ``align``, clipped to the total unit count (a full
+    bound degrades gracefully to dense coverage). The compacted-path
+    counterpart of ``suggest_m_c``."""
+    n_act = active_unit_count(domain, positions, strategy, box=box)
+    total = n_units(domain, strategy, box=box)
+    bound = max(1, int(n_act * slack + 0.999))
+    bound = -(-bound // align) * align
+    return min(bound, total)
 
 
 # --------------------------------------------------------------------------
@@ -373,16 +521,34 @@ def _ref_par_part(p: InteractionPlan, bins: CellBins, state: ParticleState):
     return jnp.stack([fx, fy, fz], axis=-1), pot
 
 
-def _ref_dense(fn):
+def _ref_dense(name):
+    """Reference cell-schedule backend: dense sweep, or the occupancy-
+    compacted variant when the plan asks for it (``plan.compact``)."""
+    dense_fn = S.STRATEGIES[name]
+    sparse_fn = S.SPARSE_STRATEGIES[name]
+
     def impl(p: InteractionPlan, bins: CellBins, state: ParticleState):
-        kwargs = {"batch_size": p.batch_size}
-        if fn is S.allin:
-            kwargs["box"] = p.box
-        fx, fy, fz, pot = fn(p.domain, bins, p.kernel, **kwargs)
-        return dense_to_particles(p.domain, bins, fx, fy, fz, pot)
+        if p.compact:
+            if name == "allin":
+                box = S.shrink_to_divisors(p.domain, p.box)
+                occ = subbox_occupancy(p.domain, bins.counts, box,
+                                       p.max_active)
+                out = sparse_fn(p.domain, bins, p.kernel, occ, box,
+                                batch_size=p.batch_size)
+            else:
+                occ = pencil_occupancy(p.domain, bins.counts, p.max_active)
+                out = sparse_fn(p.domain, bins, p.kernel, occ,
+                                batch_size=p.batch_size)
+        else:
+            kwargs = {"batch_size": p.batch_size}
+            if name == "allin":
+                kwargs["box"] = p.box
+            out = dense_fn(p.domain, bins, p.kernel, **kwargs)
+        return dense_to_particles(p.domain, bins, *out)
     return impl
 
 
-register_backend("reference", "cell_dense")(_ref_dense(S.cell_dense))
-register_backend("reference", "xpencil")(_ref_dense(S.xpencil))
-register_backend("reference", "allin")(_ref_dense(S.allin))
+register_backend("reference", "cell_dense", compact=True)(
+    _ref_dense("cell_dense"))
+register_backend("reference", "xpencil", compact=True)(_ref_dense("xpencil"))
+register_backend("reference", "allin", compact=True)(_ref_dense("allin"))

@@ -49,7 +49,8 @@ Array = jax.Array
 
 # Bump when the candidate space or cache schema changes: stale entries from
 # an older tuner are skipped (and overwritten), not misread.
-CACHE_VERSION = 1
+# v2: dense-vs-compact candidate axis + occupancy bucket in the cache key.
+CACHE_VERSION = 2
 
 _CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 _CACHE_FILE = "autotune_cache.json"
@@ -71,24 +72,31 @@ class Candidate:
     batch_size: int
     m_c: int
     box: Optional[Tuple[int, int, int]] = None   # allin sub-box
+    compact: bool = False                        # occupancy-compacted path
+    max_active: Optional[int] = None             # static active-unit bound
 
     def plan(self, domain: Domain, kernel: PairKernel,
              interpret: Optional[bool] = None) -> InteractionPlan:
         return InteractionPlan(domain=domain, kernel=kernel, m_c=self.m_c,
                                strategy=self.strategy, backend=self.backend,
                                batch_size=self.batch_size, box=self.box,
-                               interpret=interpret)
+                               interpret=interpret, compact=self.compact,
+                               max_active=self.max_active)
 
     def to_json(self) -> dict:
         return {"strategy": self.strategy, "backend": self.backend,
                 "batch_size": self.batch_size, "m_c": self.m_c,
-                "box": list(self.box) if self.box else None}
+                "box": list(self.box) if self.box else None,
+                "compact": self.compact, "max_active": self.max_active}
 
     @classmethod
     def from_json(cls, d: dict) -> "Candidate":
         return cls(strategy=d["strategy"], backend=d["backend"],
                    batch_size=int(d["batch_size"]), m_c=int(d["m_c"]),
-                   box=tuple(d["box"]) if d.get("box") else None)
+                   box=tuple(d["box"]) if d.get("box") else None,
+                   compact=bool(d.get("compact", False)),
+                   max_active=(int(d["max_active"])
+                               if d.get("max_active") else None))
 
 
 def enumerate_candidates(domain: Domain, m_c_choices: Sequence[int], *,
@@ -145,14 +153,41 @@ def _allin_boxes(domain: Domain, m_c: int,
     return list(dict.fromkeys(boxes))
 
 
-def _cost(domain: Domain, avg_ppc: float, c: Candidate) -> float:
+def _cost(domain: Domain, avg_ppc: float, c: Candidate,
+          fill_for=None) -> float:
+    fill = fill_for(c) if (fill_for is not None and c.compact) else 1.0
     return traffic.candidate_cost(domain, c.m_c, avg_ppc, c.strategy,
-                                  subbox=c.box)
+                                  subbox=c.box, compact=c.compact,
+                                  fill=fill)
+
+
+def compact_twins(domain: Domain, positions: Array,
+                  candidates: Sequence[Candidate], *, slack: float = 1.25,
+                  align: int = 8) -> List[Candidate]:
+    """The dense-vs-compact candidate axis: for every candidate whose
+    (backend, strategy) implements the occupancy-compacted path, a twin
+    with ``compact=True`` and a ``max_active`` bound measured from
+    ``positions`` (the same slack-plus-alignment contract as ``m_c``)."""
+    from .api import suggest_max_active, supports_compact
+    twins: List[Candidate] = []
+    bounds: Dict[Tuple, int] = {}
+    for c in candidates:
+        if c.compact or not supports_compact(c.backend, c.strategy):
+            continue
+        key = ("box", c.box) if c.strategy == "allin" else ("pencil",)
+        if key not in bounds:
+            bounds[key] = suggest_max_active(
+                domain, positions, c.strategy, box=c.box,
+                slack=slack, align=align)
+        twins.append(dataclasses.replace(c, compact=True,
+                                         max_active=bounds[key]))
+    return list(dict.fromkeys(twins))
 
 
 def prune_candidates(domain: Domain, avg_ppc: float,
                      candidates: Sequence[Candidate],
-                     top_k: int = DEFAULT_TOP_K
+                     top_k: int = DEFAULT_TOP_K,
+                     fill_for=None
                      ) -> Tuple[List[Candidate], List[Candidate]]:
     """Model-guided pruning to ``top_k`` candidates. -> (kept, pruned).
 
@@ -163,14 +198,20 @@ def prune_candidates(domain: Domain, avg_ppc: float,
     batch-size variants, so a straight global sort would fill ``top_k``
     with duplicates of its favourite schedule and the stopwatch would
     never get to contradict it (the exact failure this tuner exists for).
+    Dense and compacted variants of a strategy form separate round-robin
+    queues for the same reason: the fill-scaled model must not be able to
+    crowd its dense twin (or vice versa) out of the timed field.
+
+    ``fill_for``: optional ``Candidate -> fill fraction`` hook used to
+    score compacted candidates (measured occupancy; default 1.0).
     """
     def order_key(c: Candidate):
-        return (_cost(domain, avg_ppc, c), c.backend, c.batch_size, c.m_c,
-                c.box or ())
+        return (_cost(domain, avg_ppc, c, fill_for), c.backend,
+                c.batch_size, c.m_c, c.box or (), c.compact)
 
-    by_strategy: Dict[str, List[Candidate]] = {}
+    by_strategy: Dict[Tuple[str, bool], List[Candidate]] = {}
     for c in sorted(candidates, key=order_key):
-        by_strategy.setdefault(c.strategy, []).append(c)
+        by_strategy.setdefault((c.strategy, c.compact), []).append(c)
     queues = sorted(by_strategy.values(),
                     key=lambda q: order_key(q[0]))
     interleaved = [c for round_ in itertools.zip_longest(*queues)
@@ -203,6 +244,17 @@ def ppc_bucket(avg_ppc: float) -> str:
     return f"2^{round(math.log2(max(avg_ppc, 0.125)))}"
 
 
+def occupancy_bucket(fill: float) -> str:
+    """Log2 active-pencil-fill bucket for the cache key.
+
+    Mean ppc alone cannot distinguish a uniform gas from a tight blob with
+    the same particle count — but those two regimes have different winners
+    (compact wins the blob, dense the gas). Bucketing the measured fill
+    fraction keeps their cached decisions separate while nearby fills
+    share one."""
+    return f"occ2^{round(math.log2(min(max(fill, 1.0 / 4096.0), 1.0)))}"
+
+
 def _kernel_id(kernel: PairKernel) -> str:
     """Stable kernel identity for the disk cache: name plus a digest of the
     value-based identity tuple ``(name, flops, static_params)`` (PairKernel's
@@ -214,12 +266,14 @@ def _kernel_id(kernel: PairKernel) -> str:
 
 
 def cache_key(platform: str, domain: Domain, m_c: int, avg_ppc: float,
-              kernel: PairKernel, backends: Sequence[str]) -> str:
+              kernel: PairKernel, backends: Sequence[str],
+              pencil_fill: float = 1.0) -> str:
     return "|".join([
         platform,
         "x".join(str(n) for n in domain.ncells),
         f"mc{m_c}",
         f"ppc{ppc_bucket(avg_ppc)}",
+        occupancy_bucket(pencil_fill),
         _kernel_id(kernel),
         "+".join(sorted(backends)),
     ])
@@ -287,6 +341,7 @@ def tune(domain: Domain, kernel: Optional[PairKernel] = None,
          box: Optional[Tuple[int, int, int]] = None,
          candidates: Optional[Sequence[Candidate]] = None,
          m_c_slack: float = 1.5,
+         include_compact: bool = True,
          top_k: int = DEFAULT_TOP_K,
          reps: Optional[int] = None, budget_s: float = 0.5,
          interpret: Optional[bool] = None,
@@ -310,7 +365,12 @@ def tune(domain: Domain, kernel: Optional[PairKernel] = None,
         and ``("reference", "pallas")`` on TPU.
       box: extra All-in-SM sub-box to try alongside the derived candidates
         (shrunk to grid divisors).
-      candidates: explicit candidate list (overrides enumeration).
+      candidates: explicit candidate list (overrides enumeration; no
+        compact twins are added to an explicit list).
+      include_compact: add an occupancy-compacted twin for every
+        enumerated candidate whose (backend, strategy) implements the
+        compacted path — the dense-vs-compact axis of the search. The
+        bound is measured from ``positions``.
       top_k: survivors after model pruning; raise it if you suspect the
         model is mis-ranking your regime.
       reps / budget_s: stopwatch controls (see ``time_fn``).
@@ -326,6 +386,7 @@ def tune(domain: Domain, kernel: Optional[PairKernel] = None,
         backends = (("reference", "pallas") if platform == "tpu"
                     else ("reference",))
 
+    from .api import active_unit_count, n_units
     from .engine import suggest_m_c
     max_count = int(_max_cell_count(domain, positions))
     if m_c is not None:
@@ -337,7 +398,41 @@ def tune(domain: Domain, kernel: Optional[PairKernel] = None,
     key_m_c = min(m_c_choices)
     avg_ppc = positions.shape[0] / domain.n_cells
 
-    key = cache_key(platform, domain, key_m_c, avg_ppc, kernel, backends)
+    # measured occupancy: how many work units are actually active. Keyed
+    # per unit type (pencils; sub-boxes per tiling) and memoized — used to
+    # score compacted candidates, reject too-small cached bounds, and
+    # bucket the cache key (mean ppc alone cannot tell a blob from a gas).
+    _occ: Dict[Tuple, Tuple[int, int]] = {}
+
+    def occ_of(c: Candidate) -> Tuple[int, int]:     # (n_active, n_units)
+        key_ = ("box", c.box) if c.strategy == "allin" else ("pencil",)
+        if key_ not in _occ:
+            _occ[key_] = (active_unit_count(domain, positions, c.strategy,
+                                            box=c.box),
+                          n_units(domain, c.strategy, box=c.box))
+        return _occ[key_]
+
+    def fill_for(c: Candidate) -> float:
+        n_act, total = occ_of(c)
+        return n_act / max(total, 1)
+
+    def active_safe(c: Candidate, strict: bool = True) -> bool:
+        if not c.compact:
+            return True
+        if c.max_active is None:
+            if strict:             # caller-supplied candidate: loud error
+                raise ValueError(
+                    f"compact candidate {c} has no max_active bound "
+                    "(repro.core.suggest_max_active measures one)")
+            return False           # malformed cache entry: just re-measure
+        return c.max_active >= occ_of(c)[0]
+
+    _occ[("pencil",)] = (active_unit_count(domain, positions, "xpencil"),
+                         n_units(domain, "xpencil"))
+    pencil_fill = _occ[("pencil",)][0] / max(_occ[("pencil",)][1], 1)
+
+    key = cache_key(platform, domain, key_m_c, avg_ppc, kernel, backends,
+                    pencil_fill=pencil_fill)
     cfile = cache_path()
 
     # build the requested candidate space first (cheap — no timing): the
@@ -349,7 +444,11 @@ def tune(domain: Domain, kernel: Optional[PairKernel] = None,
             domain, m_c_choices, backends=backends, batch_sizes=batch_sizes,
             strategies=strategies,
             extra_allin_boxes=(box,) if box is not None else ())
-    candidates = [c for c in candidates if c.m_c >= max_count]
+        if include_compact:
+            candidates = list(candidates) + compact_twins(
+                domain, positions, candidates)
+    candidates = [c for c in candidates
+                  if c.m_c >= max_count and active_safe(c)]
     if not candidates:
         raise ValueError(
             f"no overflow-safe candidates: max cell count {max_count} "
@@ -365,14 +464,17 @@ def tune(domain: Domain, kernel: Optional[PairKernel] = None,
         if entry and entry.get("version") == CACHE_VERSION:
             cand = Candidate.from_json(entry["candidate"])
             # trust the entry only if it is overflow-safe for *these*
-            # positions (bucket collisions can cache a smaller bound) and
-            # inside the requested space — otherwise re-measure
-            if cand.m_c >= max_count and cand in set(candidates):
+            # positions (bucket collisions can cache a smaller bound —
+            # for m_c *and* for a compacted max_active) and inside the
+            # requested space — otherwise re-measure
+            if (cand.m_c >= max_count and active_safe(cand, strict=False)
+                    and cand in set(candidates)):
                 return TuneResult(
                     plan=cand.plan(domain, kernel, interpret), candidate=cand,
                     timings={}, reps={}, pruned=(), cache_hit=True,
                     cache_file=str(cfile))
-    kept, pruned = prune_candidates(domain, avg_ppc, candidates, top_k=top_k)
+    kept, pruned = prune_candidates(domain, avg_ppc, candidates,
+                                    top_k=top_k, fill_for=fill_for)
 
     state = ParticleState(positions)
     timings: Dict[Candidate, float] = {}

@@ -199,6 +199,125 @@ def gather_to_particles(bins: CellBins, plane: Array) -> Array:
     return plane.reshape(-1)[bins.particle_slot]
 
 
+# --------------------------------------------------------------------------
+# occupancy: the sparsity summary behind the compacted schedules
+# --------------------------------------------------------------------------
+#
+# The dense slot layout charges every strategy for the *global* worst case:
+# all (z, y) pencils (or sub-boxes) are visited, each padded to m_c slots.
+# On inhomogeneous distributions most of those work units are empty. The
+# occupancy summary is the trace-time-safe sparsity map: per-unit particle
+# counts plus a compacted list of the active unit indices, under a static
+# ``max_active`` bound that mirrors the m_c replan contract (overflow is
+# detectable, never silent — a too-small bound drops work units, so the
+# plan layer re-plans with a larger bound instead of computing wrong
+# forces).
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Occupancy:
+    """Compacted active-work-unit summary (pencils or sub-boxes).
+
+    ``active`` holds the linearized indices of the units with at least one
+    particle, padded to the static bound ``max_active`` with index 0 (always
+    a valid unit to *read*; padded entries are dropped on the write side via
+    :meth:`scatter_indices`). ``n_active`` is the true count — when it
+    exceeds ``max_active`` the summary has overflowed and results computed
+    from it would silently miss units, exactly like a cell overflowing m_c.
+    """
+
+    unit_counts: Array            # (n_units,) int32 particles per work unit
+    active: Array                 # (max_active,) int32 unit ids, 0-padded
+    n_active: Array               # () int32 true number of active units
+    max_active: int = dataclasses.field(metadata=dict(static=True))
+    n_units: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def overflowed(self) -> Array:
+        """True when active units were dropped from ``active`` (replan)."""
+        return self.n_active > self.max_active
+
+    def scatter_indices(self) -> Array:
+        """(max_active,) write-side unit ids: padding slots are pushed out
+        of range so a ``mode='drop'`` scatter discards them."""
+        slot = jnp.arange(self.max_active, dtype=jnp.int32)
+        return jnp.where(slot < self.n_active, self.active,
+                         jnp.int32(self.n_units))
+
+    @property
+    def fill_fraction(self) -> Array:
+        return self.n_active / max(self.n_units, 1)
+
+
+def _compact_active(unit_counts: Array, max_active: int,
+                    n_units: int) -> Occupancy:
+    active = jnp.nonzero(unit_counts > 0, size=max_active,
+                         fill_value=0)[0].astype(jnp.int32)
+    n_active = jnp.sum(unit_counts > 0).astype(jnp.int32)
+    return Occupancy(unit_counts=unit_counts, active=active,
+                     n_active=n_active, max_active=max_active,
+                     n_units=n_units)
+
+
+def counts_grid(domain: Domain, counts: Array) -> Array:
+    """(n_cells,) linear cell counts -> (nz, ny, nx) grid (X fastest)."""
+    return counts.reshape(domain.nz, domain.ny, domain.nx)
+
+
+def pencil_counts(domain: Domain, counts: Array) -> Array:
+    """(n_cells,) cell counts -> (nz*ny,) particles per (z, y) X-pencil.
+    Unit id = z * ny + y — the pencil-schedule linearization. The single
+    source of truth for pencil unit ids (occupancy summaries and the plan
+    layer's overflow probes both derive from it)."""
+    return counts_grid(domain, counts).sum(axis=-1).reshape(-1)
+
+
+def subbox_counts(domain: Domain, counts: Array,
+                  box: Tuple[int, int, int]) -> Array:
+    """(n_cells,) cell counts -> (gz*gy*gx,) particles per sub-box of the
+    All-in-SM tiling. ``box`` = (bx, by, bz) must divide the grid. Unit
+    id = iz*(gy*gx) + iy*gx + ix, matching the allin block linearization."""
+    nx, ny, nz = domain.ncells
+    bx, by, bz = box
+    gx, gy, gz = nx // bx, ny // by, nz // bz
+    grid = counts_grid(domain, counts)
+    return grid.reshape(gz, bz, gy, by, gx, bx).sum(axis=(1, 3, 5)).reshape(-1)
+
+
+def pencil_occupancy(domain: Domain, counts: Array,
+                     max_active: int) -> Occupancy:
+    """Active (z, y) X-pencils (see :func:`pencil_counts` for unit ids).
+    Traceable: works on ``CellBins.counts`` inside jit."""
+    return _compact_active(pencil_counts(domain, counts), max_active,
+                           domain.nz * domain.ny)
+
+
+def subbox_occupancy(domain: Domain, counts: Array,
+                     box: Tuple[int, int, int], max_active: int) -> Occupancy:
+    """Active sub-boxes (see :func:`subbox_counts` for unit ids)."""
+    nx, ny, nz = domain.ncells
+    bx, by, bz = box
+    n_boxes = (nx // bx) * (ny // by) * (nz // bz)
+    return _compact_active(subbox_counts(domain, counts, box), max_active,
+                           n_boxes)
+
+
+def gather_pencil_rows(plane: Array, active_zy: Array, ny: int,
+                       dz: int = 0, dy: int = 0) -> Array:
+    """Compacted pencil-row gather: one padded row per active pencil.
+
+    ``active_zy`` holds interior pencil ids ``z * ny + y``; the returned
+    array is ``(len(active_zy), (nx+2)*m_c)`` — row ``a`` is the padded
+    ``(z + dz + 1, y + dy + 1)`` row of ``plane``. This is the sparse
+    counterpart of the dense schedules' per-pencil ``dynamic_slice``: one
+    vectorized gather instead of a loop over all nz*ny pencils.
+    """
+    z = active_zy // ny + 1 + dz
+    y = active_zy % ny + 1 + dy
+    return plane[z, y, :]
+
+
 def interior(domain: Domain, plane: Array, m_c: int) -> Array:
     """View of the non-ghost region, reshaped to (nz, ny, nx, m_c)."""
     nx, ny, nz = domain.ncells

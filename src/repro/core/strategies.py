@@ -26,13 +26,12 @@ it plays the role of the GPU grid — how many pencils/cells are in flight.
 
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .binning import CellBins, interior
+from .binning import CellBins, Occupancy, gather_pencil_rows
 from .domain import Domain
 from .interactions import PairKernel, pair_contribution
 
@@ -167,7 +166,8 @@ def cell_dense(domain: Domain, bins: CellBins, kernel: PairKernel,
                .reshape(nx, m_c) for f in ("x", "y", "z")}
         tid = row(bins.slot_id, 0, 0)[m_c:(nx + 1) * m_c].reshape(nx, m_c)
 
-        acc = tuple(jnp.zeros((nx, m_c)) for _ in range(4))
+        acc = tuple(jnp.zeros((nx, m_c), dtype=bins.planes["x"].dtype)
+                    for _ in range(4))
         for dz in (-1, 0, 1):
             for dy in (-1, 0, 1):
                 srow = {f: row(bins.planes[f], dz, dy)
@@ -217,7 +217,8 @@ def xpencil(domain: Domain, bins: CellBins, kernel: PairKernel,
                .reshape(nx, m_c) for f in ("x", "y", "z")}
         tid = row(bins.slot_id, 0, 0)[m_c:(nx + 1) * m_c].reshape(nx, m_c)
 
-        acc = tuple(jnp.zeros((nx, m_c)) for _ in range(4))
+        acc = tuple(jnp.zeros((nx, m_c), dtype=bins.planes["x"].dtype)
+                    for _ in range(4))
         for dz in (-1, 0, 1):
             for dy in (-1, 0, 1):
                 # stage one neighbor pencil row, window it per target cell
@@ -291,22 +292,14 @@ def shrink_to_divisors(domain: Domain,
                  for n, b in zip(domain.ncells, box))
 
 
-def allin(domain: Domain, bins: CellBins, kernel: PairKernel,
-          box: Tuple[int, int, int] | None = None,
-          batch_size: int = 8) -> ForceOut:
-    """All-in-SM schedule: grid over sub-boxes, one halo block staged each.
-
-    The grid must tile the domain exactly, so the sub-box is shrunk to a
-    divisor of each axis (the ghost ring keeps out-of-domain reads valid).
-    """
-    nx, ny, nz = domain.ncells
+def _allin_box_body(domain: Domain, bins: CellBins, kernel: PairKernel,
+                    box: Tuple[int, int, int]):
+    """The per-sub-box closure shared by the dense and compacted All-in-SM
+    paths (one body, two iteration spaces — the compaction cannot drift)."""
     m_c = bins.m_c
     cut2 = domain.cutoff ** 2
-    if box is None:
-        box = subbox_dims(domain, m_c)
-
-    bx, by, bz = shrink_to_divisors(domain, box)
-    gx, gy, gz = nx // bx, ny // by, nz // bz
+    bx, by, bz = box
+    gx, gy = domain.nx // bx, domain.ny // by
     row_len_blk = (bx + 2) * m_c
 
     def one_box(bid):
@@ -329,7 +322,9 @@ def allin(domain: Domain, bins: CellBins, kernel: PairKernel,
 
         tx, ty, tz, tid = inner(sxp), inner(syp), inner(szp), inner(sidp)
 
-        acc = tuple(jnp.zeros((bz, by, bx, m_c)) for _ in range(4))
+        acc = tuple(jnp.zeros((bz, by, bx, m_c),
+                              dtype=bins.planes["x"].dtype)
+                    for _ in range(4))
         widx = _window_indices(bx, m_c)
         for dz in (-1, 0, 1):
             for dy in (-1, 0, 1):
@@ -341,6 +336,26 @@ def allin(domain: Domain, bins: CellBins, kernel: PairKernel,
                                    sx, sy, sz, sid)
                 acc = tuple(a + o for a, o in zip(acc, out))
         return acc
+
+    return one_box
+
+
+def allin(domain: Domain, bins: CellBins, kernel: PairKernel,
+          box: Tuple[int, int, int] | None = None,
+          batch_size: int = 8) -> ForceOut:
+    """All-in-SM schedule: grid over sub-boxes, one halo block staged each.
+
+    The grid must tile the domain exactly, so the sub-box is shrunk to a
+    divisor of each axis (the ghost ring keeps out-of-domain reads valid).
+    """
+    nx, ny, nz = domain.ncells
+    m_c = bins.m_c
+    if box is None:
+        box = subbox_dims(domain, m_c)
+
+    bx, by, bz = shrink_to_divisors(domain, box)
+    gx, gy, gz = nx // bx, ny // by, nz // bz
+    one_box = _allin_box_body(domain, bins, kernel, (bx, by, bz))
 
     nb = gx * gy * gz
     outs = jax.lax.map(one_box, jnp.arange(nb, dtype=jnp.int32),
@@ -355,9 +370,177 @@ def allin(domain: Domain, bins: CellBins, kernel: PairKernel,
     return tuple(assemble(o) for o in outs)
 
 
+# --------------------------------------------------------------------------
+# occupancy-compacted variants: iterate active work units only
+# --------------------------------------------------------------------------
+#
+# The dense schedules above pay for every (z, y) pencil / sub-box whether or
+# not it holds particles — on clustered distributions most of that work is
+# masked sentinel slots. The compacted variants below iterate the occupancy
+# summary's active list instead (``binning.Occupancy``): the list is padded
+# to the static ``max_active`` bound with unit 0 (safe to read — its results
+# are recomputed redundantly and dropped on the write side), and the compact
+# results are scattered back into the dense output planes so everything
+# downstream (``dense_to_particles``) is unchanged. Each variant shares its
+# per-unit body with the dense schedule, so compaction cannot change a
+# single computed value — only which units are visited.
+
+
+def _chunked_active(occ: Occupancy, batch_size: int):
+    """Pad the active list to a whole number of ``batch_size`` chunks.
+
+    Returns ``(chunks (n_chunks, chunk), scatter_idx (n_chunks * chunk,))``
+    — scatter_idx routes every padding slot (list padding *and* chunk
+    padding) out of range so a ``mode='drop'`` scatter discards it.
+    """
+    chunk = max(1, min(batch_size, occ.max_active))
+    n_chunks = -(-occ.max_active // chunk)
+    total = n_chunks * chunk
+    act = jnp.concatenate(
+        [occ.active,
+         jnp.zeros((total - occ.max_active,), jnp.int32)])
+    scatter_idx = jnp.concatenate(
+        [occ.scatter_indices(),                       # list padding dropped
+         jnp.full((total - occ.max_active,), occ.n_units,
+                  jnp.int32)])                        # chunk padding dropped
+    return act.reshape(n_chunks, chunk), scatter_idx
+
+
+def _sparse_pencil_run(domain: Domain, bins: CellBins,
+                       occ: Occupancy, batch_size: int,
+                       pencil_fn) -> ForceOut:
+    """Run a per-pencil-chunk body over active pencils, scatter back dense."""
+    nx, ny, nz = domain.ncells
+    m_c = bins.m_c
+    chunks, scatter_idx = _chunked_active(occ, batch_size)
+
+    outs = jax.lax.map(pencil_fn, chunks)    # 4 x (n_chunks, chunk, nx, m_c)
+
+    def scatter(o):
+        compact = o.reshape(-1, nx, m_c)
+        dense = jnp.zeros((nz * ny, nx, m_c), o.dtype)
+        dense = dense.at[scatter_idx].set(compact, mode="drop")
+        return dense.reshape(nz, ny, nx, m_c)
+
+    return tuple(scatter(o) for o in outs)
+
+
+def xpencil_sparse(domain: Domain, bins: CellBins, kernel: PairKernel,
+                   occ: Occupancy, batch_size: int = 64) -> ForceOut:
+    """Occupancy-compacted X-pencil: stage only active (z, y) pencils.
+
+    Uses the compacted pencil-row gather (``binning.gather_pencil_rows``):
+    one vectorized gather per (dz, dy) neighbor per chunk, instead of the
+    dense schedule's sweep over all nz*ny pencils. Empty pencils cost
+    nothing; results land in the same dense (nz, ny, nx, m_c) planes.
+    """
+    nx, ny, _ = domain.ncells
+    m_c = bins.m_c
+    cut2 = domain.cutoff ** 2
+    widx = _window_indices(nx, m_c)
+    dt = bins.planes["x"].dtype
+
+    def one_chunk(zy):                       # (chunk,) active pencil ids
+        chunk = zy.shape[0]
+        tgt = {f: gather_pencil_rows(bins.planes[f], zy, ny)
+               [:, m_c:(nx + 1) * m_c].reshape(chunk, nx, m_c)
+               for f in ("x", "y", "z")}
+        tid = gather_pencil_rows(bins.slot_id, zy, ny)[
+            :, m_c:(nx + 1) * m_c].reshape(chunk, nx, m_c)
+
+        acc = tuple(jnp.zeros((chunk, nx, m_c), dtype=dt) for _ in range(4))
+        for dz in (-1, 0, 1):
+            for dy in (-1, 0, 1):
+                sx = gather_pencil_rows(bins.planes["x"], zy, ny, dz, dy)[:, widx]
+                sy = gather_pencil_rows(bins.planes["y"], zy, ny, dz, dy)[:, widx]
+                sz = gather_pencil_rows(bins.planes["z"], zy, ny, dz, dy)[:, widx]
+                sid = gather_pencil_rows(bins.slot_id, zy, ny, dz, dy)[:, widx]
+                out = _pair_reduce(kernel, cut2, tgt["x"], tgt["y"],
+                                   tgt["z"], tid, sx, sy, sz, sid)
+                acc = tuple(a + o for a, o in zip(acc, out))
+        return acc
+
+    return _sparse_pencil_run(domain, bins, occ, batch_size,
+                              one_chunk)
+
+
+def cell_dense_sparse(domain: Domain, bins: CellBins, kernel: PairKernel,
+                      occ: Occupancy, batch_size: int = 64) -> ForceOut:
+    """Occupancy-compacted Par-Cell: only pencils of active cells are
+    visited; within a pencil the staging granularity stays the Par-Cell
+    one-cell-at-a-time slab."""
+    nx, ny, _ = domain.ncells
+    m_c = bins.m_c
+    cut2 = domain.cutoff ** 2
+    dt = bins.planes["x"].dtype
+
+    def one_chunk(zy):
+        chunk = zy.shape[0]
+        tgt = {f: gather_pencil_rows(bins.planes[f], zy, ny)
+               [:, m_c:(nx + 1) * m_c].reshape(chunk, nx, m_c)
+               for f in ("x", "y", "z")}
+        tid = gather_pencil_rows(bins.slot_id, zy, ny)[
+            :, m_c:(nx + 1) * m_c].reshape(chunk, nx, m_c)
+
+        acc = tuple(jnp.zeros((chunk, nx, m_c), dtype=dt) for _ in range(4))
+        for dz in (-1, 0, 1):
+            for dy in (-1, 0, 1):
+                srow = {f: gather_pencil_rows(bins.planes[f], zy, ny, dz, dy)
+                        for f in ("x", "y", "z")}
+                sidr = gather_pencil_rows(bins.slot_id, zy, ny, dz, dy)
+                for dx in (-1, 0, 1):
+                    sl = slice((1 + dx) * m_c, (1 + dx + nx) * m_c)
+                    sx = srow["x"][:, sl].reshape(chunk, nx, m_c)
+                    sy = srow["y"][:, sl].reshape(chunk, nx, m_c)
+                    sz = srow["z"][:, sl].reshape(chunk, nx, m_c)
+                    sid = sidr[:, sl].reshape(chunk, nx, m_c)
+                    out = _pair_reduce(kernel, cut2, tgt["x"], tgt["y"],
+                                       tgt["z"], tid, sx, sy, sz, sid)
+                    acc = tuple(a + o for a, o in zip(acc, out))
+        return acc
+
+    return _sparse_pencil_run(domain, bins, occ, batch_size,
+                              one_chunk)
+
+
+def allin_sparse(domain: Domain, bins: CellBins, kernel: PairKernel,
+                 occ: Occupancy, box: Tuple[int, int, int],
+                 batch_size: int = 8) -> ForceOut:
+    """Occupancy-compacted All-in-SM: fully-empty sub-boxes are skipped.
+
+    ``box`` must already be shrunk to grid divisors and match the tiling
+    ``occ`` was built with (``binning.subbox_occupancy``); the per-box body
+    is the dense schedule's own.
+    """
+    nx, ny, nz = domain.ncells
+    m_c = bins.m_c
+    bx, by, bz = box
+    gx, gy, gz = nx // bx, ny // by, nz // bz
+    one_box = _allin_box_body(domain, bins, kernel, box)
+
+    chunks, scatter_idx = _chunked_active(occ, batch_size)
+    outs = jax.lax.map(jax.vmap(one_box), chunks)
+
+    def scatter(blocks):                 # (n_chunks, chunk, bz, by, bx, m_c)
+        compact = blocks.reshape(-1, bz, by, bx, m_c)
+        dense = jnp.zeros((gz * gy * gx, bz, by, bx, m_c), blocks.dtype)
+        dense = dense.at[scatter_idx].set(compact, mode="drop")
+        b = dense.reshape(gz, gy, gx, bz, by, bx, m_c)
+        b = jnp.transpose(b, (0, 3, 1, 4, 2, 5, 6))
+        return b.reshape(nz, ny, nx, m_c)
+
+    return tuple(scatter(o) for o in outs)
+
+
 STRATEGIES = {
     "par_part": par_part,
     "cell_dense": cell_dense,
     "xpencil": xpencil,
     "allin": allin,
+}
+
+SPARSE_STRATEGIES = {
+    "cell_dense": cell_dense_sparse,
+    "xpencil": xpencil_sparse,
+    "allin": allin_sparse,
 }

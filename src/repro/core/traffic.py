@@ -90,8 +90,29 @@ def model(domain: Domain, m_c: int, avg_ppc: float,
     return out
 
 
+def compact_report(report: TrafficReport, fill: float) -> TrafficReport:
+    """Fill-fraction-aware cost of the occupancy-compacted variant.
+
+    Compaction changes *which* work units run, not what each one costs:
+    staged bytes per step and per-unit reuse are unchanged, but only the
+    ``fill`` fraction of grid steps (and their HBM loads) happen at all.
+    The interaction count is identical — empty units contribute none — so
+    bytes-per-interaction scales linearly with the fill fraction. The
+    masked-lane waste *within* active units (slot padding) also stays: the
+    compacted path removes empty pencils, not empty slots.
+    """
+    fill = min(max(float(fill), 0.0), 1.0)
+    return dataclasses.replace(
+        report,
+        strategy=f"{report.strategy}_compact",
+        hbm_bytes_per_interaction=report.hbm_bytes_per_interaction * fill,
+        grid_steps=max(1, int(round(report.grid_steps * fill))),
+    )
+
+
 def candidate_cost(domain: Domain, m_c: int, avg_ppc: float, strategy: str,
-                   subbox: Tuple[int, int, int] | None = None) -> float:
+                   subbox: Tuple[int, int, int] | None = None,
+                   compact: bool = False, fill: float = 1.0) -> float:
     """Pruning hook for the measured autotuner (``core.autotune``).
 
     Scores one candidate configuration by its modelled HBM bytes per
@@ -100,10 +121,16 @@ def candidate_cost(domain: Domain, m_c: int, avg_ppc: float, strategy: str,
     the model's job here is softer: it must keep the true winner in the
     field, not name it. ``naive_n2`` has no staging and is modelled as one
     full pass over all pairs (it never survives pruning on real grids).
+
+    ``compact=True`` scores the occupancy-compacted variant at the given
+    active-work-unit ``fill`` fraction (see :func:`compact_report`).
     """
     if strategy == "naive_n2":
         n = domain.n_cells * max(avg_ppc, 1e-3)
         total_inter = domain.n_cells * 27.0 * max(avg_ppc, 1e-3) ** 2
         return n * n * FIELD_BYTES / max(total_inter, 1e-9)
     reports = model(domain, m_c, max(avg_ppc, 1e-3), subbox=subbox)
-    return reports[strategy].hbm_bytes_per_interaction
+    report = reports[strategy]
+    if compact:
+        report = compact_report(report, fill)
+    return report.hbm_bytes_per_interaction

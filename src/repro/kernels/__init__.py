@@ -22,17 +22,21 @@ through exactly the API users already select strategies with.
 from ..core.api import InteractionPlan, ParticleState, register_backend
 from ..core.binning import CellBins
 from .ops import (allin_interactions, prefix_sum, window_attention,
-                  xpencil_interactions)
+                  xpencil_interactions, xpencil_sparse_interactions)
 
 __all__ = ["allin_interactions", "prefix_sum", "window_attention",
-           "xpencil_interactions"]
+           "xpencil_interactions", "xpencil_sparse_interactions"]
 
 
 # -- plan/execute backend registration (normalized signature) ---------------
 
-@register_backend("pallas", "xpencil")
+@register_backend("pallas", "xpencil", compact=True)
 def _pallas_xpencil(plan: InteractionPlan, bins: CellBins,
                     state: ParticleState):
+    if plan.compact:
+        return xpencil_sparse_interactions(plan.domain, bins, plan.kernel,
+                                           plan.max_active,
+                                           interpret=plan.interpret)
     return xpencil_interactions(plan.domain, bins, plan.kernel,
                                 interpret=plan.interpret)
 

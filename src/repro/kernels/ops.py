@@ -12,14 +12,14 @@ from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
-from ..core.binning import CellBins, dense_to_particles
+from ..core.binning import CellBins, dense_to_particles, pencil_occupancy
 from ..core.domain import Domain
 from ..core.interactions import PairKernel
 from ._platform import resolve_interpret as _interpret
 from .allin import allin_forces
 from .prefix_sum import prefix_sum as _prefix_sum
 from .window_attn import window_attention as _window_attention
-from .xpencil import xpencil_forces
+from .xpencil import xpencil_forces, xpencil_sparse_forces
 
 Array = jnp.ndarray
 
@@ -31,6 +31,36 @@ def xpencil_interactions(domain: Domain, bins: CellBins, kernel: PairKernel,
     fx, fy, fz, pot = xpencil_forces(
         bins.planes, bins.slot_id, nx=domain.nx, m_c=bins.m_c, kernel=kernel,
         cutoff2=float(domain.cutoff) ** 2, interpret=_interpret(interpret))
+    return _to_particles(domain, bins, fx, fy, fz, pot)
+
+
+def xpencil_sparse_interactions(domain: Domain, bins: CellBins,
+                                kernel: PairKernel, max_active: int,
+                                interpret: Optional[bool] = None
+                                ) -> Tuple[Array, Array]:
+    """Compacted X-pencil kernel -> per-particle (forces, potential).
+
+    Builds the pencil occupancy summary from the bin counts (traceable),
+    runs the scalar-prefetch kernel over the ``max_active``-bounded active
+    list, and scatters the compact rows back into dense planes. If more
+    than ``max_active`` pencils are active the extra ones are *dropped* —
+    callers detect that via ``InteractionPlan.check_overflow`` and replan,
+    exactly like an overflowing ``m_c``.
+    """
+    nx, ny, nz = domain.ncells
+    occ = pencil_occupancy(domain, bins.counts, max_active)
+    compact = xpencil_sparse_forces(
+        bins.planes, bins.slot_id, occ.active, nx=nx, ny=ny, m_c=bins.m_c,
+        kernel=kernel, cutoff2=float(domain.cutoff) ** 2,
+        interpret=_interpret(interpret))
+    idx = occ.scatter_indices()
+
+    def scatter(rows: Array) -> Array:      # (max_active, nx*m_c) -> dense
+        dense = jnp.zeros((nz * ny, nx * bins.m_c), rows.dtype)
+        return dense.at[idx].set(rows, mode="drop").reshape(
+            nz, ny, nx * bins.m_c)
+
+    fx, fy, fz, pot = (scatter(r) for r in compact)
     return _to_particles(domain, bins, fx, fy, fz, pot)
 
 

@@ -24,6 +24,10 @@ VMEM per step: 8 pencil rows + 4 output rows ~ (12*nx + 16)*m_c*4 bytes
 pencils, unlike sub-boxes, leave head-room (occupancy there, double-buffering
 here). Lane alignment: rows are contiguous f32 vectors; choosing m_c as a
 multiple of 8 keeps slices sublane-aligned (``suggest_m_c`` does this).
+
+``xpencil_sparse_forces`` below is the occupancy-compacted variant: its grid
+runs over the *active* pencils only, with the active-index list
+scalar-prefetched so the BlockSpec index maps become data-dependent.
 """
 
 from __future__ import annotations
@@ -34,6 +38,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from ..core.interactions import PairKernel
 from ._platform import resolve_interpret
@@ -46,6 +51,43 @@ def _window3(row: Array, nx: int, m_c: int) -> Array:
     cells = row.reshape(nx + 2, m_c)
     return jnp.concatenate(
         [cells[0:nx], cells[1:nx + 1], cells[2:nx + 2]], axis=-1)
+
+
+def _pencil_contrib(trows: Tuple[Array, Array, Array, Array],
+                    srows: Tuple[Array, Array, Array, Array],
+                    *, nx: int, m_c: int, kernel: PairKernel,
+                    cutoff2: float):
+    """One (dz, dy) step: target pencil rows x one staged source pencil row.
+
+    ``trows``/``srows`` are the raw padded rows (length ``(nx+2)*m_c``) of
+    x, y, z, slot_id. Returns 4 flat ``(nx*m_c,)`` contributions. Shared by
+    the dense and compacted kernel bodies so compaction cannot change a
+    computed value.
+    """
+    lo, hi = m_c, (nx + 1) * m_c
+    xt, yt, zt, it = trows
+    tx = xt[lo:hi].reshape(nx, m_c, 1)
+    ty = yt[lo:hi].reshape(nx, m_c, 1)
+    tz = zt[lo:hi].reshape(nx, m_c, 1)
+    tid = it[lo:hi].reshape(nx, m_c, 1)
+
+    xs, ys, zs, is_ = srows
+    sx = _window3(xs, nx, m_c).reshape(nx, 1, 3 * m_c)
+    sy = _window3(ys, nx, m_c).reshape(nx, 1, 3 * m_c)
+    sz = _window3(zs, nx, m_c).reshape(nx, 1, 3 * m_c)
+    sid = _window3(is_, nx, m_c).reshape(nx, 1, 3 * m_c)
+
+    ddx, ddy, ddz = tx - sx, ty - sy, tz - sz
+    r2 = ddx * ddx + ddy * ddy + ddz * ddz
+    mask = (sid != tid) & (sid >= 0) & (tid >= 0) & (r2 < cutoff2) & (r2 > 0.0)
+    r2s = jnp.where(mask, r2, 1.0)
+    w = mask.astype(ddx.dtype)
+    s = kernel.coeff(r2s) * w
+    pot = kernel.potential(r2s) * w
+    return ((s * ddx).sum(-1).reshape(nx * m_c),
+            (s * ddy).sum(-1).reshape(nx * m_c),
+            (s * ddz).sum(-1).reshape(nx * m_c),
+            pot.sum(-1).reshape(nx * m_c))
 
 
 def _kernel(xt_ref, yt_ref, zt_ref, it_ref,
@@ -61,29 +103,15 @@ def _kernel(xt_ref, yt_ref, zt_ref, it_ref,
         fz_ref[...] = jnp.zeros_like(fz_ref)
         pot_ref[...] = jnp.zeros_like(pot_ref)
 
-    lo, hi = m_c, (nx + 1) * m_c
-    tx = xt_ref[0, 0, lo:hi].reshape(nx, m_c, 1)
-    ty = yt_ref[0, 0, lo:hi].reshape(nx, m_c, 1)
-    tz = zt_ref[0, 0, lo:hi].reshape(nx, m_c, 1)
-    tid = it_ref[0, 0, lo:hi].reshape(nx, m_c, 1)
+    fx, fy, fz, pot = _pencil_contrib(
+        (xt_ref[0, 0, :], yt_ref[0, 0, :], zt_ref[0, 0, :], it_ref[0, 0, :]),
+        (xs_ref[0, 0, :], ys_ref[0, 0, :], zs_ref[0, 0, :], is_ref[0, 0, :]),
+        nx=nx, m_c=m_c, kernel=kernel, cutoff2=cutoff2)
 
-    sx = _window3(xs_ref[0, 0, :], nx, m_c).reshape(nx, 1, 3 * m_c)
-    sy = _window3(ys_ref[0, 0, :], nx, m_c).reshape(nx, 1, 3 * m_c)
-    sz = _window3(zs_ref[0, 0, :], nx, m_c).reshape(nx, 1, 3 * m_c)
-    sid = _window3(is_ref[0, 0, :], nx, m_c).reshape(nx, 1, 3 * m_c)
-
-    ddx, ddy, ddz = tx - sx, ty - sy, tz - sz
-    r2 = ddx * ddx + ddy * ddy + ddz * ddz
-    mask = (sid != tid) & (sid >= 0) & (tid >= 0) & (r2 < cutoff2) & (r2 > 0.0)
-    r2s = jnp.where(mask, r2, 1.0)
-    w = mask.astype(ddx.dtype)
-    s = kernel.coeff(r2s) * w
-    pot = kernel.potential(r2s) * w
-
-    fx_ref[...] += (s * ddx).sum(-1).reshape(1, 1, nx * m_c)
-    fy_ref[...] += (s * ddy).sum(-1).reshape(1, 1, nx * m_c)
-    fz_ref[...] += (s * ddz).sum(-1).reshape(1, 1, nx * m_c)
-    pot_ref[...] += pot.sum(-1).reshape(1, 1, nx * m_c)
+    fx_ref[...] += fx.reshape(1, 1, nx * m_c)
+    fy_ref[...] += fy.reshape(1, 1, nx * m_c)
+    fz_ref[...] += fz.reshape(1, 1, nx * m_c)
+    pot_ref[...] += pot.reshape(1, 1, nx * m_c)
 
 
 @functools.partial(jax.jit, static_argnames=("nx", "m_c", "kernel", "cutoff2", "interpret"))
@@ -123,3 +151,96 @@ def xpencil_forces(planes: dict, slot_id: Array, *, nx: int, m_c: int,
     )(x, planes["y"], planes["z"], slot_id,
       x, planes["y"], planes["z"], slot_id)
     return fx, fy, fz, pot
+
+
+# --------------------------------------------------------------------------
+# occupancy-compacted variant: grid over *active* pencils only
+# --------------------------------------------------------------------------
+#
+# The dense kernel's grid is (nz, ny, 9) — every pencil pays 10 row DMAs and
+# a full masked pair reduction whether or not it holds particles. Here the
+# grid is (max_active, 9): the active-pencil index list is *scalar-
+# prefetched* (``pltpu.PrefetchScalarGridSpec``), so the BlockSpec index
+# maps can read it before each step and DMA exactly the rows of the a-th
+# active pencil — data-dependent staging, the TPU analogue of a compacted
+# thread-block launch. Outputs are compact (max_active, nx*m_c) rows that
+# the caller scatters back into the dense planes (padding rows recompute
+# pencil 0 and are dropped by the scatter).
+
+
+def _sparse_kernel(act_ref,                         # scalar-prefetched ids
+                   xt_ref, yt_ref, zt_ref, it_ref,
+                   xs_ref, ys_ref, zs_ref, is_ref,
+                   fx_ref, fy_ref, fz_ref, pot_ref,
+                   *, nx: int, m_c: int, kernel: PairKernel, cutoff2: float):
+    del act_ref  # consumed by the BlockSpec index maps, not the body
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        fx_ref[...] = jnp.zeros_like(fx_ref)
+        fy_ref[...] = jnp.zeros_like(fy_ref)
+        fz_ref[...] = jnp.zeros_like(fz_ref)
+        pot_ref[...] = jnp.zeros_like(pot_ref)
+
+    fx, fy, fz, pot = _pencil_contrib(
+        (xt_ref[0, 0, :], yt_ref[0, 0, :], zt_ref[0, 0, :], it_ref[0, 0, :]),
+        (xs_ref[0, 0, :], ys_ref[0, 0, :], zs_ref[0, 0, :], is_ref[0, 0, :]),
+        nx=nx, m_c=m_c, kernel=kernel, cutoff2=cutoff2)
+
+    fx_ref[...] += fx.reshape(1, nx * m_c)
+    fy_ref[...] += fy.reshape(1, nx * m_c)
+    fz_ref[...] += fz.reshape(1, nx * m_c)
+    pot_ref[...] += pot.reshape(1, nx * m_c)
+
+
+@functools.partial(jax.jit, static_argnames=("nx", "ny", "m_c", "kernel",
+                                             "cutoff2", "interpret"))
+def xpencil_sparse_forces(planes: dict, slot_id: Array, active_zy: Array, *,
+                          nx: int, ny: int, m_c: int, kernel: PairKernel,
+                          cutoff2: float, interpret: Optional[bool] = None
+                          ) -> Tuple[Array, Array, Array, Array]:
+    """Run the compacted X-pencil kernel over the active pencils.
+
+    Args:
+      planes / slot_id: padded planes as in :func:`xpencil_forces`.
+      active_zy: (max_active,) int32 linearized interior pencil ids
+        ``z * ny + y``, padded with 0 (``binning.Occupancy.active``); the
+        padding recomputes pencil 0 and must be dropped by the caller's
+        scatter (``Occupancy.scatter_indices``).
+    Returns:
+      (fx, fy, fz, pot), each compact ``(max_active, nx*m_c)``: row ``a``
+      holds the interior forces of pencil ``active_zy[a]``.
+    """
+    interpret = resolve_interpret(interpret)
+    x = planes["x"]
+    w = x.shape[-1]
+    max_active = active_zy.shape[0]
+
+    def tgt_map(a, k, act):
+        return (act[a] // ny + 1, act[a] % ny + 1, 0)
+
+    def nbr_map(a, k, act):
+        return (act[a] // ny + k // 3, act[a] % ny + k % 3, 0)
+
+    row_block = pl.BlockSpec((1, 1, w), tgt_map)
+    nbr_block = pl.BlockSpec((1, 1, w), nbr_map)
+    out_block = pl.BlockSpec((1, nx * m_c), lambda a, k, act: (a, 0))
+    out_shape = jax.ShapeDtypeStruct((max_active, nx * m_c), x.dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(max_active, 9),
+        in_specs=[row_block] * 4 + [nbr_block] * 4,
+        out_specs=[out_block] * 4,
+    )
+    body = functools.partial(_sparse_kernel, nx=nx, m_c=m_c, kernel=kernel,
+                             cutoff2=float(cutoff2))
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=[out_shape] * 4,
+        interpret=interpret,
+    )(active_zy.astype(jnp.int32),
+      x, planes["y"], planes["z"], slot_id,
+      x, planes["y"], planes["z"], slot_id)

@@ -217,3 +217,80 @@ def test_enumerate_only_registered_pairs():
     # pallas implements only the paper's two proposed schedules
     assert {c.strategy for c in cands if c.backend == "pallas"} == {
         "xpencil", "allin"}
+
+
+# ---------------------------------------------------------------------------
+# dense-vs-compact candidate axis
+# ---------------------------------------------------------------------------
+
+def _blob_case(division=5, n=200, seed=0, sigma_frac=0.08):
+    from repro.core import scenarios
+    dom = Domain.cubic(division, cutoff=1.0)
+    pos = scenarios.sample_gaussian_blob(
+        dom, jax.random.PRNGKey(seed), n, sigma_frac=sigma_frac)
+    return dom, pos
+
+
+def test_compact_twins_cover_compactable_strategies():
+    dom, pos = _blob_case()
+    cands = at.enumerate_candidates(dom, [16], backends=("reference",),
+                                    batch_sizes=(64,))
+    twins = at.compact_twins(dom, pos, cands)
+    assert twins and all(c.compact and c.max_active for c in twins)
+    assert {c.strategy for c in twins} == {"xpencil", "cell_dense", "allin"}
+    # par_part has no empty work units to skip: no twin
+    assert all(c.strategy != "par_part" for c in twins)
+    # twins survive the JSON round trip (disk cache)
+    for c in twins:
+        assert at.Candidate.from_json(c.to_json()) == c
+
+
+def test_tune_times_compact_candidates_and_winner_executes(cache_dir):
+    from repro.core import ParticleState, plan as make_plan
+    dom, pos = _blob_case()
+    res = tune(dom, make_lennard_jones(), pos, **FAST)
+    timed_compact = [c for c in res.timings if c.compact]
+    # round-robin queues per (strategy, compact): the compact variants
+    # cannot be crowded out of the timed field
+    assert timed_compact
+    f, _ = res.plan.execute(ParticleState(pos))
+    f_ref, _ = make_plan(dom, make_lennard_jones(), positions=pos,
+                         strategy="xpencil").execute(ParticleState(pos))
+    import numpy as np
+    np.testing.assert_allclose(np.asarray(f), np.asarray(f_ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_cache_key_includes_occupancy_bucket():
+    dom = Domain.cubic(6)
+    kern = make_lennard_jones()
+    k_dense = at.cache_key("cpu", dom, 16, 1.0, kern, ("reference",),
+                           pencil_fill=1.0)
+    k_sparse = at.cache_key("cpu", dom, 16, 1.0, kern, ("reference",),
+                            pencil_fill=0.05)
+    assert k_dense != k_sparse                   # blob != gas, same ppc
+    # nearby fills share a bucket (and therefore a tuning decision)
+    assert at.occupancy_bucket(0.9) == at.occupancy_bucket(1.0)
+    assert at.occupancy_bucket(0.05) != at.occupancy_bucket(1.0)
+
+
+def test_cached_compact_winner_with_stale_bound_is_rejected(cache_dir):
+    """A cached compacted winner whose max_active no longer covers the
+    scene must be re-measured, never trusted (mirrors the m_c contract)."""
+    dom, pos = _blob_case()
+    res1 = tune(dom, make_lennard_jones(), pos, **FAST)
+    cfile = pathlib.Path(res1.cache_file)
+    data = json.loads(cfile.read_text())
+    [key] = data
+    # forge the entry into a compacted candidate with a 1-pencil bound
+    data[key]["candidate"]["compact"] = True
+    data[key]["candidate"]["max_active"] = 1
+    data[key]["candidate"]["strategy"] = "xpencil"
+    data[key]["candidate"]["backend"] = "reference"
+    cfile.write_text(json.dumps(data))
+    res2 = tune(dom, make_lennard_jones(), pos, **FAST)
+    assert not res2.cache_hit                   # stale bound: re-measured
+    if res2.candidate.compact:
+        from repro.core import active_unit_count
+        assert res2.candidate.max_active >= active_unit_count(
+            dom, pos, res2.candidate.strategy, box=res2.candidate.box)

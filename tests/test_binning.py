@@ -108,3 +108,95 @@ def test_interior_view_shape():
     bins = bin_particles(dom, pos, m_c=m_c)
     v = interior(dom, bins.planes["x"], m_c)
     assert v.shape == (3, 3, 3, m_c)
+
+
+# ---------------------------------------------------------------------------
+# periodic ghost slot-id bumping (_fill_periodic_ghosts) on a 1-cell-thick
+# axis: the ghost ring of the single x-cell holds that same cell's own
+# particles as periodic images. Their slot ids must be bumped (id + 1e9) so
+# the schedules' self-mask (sid != tid) excludes only the *true* self-pair,
+# never a particle's periodic image.
+# ---------------------------------------------------------------------------
+
+def _thin_domain():
+    # one cell along x (width 1.2 >= cutoff 1.0), periodic in x only
+    return Domain(box=(1.2, 4.0, 4.0), ncells=(1, 4, 4), cutoff=1.0,
+                  periodic=(True, False, False))
+
+
+def test_thin_axis_ghost_ids_are_bumped_images():
+    dom = _thin_domain()
+    pos = jnp.asarray(np.random.RandomState(0).uniform(
+        [0, 0, 0], [1.2, 4, 4], (60, 3)), jnp.float32)
+    m_c = suggest_m_c(dom, pos)
+    bins = bin_particles(dom, pos, m_c=m_c)
+    sid = np.asarray(bins.slot_id)
+    interior_ids = sid[:, :, m_c:2 * m_c]
+    left, right = sid[:, :, :m_c], sid[:, :, 2 * m_c:]
+    # with nx == 1 both ghost columns mirror the single interior column
+    filled = interior_ids >= 0
+    assert filled.any()
+    np.testing.assert_array_equal(left[filled],
+                                  interior_ids[filled] + 1_000_000_000)
+    np.testing.assert_array_equal(right[filled],
+                                  interior_ids[filled] + 1_000_000_000)
+    # interior ids themselves are never bumped
+    assert (interior_ids[filled] < 1_000_000_000).all()
+    # ghost coordinates are the interior shifted by exactly +-Lx
+    x = np.asarray(bins.planes["x"])
+    np.testing.assert_allclose(x[:, :, :m_c][filled],
+                               x[:, :, m_c:2 * m_c][filled] - 1.2,
+                               rtol=1e-6)
+    # the bumped id passes the schedules' self-mask (a particle interacts
+    # with its own periodic image); the raw id does not (never with itself)
+    assert (left[filled] != interior_ids[filled]).all()
+
+
+def test_thin_axis_double_periodic_ghosts_bump_once():
+    # corner ghosts crossing two periodic axes must not double-bump (the
+    # bump() guard): ids stay in [1e9, 2e9)
+    dom = Domain(box=(1.2, 1.2, 4.0), ncells=(1, 1, 4), cutoff=1.0,
+                 periodic=(True, True, False))
+    pos = jnp.asarray(np.random.RandomState(1).uniform(
+        [0, 0, 0], [1.2, 1.2, 4], (30, 3)), jnp.float32)
+    m_c = suggest_m_c(dom, pos)
+    bins = bin_particles(dom, pos, m_c=m_c)
+    sid = np.asarray(bins.slot_id)
+    ghosts = sid[sid >= 1_000_000_000]
+    assert len(ghosts) > 0
+    assert (ghosts < 2_000_000_000).all()
+
+
+def test_thin_axis_forces_match_minimum_image_oracle():
+    """A pair interacting only *through* the periodic boundary of the
+    1-cell-thick axis: the cell engine must reproduce the minimum-image
+    oracle (the interaction lives entirely in the bumped ghost slots)."""
+    from repro.core import ParticleState, make_lennard_jones, plan
+    dom = _thin_domain()
+    pos = jnp.asarray([[0.05, 1.5, 1.5],        # A
+                       [1.15, 1.5, 1.5]],       # B: direct dist 1.1 (> r_c),
+                      jnp.float32)              # image dist 0.1 (< r_c)
+    kern = make_lennard_jones()
+    state = ParticleState(pos)
+    f_o, q_o = plan(dom, kern, m_c=8, strategy="naive_n2").execute(state)
+    assert float(jnp.abs(q_o).max()) > 0        # the pair really interacts
+    for strategy in ("xpencil", "cell_dense", "par_part", "allin"):
+        f, q = plan(dom, kern, m_c=8, strategy=strategy).execute(state)
+        np.testing.assert_allclose(np.asarray(f), np.asarray(f_o),
+                                   rtol=3e-4, atol=3e-4,
+                                   err_msg=strategy)
+        np.testing.assert_allclose(np.asarray(q), np.asarray(q_o),
+                                   rtol=3e-4, atol=3e-5, err_msg=strategy)
+
+
+def test_thin_axis_single_particle_sees_no_self_force():
+    """A lone particle's own periodic images sit exactly one box length
+    away (>= cutoff by the domain invariant): zero force, zero potential —
+    and crucially not NaN, which a broken self-mask would produce."""
+    from repro.core import ParticleState, make_lennard_jones, plan
+    dom = _thin_domain()
+    state = ParticleState(jnp.asarray([[0.6, 2.0, 2.0]], jnp.float32))
+    f, q = plan(dom, make_lennard_jones(), m_c=8,
+                strategy="xpencil").execute(state)
+    np.testing.assert_array_equal(np.asarray(f), np.zeros((1, 3)))
+    np.testing.assert_array_equal(np.asarray(q), np.zeros((1,)))

@@ -1,0 +1,317 @@
+"""Occupancy-compacted execution path: summaries, parity, replan, tooling.
+
+The correctness bar (ISSUE 3): the compacted schedules must be *bit-parity*
+with their dense oracles on uniform and clustered scenes — compaction may
+only change which work units run, never a computed value.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Domain, ParticleState, active_unit_count,
+                        bin_particles, make_lennard_jones, pencil_occupancy,
+                        plan, scenarios, subbox_occupancy, suggest_m_c,
+                        suggest_max_active, supports_compact)
+from repro.core import strategies as S
+from repro.core import traffic
+from repro.core.api import n_units
+from repro.core.binning import gather_pencil_rows
+
+
+def _blob(division=6, n=300, seed=0, sigma_frac=0.08):
+    dom = Domain.cubic(division, cutoff=1.0)
+    pos = scenarios.sample_gaussian_blob(
+        dom, jax.random.PRNGKey(seed), n, sigma_frac=sigma_frac)
+    return dom, pos
+
+
+SCENES = [
+    ("uniform", lambda dom, key, n: dom.sample_uniform(key, n)),
+    ("gaussian_blob", lambda dom, key, n: scenarios.sample_gaussian_blob(
+        dom, key, n, sigma_frac=0.08)),
+    ("power_law", lambda dom, key, n: scenarios.sample_power_law_cluster(
+        dom, key, n, n_clusters=2, alpha=2.0, r_min_frac=0.05)),
+]
+
+
+# ---------------------------------------------------------------------------
+# occupancy summaries
+# ---------------------------------------------------------------------------
+
+def test_pencil_occupancy_matches_numpy():
+    dom, pos = _blob()
+    bins = bin_particles(dom, pos, m_c=suggest_m_c(dom, pos))
+    occ = pencil_occupancy(dom, bins.counts, max_active=dom.nz * dom.ny)
+
+    counts3 = np.asarray(bins.counts).reshape(dom.nz, dom.ny, dom.nx)
+    pc = counts3.sum(-1).reshape(-1)
+    np.testing.assert_array_equal(np.asarray(occ.unit_counts), pc)
+    want_active = np.nonzero(pc > 0)[0]
+    assert int(occ.n_active) == len(want_active)
+    np.testing.assert_array_equal(
+        np.asarray(occ.active)[:len(want_active)], want_active)
+    assert not bool(occ.overflowed)
+    assert 0 < float(occ.fill_fraction) < 1.0      # the blob is clustered
+
+
+def test_subbox_occupancy_matches_numpy():
+    dom, pos = _blob(division=4, n=150)
+    m_c = suggest_m_c(dom, pos)
+    bins = bin_particles(dom, pos, m_c=m_c)
+    box = S.shrink_to_divisors(dom, (2, 2, 2))
+    bx, by, bz = box
+    gx, gy, gz = dom.nx // bx, dom.ny // by, dom.nz // bz
+    occ = subbox_occupancy(dom, bins.counts, box, max_active=gx * gy * gz)
+
+    counts3 = np.asarray(bins.counts).reshape(dom.nz, dom.ny, dom.nx)
+    bc = counts3.reshape(gz, bz, gy, by, gx, bx).sum(axis=(1, 3, 5))
+    np.testing.assert_array_equal(np.asarray(occ.unit_counts),
+                                  bc.reshape(-1))
+    assert int(occ.n_active) == int((bc > 0).sum())
+
+
+def test_occupancy_overflow_flag_and_scatter_padding():
+    dom, pos = _blob()
+    bins = bin_particles(dom, pos, m_c=suggest_m_c(dom, pos))
+    occ = pencil_occupancy(dom, bins.counts, max_active=2)
+    assert bool(occ.overflowed)
+
+    full = pencil_occupancy(dom, bins.counts, max_active=dom.nz * dom.ny)
+    idx = np.asarray(full.scatter_indices())
+    n_act = int(full.n_active)
+    # real entries in range, padding pushed out of range (drop scatters)
+    assert (idx[:n_act] < full.n_units).all()
+    assert (idx[n_act:] == full.n_units).all()
+
+
+def test_gather_pencil_rows_matches_plane_rows():
+    dom, pos = _blob(division=4, n=200)
+    m_c = suggest_m_c(dom, pos)
+    bins = bin_particles(dom, pos, m_c=m_c)
+    act = jnp.asarray([0, 5, 9, 14], dtype=jnp.int32)   # z*ny + y ids
+    for dz, dy in ((0, 0), (-1, 1), (1, -1)):
+        rows = gather_pencil_rows(bins.planes["x"], act, dom.ny, dz, dy)
+        for a, zy in enumerate(np.asarray(act)):
+            z, y = zy // dom.ny, zy % dom.ny
+            np.testing.assert_array_equal(
+                np.asarray(rows[a]),
+                np.asarray(bins.planes["x"][z + 1 + dz, y + 1 + dy]))
+
+
+# ---------------------------------------------------------------------------
+# bit-parity with the dense oracles (the acceptance bar)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scene,sample", SCENES)
+@pytest.mark.parametrize("strategy", ["xpencil", "cell_dense", "allin"])
+def test_reference_compact_bit_parity(strategy, scene, sample):
+    dom = Domain.cubic(6, cutoff=1.0)
+    pos = sample(dom, jax.random.PRNGKey(3), 300)
+    kern = make_lennard_jones()
+    state = ParticleState(pos)
+    f_d, q_d = plan(dom, kern, positions=pos, strategy=strategy).execute(
+        state)
+    f_c, q_c = plan(dom, kern, positions=pos, strategy=strategy,
+                    compact=True).execute(state)
+    np.testing.assert_array_equal(np.asarray(f_c), np.asarray(f_d))
+    np.testing.assert_array_equal(np.asarray(q_c), np.asarray(q_d))
+
+
+@pytest.mark.parametrize("scene,sample", SCENES)
+def test_pallas_compact_bit_parity(scene, sample):
+    dom = Domain.cubic(6, cutoff=1.0)
+    pos = sample(dom, jax.random.PRNGKey(4), 250)
+    kern = make_lennard_jones()
+    state = ParticleState(pos)
+    f_d, q_d = plan(dom, kern, positions=pos, strategy="xpencil").execute(
+        state)
+    f_p, q_p = plan(dom, kern, positions=pos, strategy="xpencil",
+                    backend="pallas", compact=True,
+                    interpret=True).execute(state)
+    np.testing.assert_array_equal(np.asarray(f_p), np.asarray(f_d))
+    np.testing.assert_array_equal(np.asarray(q_p), np.asarray(q_d))
+
+
+def test_compact_matches_naive_oracle_periodic():
+    dom = Domain.cubic(4, cutoff=1.0, periodic=True)
+    pos = scenarios.sample_gaussian_blob(dom, jax.random.PRNGKey(5), 200,
+                                         sigma_frac=0.12)
+    kern = make_lennard_jones()
+    state = ParticleState(pos)
+    f_o, _ = plan(dom, kern, positions=pos, strategy="naive_n2").execute(
+        state)
+    f_c, _ = plan(dom, kern, positions=pos, strategy="xpencil",
+                  compact=True).execute(state)
+    np.testing.assert_allclose(np.asarray(f_c), np.asarray(f_o),
+                               rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# the max_active replan contract
+# ---------------------------------------------------------------------------
+
+def test_max_active_overflow_detected_and_replanned():
+    dom, pos = _blob()
+    kern = make_lennard_jones()
+    state = ParticleState(pos)
+    f_d, _ = plan(dom, kern, positions=pos, strategy="xpencil").execute(
+        state)
+
+    p0 = plan(dom, kern, positions=pos, strategy="xpencil", compact=True,
+              max_active=2)
+    assert p0.check_overflow(state)
+    (f1, _), p1 = p0.execute_or_replan(state)
+    assert p1.max_active > p0.max_active
+    assert p1.m_c == p0.m_c                      # only the tight bound grew
+    assert not p1.check_overflow(state)
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f_d))
+
+    # an overflowed bound really does drop pencils (the thing replan
+    # protects against): forces under the tiny bound are wrong
+    f_bad, _ = p0.execute(state)
+    assert not np.array_equal(np.asarray(f_bad), np.asarray(f_d))
+
+
+def test_suggest_max_active_bounds_and_clipping():
+    dom, pos = _blob()
+    n_act = active_unit_count(dom, pos, "xpencil")
+    bound = suggest_max_active(dom, pos, "xpencil")
+    assert n_act <= bound <= n_units(dom, "xpencil")
+    # huge slack clips to the total unit count, never beyond
+    assert suggest_max_active(dom, pos, "xpencil",
+                              slack=100.0) == n_units(dom, "xpencil")
+
+
+def test_compact_plan_validation():
+    dom, pos = _blob()
+    with pytest.raises(ValueError, match="compact"):
+        plan(dom, make_lennard_jones(), positions=pos, strategy="par_part",
+             compact=True)
+    with pytest.raises(ValueError, match="max_active|positions"):
+        plan(dom, make_lennard_jones(), m_c=16, strategy="xpencil",
+             compact=True)                       # no positions, no bound
+    assert supports_compact("reference", "xpencil")
+    assert supports_compact("pallas", "xpencil")
+    assert not supports_compact("pallas", "allin")
+    assert not supports_compact("reference", "par_part")
+
+
+def test_compact_plans_hash_and_cache_separately():
+    dom, pos = _blob()
+    kern = make_lennard_jones()
+    pd = plan(dom, kern, positions=pos, strategy="xpencil")
+    pc = plan(dom, kern, positions=pos, strategy="xpencil", compact=True)
+    assert pd != pc and hash(pd) != hash(pc)
+    pc2 = plan(dom, kern, positions=pos, strategy="xpencil", compact=True)
+    assert pc == pc2                             # same measured bound
+
+
+# ---------------------------------------------------------------------------
+# fill-fraction-aware traffic costs
+# ---------------------------------------------------------------------------
+
+def test_traffic_compact_cost_scales_with_fill():
+    dom = Domain.cubic(8, cutoff=1.0)
+    dense = traffic.candidate_cost(dom, 16, 2.0, "xpencil")
+    half = traffic.candidate_cost(dom, 16, 2.0, "xpencil", compact=True,
+                                  fill=0.5)
+    tenth = traffic.candidate_cost(dom, 16, 2.0, "xpencil", compact=True,
+                                   fill=0.1)
+    assert tenth < half < dense
+    np.testing.assert_allclose(half, dense * 0.5, rtol=1e-6)
+    # fill 1.0 compact == dense (compaction changes which units run only)
+    full = traffic.candidate_cost(dom, 16, 2.0, "xpencil", compact=True,
+                                  fill=1.0)
+    np.testing.assert_allclose(full, dense, rtol=1e-6)
+
+
+def test_traffic_compact_report_fields():
+    dom = Domain.cubic(8, cutoff=1.0)
+    report = traffic.model(dom, 16, 2.0)["xpencil"]
+    comp = traffic.compact_report(report, 0.25)
+    assert comp.strategy == "xpencil_compact"
+    assert comp.grid_steps == max(1, round(report.grid_steps * 0.25))
+    assert comp.staged_bytes_per_step == report.staged_bytes_per_step
+
+
+# ---------------------------------------------------------------------------
+# scenario family
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(scenarios.SCENARIOS))
+def test_scenarios_inside_box(name):
+    dom = Domain.cubic(5, cutoff=1.0)
+    pos = scenarios.sample(name, dom, jax.random.PRNGKey(7), 200)
+    assert pos.shape == (200, 3)
+    box = np.asarray(dom.box)
+    p = np.asarray(pos)
+    assert (p > 0).all() and (p < box).all()
+
+
+def test_scenarios_fill_ordering():
+    """The blob family spans the fill axis: tighter sigma, fewer active
+    pencils; every clustered scene is sparser than uniform."""
+    dom = Domain.cubic(8, cutoff=1.0)
+    key = jax.random.PRNGKey(8)
+    n = 400
+    uni = active_unit_count(dom, scenarios.sample("uniform", dom, key, n))
+    wide = active_unit_count(dom, scenarios.sample_gaussian_blob(
+        dom, key, n, sigma_frac=0.12))
+    tight = active_unit_count(dom, scenarios.sample_gaussian_blob(
+        dom, key, n, sigma_frac=0.04))
+    assert tight < wide < uni
+
+
+def test_unknown_scenario_rejected():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        scenarios.sample("nope", Domain.cubic(3), jax.random.PRNGKey(0), 10)
+
+
+# ---------------------------------------------------------------------------
+# perf_diff tooling
+# ---------------------------------------------------------------------------
+
+def test_perf_diff_flags_regressions(tmp_path):
+    from benchmarks import perf_diff
+    base = [{"case": "a", "strategy": "s", "backend": "b",
+             "us_per_call": 100.0, "reps": 3, "platform": "cpu"},
+            {"case": "gone", "strategy": "s", "backend": "b",
+             "us_per_call": 10.0, "reps": 3, "platform": "cpu"}]
+    fresh = [{"case": "a", "strategy": "s", "backend": "b",
+              "us_per_call": 260.0, "reps": 3, "platform": "cpu"},
+             {"case": "new", "strategy": "s", "backend": "b",
+              "us_per_call": 5.0, "reps": 3, "platform": "cpu"}]
+    bp, fp = tmp_path / "base.json", tmp_path / "fresh.json"
+    bp.write_text(__import__("json").dumps(base))
+    fp.write_text(__import__("json").dumps(fresh))
+
+    diff = perf_diff.diff_records(perf_diff.load_records(str(bp)),
+                                  perf_diff.load_records(str(fp)),
+                                  threshold=2.0)
+    assert len(diff["rows"]) == 1 and diff["rows"][0]["regressed"]
+    assert diff["only_baseline"] == [("gone", "s", "b")]
+    assert diff["only_fresh"] == [("new", "s", "b")]
+    assert perf_diff.main([str(bp), str(fp), "--threshold", "2.0"]) == 0
+    assert perf_diff.main([str(bp), str(fp), "--threshold", "2.0",
+                           "--fail-on-regression"]) == 1
+    # below threshold: clean exit even with the gate on
+    assert perf_diff.main([str(bp), str(fp), "--threshold", "3.0",
+                           "--fail-on-regression"]) == 0
+
+
+def test_committed_bench_sparse_meets_acceptance():
+    """The committed BENCH_sparse.json must contain a <= 10%-fill case
+    with >= 2x measured compacted speedup (ISSUE 3 acceptance)."""
+    import json
+    import pathlib
+    path = pathlib.Path(__file__).parent.parent / "benchmarks" / \
+        "BENCH_sparse.json"
+    records = json.loads(path.read_text())
+    wins = [r for r in records
+            if r["strategy"] == "xpencil_compact"
+            and r.get("fill", 1.0) <= 0.10
+            and r.get("speedup_vs_dense", 0.0) >= 2.0]
+    assert wins, ("no committed <=10%-fill case with >=2x compacted "
+                  f"speedup in {path}")
