@@ -1,0 +1,137 @@
+"""Perf-trajectory renderer: the time series across BENCH_*.json records.
+
+``perf_diff`` gives the pairwise delta between two record files; this tool
+ingests a *directory* of successive ``BENCH_*.json`` snapshots (the CI
+artifacts the benchmark runners emit per commit) and renders the per-case
+trajectory::
+
+    python -m benchmarks.perf_history DIR [--case SUBSTR] [--order name]
+        [--json PATH]
+
+Snapshots are ordered by filename by default (name your artifacts
+``BENCH_0017_<sha>.json`` and lexicographic order is commit order) or by
+mtime with ``--order mtime``. Output is one row per (case, strategy,
+backend) series: first/last us_per_call, total delta, and a unicode
+sparkline of the whole trajectory — the visible per-commit perf record the
+ROADMAP asks for. ``--json`` additionally dumps the raw series for
+downstream plotting.
+
+Record files use the ``benchmarks.common.bench_record`` schema; duplicate
+keys inside one snapshot keep the fastest record (same join rule as
+``perf_diff``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Dict, List, Optional, Tuple
+
+from .perf_diff import Key, load_records
+
+_SPARK = "▁▂▃▄▅▆▇█"
+_GAP = "·"                       # case absent from that snapshot
+
+
+def collect(directory: str | pathlib.Path, pattern: str = "BENCH_*.json",
+            order: str = "name") -> List[Tuple[str, Dict[Key, dict]]]:
+    """-> ordered [(snapshot label, {(case, strategy, backend): record})].
+
+    Unreadable or schema-violating files are skipped with a warning — a
+    single corrupt artifact must not take down the whole trajectory.
+    """
+    root = pathlib.Path(directory)
+    files = sorted(root.glob(pattern),
+                   key=(lambda p: p.stat().st_mtime) if order == "mtime"
+                   else (lambda p: p.name))
+    out: List[Tuple[str, Dict[Key, dict]]] = []
+    for f in files:
+        try:
+            out.append((f.name, load_records(str(f))))
+        except (OSError, ValueError, KeyError, json.JSONDecodeError) as e:
+            print(f"perf_history: skipping {f.name}: {e!r}",
+                  file=sys.stderr)
+    return out
+
+
+def series(snapshots: List[Tuple[str, Dict[Key, dict]]],
+           case_filter: Optional[str] = None
+           ) -> Dict[Key, List[Optional[float]]]:
+    """-> {key: [us_per_call or None per snapshot]}, keys sorted."""
+    keys = set()
+    for _, recs in snapshots:
+        keys.update(recs)
+    if case_filter:
+        keys = {k for k in keys if case_filter in k[0]}
+    return {k: [recs.get(k, {}).get("us_per_call") for _, recs in snapshots]
+            for k in sorted(keys)}
+
+
+def sparkline(values: List[Optional[float]]) -> str:
+    """Unicode trajectory; gaps (absent snapshots) render as ``·``."""
+    present = [v for v in values if v is not None]
+    if not present:
+        return _GAP * len(values)
+    lo, hi = min(present), max(present)
+    span = (hi - lo) or 1.0
+    out = []
+    for v in values:
+        if v is None:
+            out.append(_GAP)
+        else:
+            out.append(_SPARK[int((v - lo) / span * (len(_SPARK) - 1))])
+    return "".join(out)
+
+
+def format_table(snapshots: List[Tuple[str, Dict[Key, dict]]],
+                 ss: Dict[Key, List[Optional[float]]]) -> str:
+    lines = [f"# {len(snapshots)} snapshots: "
+             + " -> ".join(label for label, _ in snapshots),
+             "case,strategy,backend,first_us,last_us,delta_pct,trajectory"]
+    for key, vals in ss.items():
+        present = [(i, v) for i, v in enumerate(vals) if v is not None]
+        if not present:
+            continue
+        first, last = present[0][1], present[-1][1]
+        delta = (last / first - 1.0) * 100.0 if first > 0 else float("inf")
+        lines.append(f"{key[0]},{key[1]},{key[2]},{first:.1f},{last:.1f},"
+                     f"{delta:+.1f}%,{sparkline(vals)}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("directory", help="directory of BENCH_*.json snapshots")
+    ap.add_argument("--pattern", default="BENCH_*.json")
+    ap.add_argument("--case", default=None,
+                    help="only series whose case contains this substring")
+    ap.add_argument("--order", choices=("name", "mtime"), default="name",
+                    help="snapshot ordering (default: filename)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also dump the raw series as JSON")
+    args = ap.parse_args(argv)
+
+    snapshots = collect(args.directory, pattern=args.pattern,
+                        order=args.order)
+    if not snapshots:
+        print(f"perf_history: no {args.pattern} files in "
+              f"{args.directory}", file=sys.stderr)
+        return 1
+    ss = series(snapshots, case_filter=args.case)
+    print(format_table(snapshots, ss))
+    if args.json:
+        payload = {
+            "snapshots": [label for label, _ in snapshots],
+            "series": [{"case": k[0], "strategy": k[1], "backend": k[2],
+                        "us_per_call": v} for k, v in ss.items()],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {len(ss)} series to {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,11 +1,14 @@
-"""Multi-device MD: spatial domain decomposition with halo exchange.
+"""Multi-device MD: the distributed halo backend through the plan API.
 
     PYTHONPATH=src python examples/distributed_md.py [--devices 4]
 
-Runs the distributed particle engine (shard_map + ppermute ghost planes, the
-multi-pod version of the paper's grid) on emulated host devices and checks
-it against the single-device engine. On a real pod the same code shards over
-the physical mesh.
+``plan(..., backend="halo")`` Z-slab-partitions the domain across the
+devices, exchanges ghost planes via ppermute (the multi-pod version of the
+paper's grid), runs the chosen schedule per shard, and returns forces in
+ordinary particle order — same contract as every other backend. On a real
+pod the same code shards over the physical mesh; here the devices are
+emulated host devices. Compare against the single-device reference and
+against the compacted per-shard path.
 """
 
 import argparse
@@ -22,46 +25,56 @@ os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CellListEngine, Domain, make_lennard_jones, suggest_m_c
-from repro.dist.halo import make_distributed_compute, partition_by_z
+from repro.core import Domain, ParticleState, make_lennard_jones, plan
 
 
 def main():
-    n_dev = args.devices
-    mesh = jax.make_mesh((n_dev,), ("data",))
+    n_dev = jax.device_count()
     domain = Domain.cubic(8, cutoff=1.0, periodic=True)
     key = jax.random.PRNGKey(0)
     positions = domain.sample_uniform(key, 4_000)
     kernel = make_lennard_jones()
-    m_c = suggest_m_c(domain, positions)
+    state = ParticleState(positions)
 
-    print(f"{n_dev} devices, grid {domain.ncells} split along Z "
-          f"({domain.nz // n_dev} planes/shard), N={positions.shape[0]}")
+    p_halo = plan(domain, kernel, positions=positions, strategy="xpencil",
+                  backend="halo")
+    print(f"{n_dev} devices, grid {domain.ncells} split into "
+          f"{p_halo.n_shards} Z-slabs ({domain.nz // p_halo.n_shards} "
+          f"planes/shard, cap {p_halo.shard_cap}), N={positions.shape[0]}")
 
-    f_ref, _ = CellListEngine(domain, kernel, m_c=m_c,
-                              strategy="xpencil").compute(positions)
-    pos_part = partition_by_z(domain, positions, n_dev)
-    dist_fn = make_distributed_compute(domain, kernel, m_c, mesh)
-    forces, pot = dist_fn(pos_part)
+    p_ref = plan(domain, kernel, m_c=p_halo.m_c, strategy="xpencil")
+    f_ref, _ = p_ref.execute(state)
+    forces, pot = p_halo.execute(state)
 
-    ref = {tuple(np.round(np.asarray(positions)[i], 5)): i
-           for i in range(positions.shape[0])}
-    pp, fn = np.asarray(pos_part), np.asarray(forces)
-    err = 0.0
-    checked = 0
-    for j in range(pp.shape[0]):
-        if pp[j, 0] > 1e7:
-            continue
-        i = ref[tuple(np.round(pp[j], 5))]
-        err = max(err, float(np.abs(fn[j] - np.asarray(f_ref)[i]).max()))
-        checked += 1
-    print(f"checked {checked} particles across shards; "
-          f"max |F_dist - F_single| = {err:.2e}")
-    assert checked == positions.shape[0] and err < 1e-3
-    print("halo-exchange engine matches the single-device engine.")
+    err = float(np.abs(np.asarray(forces) - np.asarray(f_ref)).max())
+    scale = float(np.abs(np.asarray(f_ref)).max())
+    print(f"max |F_halo - F_single| = {err:.2e} (|F|_max = {scale:.2e})")
+    assert err <= 3e-4 * max(scale, 1.0)
+
+    # the compacted per-shard path: same forces, only active pencils staged
+    p_comp = p_halo if p_halo.n_shards == 1 else plan(
+        domain, kernel, m_c=p_halo.m_c, positions=positions,
+        strategy="xpencil", backend="halo", compact=True)
+    f_comp, _ = p_comp.execute(state)
+    same = np.array_equal(np.asarray(forces), np.asarray(f_comp))
+    print(f"compacted shards (max_active={p_comp.max_active}) "
+          f"bit-identical to dense shards: {same}")
+    assert same
+
+    # overflow contract survives distribution: shrink the shard capacity
+    # and let execute_or_replan grow it back
+    if p_halo.n_shards > 1:
+        import dataclasses
+        tight = dataclasses.replace(p_halo, shard_cap=8)
+        assert tight.check_overflow(state)
+        (f2, _), grown = tight.execute_or_replan(state)
+        print(f"shard_cap overflow replanned: 8 -> {grown.shard_cap}; "
+              f"forces match: "
+              f"{np.array_equal(np.asarray(f2), np.asarray(forces))}")
+
+    print("halo backend matches the single-device engine.")
 
 
 if __name__ == "__main__":

@@ -42,10 +42,10 @@ import jax.numpy as jnp
 
 from . import strategies as S
 from . import traffic
-from .binning import (CellBins, bin_particles, dense_to_particles,
-                      pencil_counts, pencil_occupancy, subbox_counts,
-                      subbox_occupancy)
-from .domain import Domain
+from .binning import (CellBins, bin_particles, cell_counts,
+                      dense_to_particles, pencil_counts, pencil_occupancy,
+                      subbox_counts, subbox_occupancy)
+from .domain import Domain, slab_domain
 from .interactions import PairKernel, make_lennard_jones
 
 Array = jnp.ndarray
@@ -159,16 +159,55 @@ class InteractionPlan:
     interpret: Optional[bool] = None             # pallas: None = auto
     compact: bool = False                        # occupancy-compacted path
     max_active: Optional[int] = None             # static active-unit bound
+    # -- distributed halo execution (backend="halo"; repro.dist.engine) ----
+    halo_inner: str = "reference"                # per-shard backend
+    n_shards: Optional[int] = None               # Z-slabs on the mesh axis
+    shard_axis: str = "halo"                     # mesh axis name
+    shard_cap: Optional[int] = None              # static per-shard capacity
+    mesh: Optional[object] = None                # jax Mesh; None = default
 
     def __post_init__(self):
         if self.strategy not in ("naive_n2", *STRATEGY_NAMES):
             raise ValueError(
                 f"unknown strategy {self.strategy!r}; have "
                 f"{sorted(STRATEGY_NAMES)} + ['naive_n2']")
+        if self.backend == "halo":
+            if self.strategy not in ("cell_dense", "xpencil", "allin"):
+                raise ValueError(
+                    f"backend='halo' needs a cell schedule, got "
+                    f"{self.strategy!r} (the Z-slab decomposition has no "
+                    "meaning for particle-parallel or O(N^2) sweeps)")
+            if self.halo_inner == "halo":
+                raise ValueError("halo_inner must be a concrete per-shard "
+                                 "backend ('reference'/'pallas'), not "
+                                 "'halo' itself")
+            if not self.n_shards or self.n_shards < 1:
+                raise ValueError(
+                    "backend='halo' needs n_shards >= 1 "
+                    "(plan(..., backend='halo') derives one from the "
+                    "visible devices)")
+            if self.domain.nz % self.n_shards:
+                raise ValueError(
+                    f"nz={self.domain.nz} not divisible by "
+                    f"n_shards={self.n_shards}")
+            if self.n_shards > 1 and (not self.shard_cap
+                                      or self.shard_cap < 1):
+                raise ValueError(
+                    "a multi-shard halo plan needs a positive static "
+                    "shard_cap (plan(..., positions=...) measures one)")
+            if self.compact and self.strategy == "allin":
+                raise ValueError(
+                    "backend='halo' supports compact=True for the pencil "
+                    "schedules (xpencil/cell_dense) only — the All-in-SM "
+                    "sub-box occupancy is not defined per slab")
         if self.strategy == "allin" and self.box is None:
             # directly-constructed plans get the VMEM-budget sub-box too —
-            # the pallas backend needs a concrete tiling at trace time
-            object.__setattr__(self, "box", _allin_box(self.domain, self.m_c))
+            # the pallas backend needs a concrete tiling at trace time.
+            # Halo plans tile the *slab* each shard actually runs on.
+            bdom = self.domain
+            if self.backend == "halo" and self.n_shards:
+                bdom = slab_domain(self.domain, self.n_shards)
+            object.__setattr__(self, "box", _allin_box(bdom, self.m_c))
         if self.compact:
             if self.strategy not in ("cell_dense", "xpencil", "allin"):
                 raise ValueError(
@@ -209,12 +248,18 @@ class InteractionPlan:
 
     def check_overflow(self, state: ParticleState) -> bool:
         """True if a static bound no longer covers these positions: some
-        cell holds more than ``m_c`` particles, or (compacted plans) more
-        work units are active than ``max_active`` — either way results
-        would silently drop interactions, so the caller must replan."""
+        cell holds more than ``m_c`` particles, (compacted plans) more
+        work units are active than ``max_active``, or (multi-shard halo
+        plans) some shard's load or active-pencil count exceeds its bound
+        — either way results would silently drop interactions, so the
+        caller must replan. For halo plans the per-shard flags are reduced
+        (max) across shards, keeping the safety contract global."""
         counts = _cell_counts(self.domain, state.positions)
         if int(jnp.max(counts)) > self.m_c:
             return True
+        if self._multi_shard:
+            from ..dist.engine import halo_overflow
+            return halo_overflow(self, counts)
         if self.compact:
             n_act = active_unit_count(self.domain, state.positions,
                                       self.strategy, box=self.box,
@@ -222,6 +267,10 @@ class InteractionPlan:
             if n_act > self.max_active:
                 return True
         return False
+
+    @property
+    def _multi_shard(self) -> bool:
+        return self.backend == "halo" and (self.n_shards or 1) > 1
 
     def replan(self, state: ParticleState, slack: float = 1.5,
                align: int = 8) -> "InteractionPlan":
@@ -245,7 +294,14 @@ class InteractionPlan:
             m_c = max(measured, grow)
         box = self.box if m_c == self.m_c else None
         max_active = self.max_active
-        if self.compact:
+        shard_cap = self.shard_cap
+        if self._multi_shard:
+            # shard-level bounds: per-shard load vs shard_cap, per-shard
+            # active pencils vs max_active — grown only when exceeded
+            from ..dist.engine import halo_grown_bounds
+            shard_cap, max_active = halo_grown_bounds(self, state,
+                                                      align=align)
+        elif self.compact:
             if self.strategy == "allin" and box is None:
                 # fix the new tiling first: the active-sub-box bound must
                 # be measured against the grid that will actually run
@@ -258,7 +314,8 @@ class InteractionPlan:
                                                align=align)
                 max_active = max(suggested, n_act)
         return dataclasses.replace(self, m_c=m_c, box=box,
-                                   max_active=max_active)
+                                   max_active=max_active,
+                                   shard_cap=shard_cap)
 
     def execute_or_replan(self, state: ParticleState
                           ) -> Tuple[Tuple[Array, Array], "InteractionPlan"]:
@@ -270,6 +327,63 @@ class InteractionPlan:
         while p.check_overflow(state):
             p = p.replan(state)
         return p.execute(state), p
+
+    # -- distributed execution ---------------------------------------------
+
+    def distribute(self, mesh=None, *, n_shards: Optional[int] = None,
+                   shard_axis: Optional[str] = None,
+                   positions: Optional[Array] = None,
+                   shard_cap: Optional[int] = None,
+                   halo_inner: Optional[str] = None) -> "InteractionPlan":
+        """A halo twin of this plan: same schedule and static bounds, run
+        on a device mesh (``repro.dist.engine``).
+
+        Args:
+          mesh: a ``jax.sharding.Mesh`` holding the shard axis; by default
+            the engine builds a 1-D mesh over the local devices.
+          n_shards: Z-slabs (must divide ``nz``); defaults to the mesh's
+            shard-axis size, else the largest ``nz`` divisor that fits the
+            visible devices.
+          shard_axis: mesh axis name to shard along (default ``"halo"``,
+            or the mesh's first axis when a mesh is given).
+          positions: representative positions to measure the static
+            ``shard_cap`` (and, for compacted plans, the per-shard
+            ``max_active``) from; required unless ``shard_cap`` is given.
+          shard_cap: explicit static per-shard particle capacity.
+          halo_inner: per-shard backend; defaults to this plan's backend.
+        """
+        from ..dist import engine as dist_engine
+        axis = shard_axis or (mesh.axis_names[0] if mesh is not None
+                              else self.shard_axis)
+        if mesh is not None and axis not in mesh.axis_names:
+            raise ValueError(
+                f"mesh has axes {mesh.axis_names}, no {axis!r} shard axis")
+        if n_shards is None:
+            if mesh is not None:
+                n_shards = int(mesh.shape[axis])
+            else:
+                n_shards = dist_engine.default_n_shards(self.domain)
+        inner = halo_inner or (self.halo_inner if self.backend == "halo"
+                               else self.backend)
+        max_active = self.max_active
+        if n_shards > 1:
+            if shard_cap is None:
+                if positions is None:
+                    raise ValueError(
+                        "distribute() needs either shard_cap or positions "
+                        "(to measure the per-shard capacity)")
+                from ..dist.halo import suggest_shard_cap
+                shard_cap = suggest_shard_cap(self.domain, positions,
+                                              n_shards)
+            if self.compact and positions is not None:
+                from ..dist.halo import suggest_shard_max_active
+                max_active = suggest_shard_max_active(self.domain,
+                                                      positions, n_shards)
+        box = None if self.strategy == "allin" else self.box
+        return dataclasses.replace(
+            self, backend="halo", halo_inner=inner, n_shards=n_shards,
+            shard_axis=axis, shard_cap=shard_cap, mesh=mesh, box=box,
+            max_active=max_active)
 
     # -- introspection -----------------------------------------------------
 
@@ -287,7 +401,10 @@ def plan(domain: Domain, kernel: Optional[PairKernel] = None, *,
          batch_size: int = 64, box: Optional[Tuple[int, int, int]] = None,
          interpret: Optional[bool] = None,
          compact: bool = False, max_active: Optional[int] = None,
-         m_c_slack: float = 1.5) -> InteractionPlan:
+         m_c_slack: float = 1.5,
+         halo_inner: str = "reference", n_shards: Optional[int] = None,
+         shard_axis: str = "halo", shard_cap: Optional[int] = None,
+         mesh=None) -> InteractionPlan:
     """Build an :class:`InteractionPlan` (static planning, done once).
 
     Args:
@@ -303,10 +420,12 @@ def plan(domain: Domain, kernel: Optional[PairKernel] = None, *,
         per interaction (``core.traffic``); or ``"autotune"`` to *measure*
         candidate schedules on ``positions`` and return the empirically
         fastest (``core.autotune``; winners persist in an on-disk cache).
-      backend: ``"reference"`` (pure-JAX schedules) or ``"pallas"`` (TPU
-        kernels; interpret mode off-TPU). With ``strategy="autotune"``,
-        ``"all"`` defers to the tuner's platform default set (reference
-        everywhere, plus native Pallas on TPU).
+      backend: ``"reference"`` (pure-JAX schedules), ``"pallas"`` (TPU
+        kernels; interpret mode off-TPU), or ``"halo"`` (distributed
+        Z-slab execution on a device mesh — ``repro.dist.engine``; the
+        per-shard schedule runs on ``halo_inner``). With
+        ``strategy="autotune"``, ``"all"`` defers to the tuner's platform
+        default set (reference everywhere, plus native Pallas on TPU).
       box: All-in-SM sub-box override; sized from the VMEM budget otherwise.
       interpret: force Pallas interpret mode (None = auto by platform).
       compact: occupancy-compacted execution — iterate only work units
@@ -318,6 +437,17 @@ def plan(domain: Domain, kernel: Optional[PairKernel] = None, *,
         measured from ``positions`` (with slack) when omitted. Like
         ``m_c``, an exceeded bound is caught by ``check_overflow`` /
         ``execute_or_replan``, never silently wrong.
+      halo_inner: per-shard backend for ``backend="halo"``
+        (``"reference"``/``"pallas"``).
+      n_shards: Z-slab count for ``backend="halo"`` (must divide ``nz``);
+        defaults to the largest divisor of ``nz`` that fits the visible
+        devices (1 on a single device — the bit-identical fallback).
+      shard_axis / mesh: mesh axis name and an optional explicit
+        ``jax.sharding.Mesh``; by default the engine builds a 1-D mesh
+        over the local devices.
+      shard_cap: static per-shard particle capacity for ``backend="halo"``;
+        measured from ``positions`` (with slack) when omitted. Same
+        overflow contract as ``m_c``.
     """
     kernel = kernel or make_lennard_jones()
     if strategy == "autotune":
@@ -325,6 +455,10 @@ def plan(domain: Domain, kernel: Optional[PairKernel] = None, *,
         if positions is None:
             raise ValueError('strategy="autotune" needs positions (the '
                              "tuner times real executions)")
+        if backend == "halo":
+            # the tuner owns the shard-count axis: fall back to the
+            # platform default backends and let halo twins join the sweep
+            backend = "all"
         backends = None if backend == "all" else (backend,)
         # the caller's batch_size/box join the sweep as candidates rather
         # than pinning it — the stopwatch gets the final word
@@ -346,33 +480,71 @@ def plan(domain: Domain, kernel: Optional[PairKernel] = None, *,
                              "model is parameterized by the fill ratio)")
         # compact=True narrows the choice to the cell schedules that have a
         # compacted path — otherwise whether auto+compact works would
-        # depend on which strategy the cost model happens to pick
+        # depend on which strategy the cost model happens to pick. The halo
+        # decomposition only exists for cell schedules (compacted halo:
+        # pencil schedules only).
         among = (("cell_dense", "xpencil", "allin") if compact else None)
+        if backend == "halo":
+            among = (("cell_dense", "xpencil") if compact
+                     else ("cell_dense", "xpencil", "allin"))
         strategy = choose_strategy(domain, m_c,
                                    positions.shape[0] / domain.n_cells,
                                    among=among)
-    if compact:
-        if not supports_compact(backend, strategy):
+    inner_backend = halo_inner if backend == "halo" else backend
+    if backend == "halo":
+        from ..dist import engine as dist_engine
+        from ..dist.halo import suggest_shard_cap
+        if mesh is not None and shard_axis not in mesh.axis_names:
             raise ValueError(
-                f"backend {backend!r} has no compacted path for strategy "
-                f"{strategy!r}; compact-capable pairs: "
+                f"mesh has axes {mesh.axis_names}, no {shard_axis!r} "
+                "shard axis — pass shard_axis=<one of them> (or use "
+                "plan.distribute(mesh), which defaults to the mesh's "
+                "first axis)")
+        if n_shards is None:
+            if mesh is not None:
+                n_shards = int(mesh.shape[shard_axis])
+            else:
+                n_shards = dist_engine.default_n_shards(domain)
+        if n_shards > 1 and shard_cap is None:
+            if positions is None:
+                raise ValueError("backend='halo' needs either shard_cap or "
+                                 "positions (to measure the per-shard "
+                                 "capacity)")
+            shard_cap = suggest_shard_cap(domain, positions, n_shards)
+    if compact:
+        if not supports_compact(inner_backend, strategy):
+            raise ValueError(
+                f"backend {inner_backend!r} has no compacted path for "
+                f"strategy {strategy!r}; compact-capable pairs: "
                 f"{sorted(_COMPACT_OK)}")
         if max_active is None:
             if positions is None:
                 raise ValueError("compact=True needs either max_active or "
                                  "positions (to measure the active-unit "
                                  "bound)")
-            mbox = box
-            if strategy == "allin" and mbox is None:
-                mbox = _allin_box(domain, m_c)
-            max_active = suggest_max_active(domain, positions, strategy,
-                                            box=mbox)
+            if backend == "halo" and n_shards > 1:
+                # one static bound shared by all shards: the busiest
+                # shard's active pencils, not the global count
+                from ..dist.halo import suggest_shard_max_active
+                max_active = suggest_shard_max_active(domain, positions,
+                                                      n_shards)
+            else:
+                mbox = box
+                if strategy == "allin" and mbox is None:
+                    mbox = _allin_box(domain, m_c)
+                max_active = suggest_max_active(domain, positions, strategy,
+                                                box=mbox)
     p = InteractionPlan(domain=domain, kernel=kernel, m_c=m_c,
                         strategy=strategy, backend=backend,
                         batch_size=batch_size, box=box, interpret=interpret,
-                        compact=compact, max_active=max_active)
+                        compact=compact, max_active=max_active,
+                        halo_inner=halo_inner, n_shards=n_shards,
+                        shard_axis=shard_axis, shard_cap=shard_cap,
+                        mesh=mesh)
     if strategy != "naive_n2":
-        get_backend(backend, strategy)   # fail at plan time, not execute time
+        # fail at plan time, not execute time (halo validates the
+        # per-shard backend the slab schedule will actually dispatch to)
+        get_backend(inner_backend, strategy)
     return p
 
 
@@ -398,10 +570,7 @@ def _allin_box(domain: Domain, m_c: int) -> Tuple[int, int, int]:
     return S.shrink_to_divisors(domain, S.subbox_dims(domain, m_c))
 
 
-def _cell_counts(domain: Domain, positions: Array) -> Array:
-    return jax.ops.segment_sum(
-        jnp.ones((positions.shape[0],), jnp.int32),
-        domain.cell_ids(positions), num_segments=domain.n_cells)
+_cell_counts = cell_counts          # binning owns the single binning pass
 
 
 def _max_cell_count(domain: Domain, positions: Array) -> Array:
@@ -477,13 +646,23 @@ def _count_dispatch() -> None:
 def _impl(p: InteractionPlan) -> Callable:
     """The traced executor body shared by the single and batched paths."""
 
+    if p._multi_shard:
+        # distributed halo execution: partition -> shard_map(bin + ghost
+        # exchange + local schedule) -> scatter-back (repro.dist.engine)
+        from ..dist.engine import halo_impl
+        return halo_impl(p)
+
+    # a single-shard halo plan runs the inner backend directly — no mesh,
+    # no exchange: the bit-identical single-device fallback
+    backend = p.halo_inner if p.backend == "halo" else p.backend
+
     def impl(state: ParticleState) -> Tuple[Array, Array]:
         if p.strategy == "naive_n2":
             fx, fy, fz, pot = S.naive_n2(p.domain, state.positions, p.kernel)
             return jnp.stack([fx, fy, fz], axis=-1), pot
         bins = bin_particles(p.domain, state.positions, state.fields,
                              m_c=p.m_c)
-        return get_backend(p.backend, p.strategy)(p, bins, state)
+        return get_backend(backend, p.strategy)(p, bins, state)
 
     return impl
 
@@ -501,7 +680,13 @@ def _executor(p: InteractionPlan, field_names: Tuple[str, ...]) -> Callable:
 def _batch_executor(p: InteractionPlan, field_names: Tuple[str, ...]
                     ) -> Callable:
     """One jitted executor per (plan, state structure) for stacked states."""
-    return jax.jit(jax.vmap(_impl(p)))
+    impl = _impl(p)
+    if p._multi_shard:
+        # vmap cannot batch through shard_map's collectives; lax.map keeps
+        # the contract that matters — B systems, one jitted dispatch,
+        # bit-identical to the per-state loop
+        return jax.jit(lambda states: jax.lax.map(impl, states))
+    return jax.jit(jax.vmap(impl))
 
 
 def clear_executor_cache() -> None:

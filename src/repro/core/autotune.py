@@ -50,7 +50,9 @@ Array = jax.Array
 # Bump when the candidate space or cache schema changes: stale entries from
 # an older tuner are skipped (and overwritten), not misread.
 # v2: dense-vs-compact candidate axis + occupancy bucket in the cache key.
-CACHE_VERSION = 2
+# v3: halo shard-count candidate axis + device count in the cache key (a
+#     winner tuned on an 8-device mesh must not answer a 1-device query).
+CACHE_VERSION = 3
 
 _CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 _CACHE_FILE = "autotune_cache.json"
@@ -74,9 +76,26 @@ class Candidate:
     box: Optional[Tuple[int, int, int]] = None   # allin sub-box
     compact: bool = False                        # occupancy-compacted path
     max_active: Optional[int] = None             # static active-unit bound
+    n_shards: Optional[int] = None               # halo Z-slabs (None = 1)
+    shard_cap: Optional[int] = None              # halo per-shard capacity
+
+    @property
+    def distributed(self) -> bool:
+        return bool(self.n_shards) and self.n_shards > 1
 
     def plan(self, domain: Domain, kernel: PairKernel,
              interpret: Optional[bool] = None) -> InteractionPlan:
+        if self.distributed:
+            # the candidate's backend is the *per-shard* backend; the
+            # allin slab tiling is recomputed by the plan for this shard
+            # count, so the dense candidate's box is dropped
+            return InteractionPlan(
+                domain=domain, kernel=kernel, m_c=self.m_c,
+                strategy=self.strategy, backend="halo",
+                halo_inner=self.backend, batch_size=self.batch_size,
+                box=None, interpret=interpret, compact=self.compact,
+                max_active=self.max_active, n_shards=self.n_shards,
+                shard_cap=self.shard_cap)
         return InteractionPlan(domain=domain, kernel=kernel, m_c=self.m_c,
                                strategy=self.strategy, backend=self.backend,
                                batch_size=self.batch_size, box=self.box,
@@ -87,7 +106,8 @@ class Candidate:
         return {"strategy": self.strategy, "backend": self.backend,
                 "batch_size": self.batch_size, "m_c": self.m_c,
                 "box": list(self.box) if self.box else None,
-                "compact": self.compact, "max_active": self.max_active}
+                "compact": self.compact, "max_active": self.max_active,
+                "n_shards": self.n_shards, "shard_cap": self.shard_cap}
 
     @classmethod
     def from_json(cls, d: dict) -> "Candidate":
@@ -96,7 +116,11 @@ class Candidate:
                    box=tuple(d["box"]) if d.get("box") else None,
                    compact=bool(d.get("compact", False)),
                    max_active=(int(d["max_active"])
-                               if d.get("max_active") else None))
+                               if d.get("max_active") else None),
+                   n_shards=(int(d["n_shards"])
+                             if d.get("n_shards") else None),
+                   shard_cap=(int(d["shard_cap"])
+                              if d.get("shard_cap") else None))
 
 
 def enumerate_candidates(domain: Domain, m_c_choices: Sequence[int], *,
@@ -184,6 +208,47 @@ def compact_twins(domain: Domain, positions: Array,
     return list(dict.fromkeys(twins))
 
 
+def halo_twins(domain: Domain, positions: Array,
+               candidates: Sequence[Candidate],
+               shard_counts: Sequence[int], *,
+               device_count: Optional[int] = None,
+               cap_slack: float = 1.3, align: int = 8) -> List[Candidate]:
+    """The shard-count candidate axis: for every cell-schedule candidate, a
+    distributed twin per viable shard count — ``backend="halo"`` with the
+    candidate's backend as the per-shard inner, a ``shard_cap`` measured
+    from ``positions`` (the ``m_c`` contract again), and compacted twins
+    re-bounded to the *busiest shard's* active pencils. Shard counts that
+    don't divide ``nz`` or exceed the visible devices are skipped."""
+    from ..dist.halo import suggest_shard_cap, suggest_shard_max_active
+    if device_count is None:
+        device_count = jax.device_count()
+    twins: List[Candidate] = []
+    caps: Dict[int, int] = {}
+    bounds: Dict[int, int] = {}
+    for ns in dict.fromkeys(shard_counts):
+        if ns < 2 or ns > device_count or domain.nz % ns:
+            continue
+        caps[ns] = suggest_shard_cap(domain, positions, ns,
+                                     slack=cap_slack, align=align)
+        for c in candidates:
+            if c.distributed:
+                continue
+            if c.strategy not in ("cell_dense", "xpencil", "allin"):
+                continue
+            if c.compact and c.strategy == "allin":
+                continue                 # no per-slab sub-box occupancy
+            max_active = c.max_active
+            if c.compact:
+                if ns not in bounds:
+                    bounds[ns] = suggest_shard_max_active(
+                        domain, positions, ns, align=align)
+                max_active = bounds[ns]
+            twins.append(dataclasses.replace(
+                c, n_shards=ns, shard_cap=caps[ns], box=None,
+                max_active=max_active))
+    return list(dict.fromkeys(twins))
+
+
 def prune_candidates(domain: Domain, avg_ppc: float,
                      candidates: Sequence[Candidate],
                      top_k: int = DEFAULT_TOP_K,
@@ -200,18 +265,22 @@ def prune_candidates(domain: Domain, avg_ppc: float,
     never get to contradict it (the exact failure this tuner exists for).
     Dense and compacted variants of a strategy form separate round-robin
     queues for the same reason: the fill-scaled model must not be able to
-    crowd its dense twin (or vice versa) out of the timed field.
+    crowd its dense twin (or vice versa) out of the timed field — and so
+    do distributed (halo) variants per shard count, whose ppermute cost
+    the model does not see at all.
 
     ``fill_for``: optional ``Candidate -> fill fraction`` hook used to
     score compacted candidates (measured occupancy; default 1.0).
     """
     def order_key(c: Candidate):
         return (_cost(domain, avg_ppc, c, fill_for), c.backend,
-                c.batch_size, c.m_c, c.box or (), c.compact)
+                c.batch_size, c.m_c, c.box or (), c.compact,
+                c.n_shards or 1)
 
-    by_strategy: Dict[Tuple[str, bool], List[Candidate]] = {}
+    by_strategy: Dict[Tuple[str, bool, int], List[Candidate]] = {}
     for c in sorted(candidates, key=order_key):
-        by_strategy.setdefault((c.strategy, c.compact), []).append(c)
+        by_strategy.setdefault((c.strategy, c.compact, c.n_shards or 1),
+                               []).append(c)
     queues = sorted(by_strategy.values(),
                     key=lambda q: order_key(q[0]))
     interleaved = [c for round_ in itertools.zip_longest(*queues)
@@ -267,9 +336,16 @@ def _kernel_id(kernel: PairKernel) -> str:
 
 def cache_key(platform: str, domain: Domain, m_c: int, avg_ppc: float,
               kernel: PairKernel, backends: Sequence[str],
-              pencil_fill: float = 1.0) -> str:
+              pencil_fill: float = 1.0,
+              device_count: Optional[int] = None) -> str:
+    """Mesh-aware: the visible device count is part of the key — the halo
+    shard-count axis makes winners mesh-shaped, so a schedule tuned on an
+    8-device mesh must never answer a 1-device query (or vice versa)."""
+    if device_count is None:
+        device_count = jax.device_count()
     return "|".join([
         platform,
+        f"dev{device_count}",
         "x".join(str(n) for n in domain.ncells),
         f"mc{m_c}",
         f"ppc{ppc_bucket(avg_ppc)}",
@@ -342,6 +418,7 @@ def tune(domain: Domain, kernel: Optional[PairKernel] = None,
          candidates: Optional[Sequence[Candidate]] = None,
          m_c_slack: float = 1.5,
          include_compact: bool = True,
+         shard_counts: Optional[Sequence[int]] = None,
          top_k: int = DEFAULT_TOP_K,
          reps: Optional[int] = None, budget_s: float = 0.5,
          interpret: Optional[bool] = None,
@@ -371,6 +448,11 @@ def tune(domain: Domain, kernel: Optional[PairKernel] = None,
         enumerated candidate whose (backend, strategy) implements the
         compacted path — the dense-vs-compact axis of the search. The
         bound is measured from ``positions``.
+      shard_counts: halo shard counts to sweep (the distributed axis —
+        every cell-schedule candidate gets a ``backend="halo"`` twin per
+        viable count). Default: the full visible device count when more
+        than one device is up, nothing on a single device. Pass ``()`` to
+        disable the distributed axis entirely.
       top_k: survivors after model pruning; raise it if you suspect the
         model is mis-ranking your regime.
       reps / budget_s: stopwatch controls (see ``time_fn``).
@@ -416,7 +498,42 @@ def tune(domain: Domain, kernel: Optional[PairKernel] = None,
         n_act, total = occ_of(c)
         return n_act / max(total, 1)
 
+    # measured per-shard maxima, memoized per shard count — the halo
+    # analogues of max_count/occ_of for the distributed candidates. The
+    # per-cell counts don't depend on the shard count: one binning pass
+    # serves every ns.
+    _shard_measures: Dict[int, Tuple[int, int]] = {}
+    _counts_box: list = []
+
+    def shard_measures(ns: int) -> Tuple[int, int]:
+        if ns not in _shard_measures:
+            from .binning import (cell_counts, shard_pencil_active,
+                                  shard_slab_counts)
+            if not _counts_box:
+                _counts_box.append(cell_counts(domain, positions))
+            counts = _counts_box[0]
+            _shard_measures[ns] = (
+                int(shard_slab_counts(domain, counts, ns).max()),
+                int(shard_pencil_active(domain, counts, ns).max()))
+        return _shard_measures[ns]
+
     def active_safe(c: Candidate, strict: bool = True) -> bool:
+        if c.distributed:
+            ns = c.n_shards
+            if ns > jax.device_count() or domain.nz % ns:
+                return False
+            if c.shard_cap is None:
+                if strict:
+                    raise ValueError(
+                        f"halo candidate {c} has no shard_cap bound "
+                        "(repro.dist.halo.suggest_shard_cap measures one)")
+                return False
+            load, act = shard_measures(ns)
+            if c.shard_cap < load:
+                return False
+            if c.compact:
+                return c.max_active is not None and c.max_active >= act
+            return True
         if not c.compact:
             return True
         if c.max_active is None:
@@ -447,6 +564,14 @@ def tune(domain: Domain, kernel: Optional[PairKernel] = None,
         if include_compact:
             candidates = list(candidates) + compact_twins(
                 domain, positions, candidates)
+        if shard_counts is None:
+            # default distributed axis: the full local mesh (one extra
+            # twin set), only when there is actually more than one device
+            ndev = jax.device_count()
+            shard_counts = (ndev,) if ndev > 1 else ()
+        if shard_counts:
+            candidates = list(candidates) + halo_twins(
+                domain, positions, candidates, shard_counts)
     candidates = [c for c in candidates
                   if c.m_c >= max_count and active_safe(c)]
     if not candidates:

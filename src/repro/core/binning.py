@@ -40,6 +40,14 @@ Array = jnp.ndarray
 # are masked out by slot ids anyway (DESIGN: TPUs want masks, not NaN traps).
 EMPTY_POS = 1.0e8
 
+# Slot-id offset carried by periodic ghost *copies*: a particle must still
+# interact with its own periodic image, so ghost slots mirror the interior
+# ids bumped by this constant — never equal to any real id, so the
+# self-pair exclusion (id equality) keeps excluding only the true self
+# pair. Shared with the distributed halo layer, whose cross-shard ghost
+# planes use per-shard id offsets for the same reason.
+GHOST_ID_BUMP = 1_000_000_000
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
@@ -61,6 +69,14 @@ class CellBins:
 def padded_shape(domain: Domain, m_c: int) -> Tuple[int, int, int]:
     nx, ny, nz = domain.ncells
     return (nz + 2, ny + 2, (nx + 2) * m_c)
+
+
+def cell_counts(domain: Domain, positions: Array) -> Array:
+    """(n_cells,) particles per cell — the one binning pass every static
+    bound probe (``m_c``, shard loads, occupancy) derives from."""
+    return jax.ops.segment_sum(
+        jnp.ones((positions.shape[0],), jnp.int32),
+        domain.cell_ids(positions), num_segments=domain.n_cells)
 
 
 def bin_particles(domain: Domain, positions: Array,
@@ -175,7 +191,7 @@ def _fill_periodic_ghosts(domain: Domain, bins: CellBins) -> CellBins:
     sid = bins.slot_id
 
     def bump(s):
-        return jnp.where((s >= 0) & (s < 1_000_000_000), s + 1_000_000_000, s)
+        return jnp.where((s >= 0) & (s < GHOST_ID_BUMP), s + GHOST_ID_BUMP, s)
 
     s = sid
     if px:
@@ -283,6 +299,35 @@ def subbox_counts(domain: Domain, counts: Array,
     gx, gy, gz = nx // bx, ny // by, nz // bz
     grid = counts_grid(domain, counts)
     return grid.reshape(gz, bz, gy, by, gx, bx).sum(axis=(1, 3, 5)).reshape(-1)
+
+
+def shard_slab_counts(domain: Domain, counts: Array, n_shards: int) -> Array:
+    """(n_cells,) cell counts -> (n_shards,) particles per Z-slab shard.
+
+    The reduction behind the distributed engine's ``shard_cap`` overflow
+    contract: a shard whose load exceeds the static capacity would silently
+    drop particles, exactly like a cell overflowing ``m_c``.
+    """
+    if domain.nz % n_shards:
+        raise ValueError(
+            f"nz={domain.nz} not divisible by n_shards={n_shards}")
+    per_plane = counts_grid(domain, counts).sum(axis=(1, 2))     # (nz,)
+    return per_plane.reshape(n_shards, domain.nz // n_shards).sum(axis=1)
+
+
+def shard_pencil_active(domain: Domain, counts: Array,
+                        n_shards: int) -> Array:
+    """(n_cells,) cell counts -> (n_shards,) active (z, y) pencils per
+    Z-slab shard — the per-shard occupancy the distributed compacted path's
+    ``max_active`` bound must cover (the bound is one static number shared
+    by every shard, so it is checked against the *busiest* shard)."""
+    if domain.nz % n_shards:
+        raise ValueError(
+            f"nz={domain.nz} not divisible by n_shards={n_shards}")
+    pc = pencil_counts(domain, counts).reshape(domain.nz, domain.ny)
+    active = (pc > 0).astype(jnp.int32)
+    return active.reshape(n_shards, domain.nz // n_shards,
+                          domain.ny).sum(axis=(1, 2))
 
 
 def pencil_occupancy(domain: Domain, counts: Array,

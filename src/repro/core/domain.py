@@ -128,3 +128,24 @@ class Domain:
 
         box = jnp.asarray(self.box, dtype=dtype)
         return jax.random.uniform(key, (n, 3), dtype=dtype) * box
+
+
+def slab_domain(domain: Domain, n_shards: int) -> Domain:
+    """The Z-slab subdomain one halo shard owns (``repro.dist``).
+
+    The global (nx, ny, nz) grid split into ``n_shards`` equal slabs along
+    Z: same X/Y geometry, ``nz / n_shards`` planes, and Z forced
+    *non-periodic* — a shard's Z ghost planes are filled by the halo
+    exchange (wrapped neighbours under a periodic global Z, empty planes at
+    the open boundaries), never by local wrapping.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if domain.nz % n_shards:
+        raise ValueError(
+            f"nz={domain.nz} not divisible by n_shards={n_shards}")
+    px, py, _ = domain.periodic_axes
+    return Domain(
+        box=(domain.box[0], domain.box[1], domain.box[2] / n_shards),
+        ncells=(domain.nx, domain.ny, domain.nz // n_shards),
+        cutoff=domain.cutoff, periodic=(px, py, False))

@@ -5,14 +5,18 @@ Modules:
   sharding   role-based constraints ("dp"/"tp" -> mesh axes) + NamedSharding
              trees for params/opt/batch/cache; ``sanitize`` drops axes that
              don't divide.
-  halo       the distributed particle engine: shard_map over Z-slabs with
-             ghost-plane exchange (the paper's grid stretched across chips).
+  halo       halo-exchange primitives: traceable Z-slab partition,
+             ppermute ghost-plane exchange, per-shard load/occupancy probes.
+  engine     the distributed execution subsystem: ``backend="halo"`` routes
+             ``plan.execute`` through shard_map over Z-slabs (per-shard
+             binning + compaction, ghost exchange, any registered schedule
+             per shard — the paper's grid stretched across chips).
   fault      straggler watchdog, restart-from-latest-checkpoint driver,
              elastic re-mesh restore.
   compress   int8 gradient compression with error feedback (slow inter-pod
              links).
 """
 
-from . import compress, fault, halo, sharding
+from . import compress, engine, fault, halo, sharding
 
-__all__ = ["compress", "fault", "halo", "sharding"]
+__all__ = ["compress", "engine", "fault", "halo", "sharding"]

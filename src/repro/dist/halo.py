@@ -1,164 +1,176 @@
-"""Distributed cell-list engine: Z-slab decomposition + ghost-plane exchange.
+"""Halo-exchange primitives: Z-slab partition + ghost-plane ``ppermute``.
 
-The paper's grid, stretched across devices: the (nz, ny, nx) cell grid is
-split into Z-slabs, one per shard along a mesh axis. Each shard
+The low-level machinery of the distributed execution subsystem
+(``repro.dist.engine``). The paper's (nz, ny, nx) cell grid is split into
+Z-slabs, one per shard along a mesh axis; each shard bins its own particles
+into the slab's padded planes and fills its two ghost Z-planes from the
+neighbouring shards — the ghost ring of the paper's layout, crossing chips
+instead of staying in HBM.
 
-  1. bins its own particles into the slab's padded planes (the sentinel
-     rows ``partition_by_z`` pads with are masked out of the binning),
-  2. exchanges its boundary Z-planes with the two neighbouring shards via
-     ``ppermute`` — the ghost ring of the paper's layout, crossing chips
-     instead of staying in HBM (periodic Z wraps around the ring with the
-     minimum-image coordinate shift),
-  3. runs any dense schedule (X-pencil by default) on the local slab, whose
-     ghost planes now hold the neighbours' border cells.
+This module owns the pieces that are pure functions of arrays:
 
-Slot ids are offset per shard so the self-pair exclusion mask stays exact
-across shard boundaries.
+  ``partition_by_shard``    traceable per-shard gather under a static
+                            ``cap`` (the shard-capacity analogue of the
+                            paper's M_C bound — overloaded shards are
+                            detectable, never silently wrong),
+  ``exchange_halo``         the ``ppermute`` ghost-plane exchange (periodic
+                            Z wraps around the shard ring with the
+                            minimum-image coordinate shift; **non-periodic
+                            Z boundaries are filled with empty planes** so
+                            open boundaries contribute zero ghosts),
+  ``shard_loads`` / ``suggest_shard_cap`` / ``suggest_shard_max_active``
+                            the host-side occupancy probes behind the plan
+                            layer's overflow/replan contract.
 
-    pos_part = partition_by_z(domain, positions, n_shards)
-    fn = make_distributed_compute(domain, kernel, m_c, mesh)
-    forces, potential = fn(pos_part)          # per-particle, sentinel rows 0
+The executor that strings them together under ``shard_map`` lives in
+``repro.dist.engine``; ``plan(..., backend="halo")`` is the front door.
 """
 
 from __future__ import annotations
 
-import dataclasses
+from typing import Dict, Optional, Tuple
+
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.experimental.shard_map import shard_map
-from jax.sharding import PartitionSpec as P
 
-from ..core import strategies as S
-from ..core.binning import (EMPTY_POS, bin_particles, gather_to_particles,
-                            interior_to_padded)
+from ..core.binning import (EMPTY_POS, cell_counts, shard_pencil_active,
+                            shard_slab_counts)
 from ..core.domain import Domain
-from ..core.interactions import PairKernel
 
 Array = jnp.ndarray
 
 # anything beyond this is sentinel padding, far outside every real box
-_VALID_MAX = 1.0e7
+VALID_MAX = 1.0e7
 
 
-def partition_by_z(domain: Domain, positions: Array, n_shards: int,
-                   cap: int | None = None) -> Array:
-    """Group particles by Z-slab, padding each shard to a common length.
+# --------------------------------------------------------------------------
+# shard assignment + load probes (host side, outside jit)
+# --------------------------------------------------------------------------
 
-    Returns (n_shards * cap, 3); pad rows sit at ``EMPTY_POS`` (detectable
-    via ``pos[:, 0] > 1e7``). Runs on host (one-off layout step).
+def shard_ids(domain: Domain, positions: Array, n_shards: int) -> Array:
+    """(N,) Z-slab shard index per particle (periodic-aware cell coords)."""
+    if domain.nz % n_shards:
+        raise ValueError(
+            f"nz={domain.nz} not divisible by n_shards={n_shards}")
+    zc = domain.cell_coords(positions)[:, 2]
+    return zc // (domain.nz // n_shards)
+
+
+def shard_loads(domain: Domain, positions: Array, n_shards: int,
+                counts: Array | None = None) -> Array:
+    """(n_shards,) particles per Z-slab shard. Pass precomputed per-cell
+    ``counts`` (``binning.cell_counts``) to skip the binning pass."""
+    if counts is None:
+        counts = cell_counts(domain, positions)
+    return shard_slab_counts(domain, counts, n_shards)
+
+
+def suggest_shard_cap(domain: Domain, positions: Array, n_shards: int,
+                      slack: float = 1.3, align: int = 8) -> int:
+    """One-off static per-shard particle capacity: the busiest shard's load
+    with slack, rounded up to ``align`` — the same measure-plus-slack
+    contract as ``suggest_m_c``. Particles drift between slabs as they
+    move; an exceeded cap is caught by ``InteractionPlan.check_overflow``.
     """
-    nz = domain.nz
-    if nz % n_shards:
-        raise ValueError(f"nz={nz} not divisible by n_shards={n_shards}")
-    pos = np.asarray(positions)
-    zc = np.asarray(domain.cell_coords(positions))[:, 2]
-    shard = zc // (nz // n_shards)
-    counts = np.bincount(shard, minlength=n_shards)
-    cap = int(cap or counts.max())
-    if counts.max() > cap:
-        raise ValueError(f"cap={cap} < max shard load {int(counts.max())}")
-    out = np.full((n_shards, cap, 3), EMPTY_POS, dtype=pos.dtype)
-    for s in range(n_shards):
-        rows = pos[shard == s]
-        out[s, :len(rows)] = rows
-    return jnp.asarray(out.reshape(n_shards * cap, 3))
+    mx = int(jnp.max(shard_loads(domain, positions, n_shards)))
+    cap = max(1, int(mx * slack + 0.999))
+    return -(-cap // align) * align
 
 
-def _empty_like_plane(plane: Array, fill) -> Array:
-    return jnp.full(plane.shape, fill, plane.dtype)
+def suggest_shard_max_active(domain: Domain, positions: Array,
+                             n_shards: int, slack: float = 1.25,
+                             align: int = 8,
+                             counts: Array | None = None) -> int:
+    """Static per-shard active-pencil bound for the compacted halo path:
+    the busiest shard's active (z, y) pencil count with slack, aligned,
+    clipped to the slab's total pencil count."""
+    if counts is None:
+        counts = cell_counts(domain, positions)
+    mx = int(jnp.max(shard_pencil_active(domain, counts, n_shards)))
+    bound = max(1, int(mx * slack + 0.999))
+    bound = -(-bound // align) * align
+    return min(bound, (domain.nz // n_shards) * domain.ny)
 
 
-def make_distributed_compute(domain: Domain, kernel: PairKernel, m_c: int,
-                             mesh, axis: str = "data",
-                             strategy: str = "xpencil",
-                             batch_size: int = 64):
-    """-> jitted ``fn(pos_part) -> (forces (N, 3), potential (N,))``.
+# --------------------------------------------------------------------------
+# traceable partition / scatter-back
+# --------------------------------------------------------------------------
 
-    ``pos_part`` must be laid out by :func:`partition_by_z` (equal-sized
-    Z-slab groups, sentinel padded). ``strategy`` is any dense schedule
-    (``xpencil``/``cell_dense``/``allin``). Output rows of sentinel
-    particles are zero.
+def partition_by_shard(domain: Domain, positions: Array,
+                       fields: Optional[Dict[str, Array]], n_shards: int,
+                       cap: int) -> Tuple[Array, Array, Dict[str, Array]]:
+    """Group particles by Z-slab under a static per-shard ``cap``.
+
+    Traceable (runs inside the jitted executor): per shard, a fixed-size
+    ``nonzero`` gathers that shard's particle rows; pad rows point past the
+    end of the particle array and read the ``EMPTY_POS`` sentinel. Returns
+    ``(gather_idx (n_shards * cap,), pos_part (n_shards * cap, 3),
+    fields_part)`` — ``gather_idx`` routes shard-local results back to
+    particle order (pad entries index ``N`` and are dropped by a
+    ``mode='drop'`` scatter).
+
+    If a shard holds more than ``cap`` particles the extra rows are
+    *dropped* — the plan layer detects that (``shard_loads`` vs the static
+    cap) and replans, exactly like an overflowing ``m_c``.
     """
-    n_shards = int(mesh.shape[axis])
-    nx, ny, nz = domain.ncells
-    if nz % n_shards:
-        raise ValueError(f"nz={nz} not divisible by {n_shards} shards")
-    nz_loc = nz // n_shards
-    px, py, pz = domain.periodic_axes
-    lz_loc = domain.box[2] / n_shards
-    local_dom = Domain(box=(domain.box[0], domain.box[1], lz_loc),
-                       ncells=(nx, ny, nz_loc), cutoff=domain.cutoff,
-                       periodic=(px, py, False))
-    if strategy not in S.STRATEGIES or strategy == "par_part":
-        raise ValueError(f"halo engine needs a dense strategy, got "
-                         f"{strategy!r}")
-    strat_fn = S.STRATEGIES[strategy]
+    n = positions.shape[0]
+    shard = shard_ids(domain, positions, n_shards)
+    idx = [jnp.nonzero(shard == s, size=cap, fill_value=n)[0]
+           for s in range(n_shards)]
+    gather_idx = jnp.stack(idx).astype(jnp.int32).reshape(-1)
+    pad_pos = jnp.concatenate(
+        [positions, jnp.full((1, 3), EMPTY_POS, positions.dtype)])
+    pos_part = pad_pos[gather_idx]
+    fields_part: Dict[str, Array] = {}
+    for k, v in (fields or {}).items():
+        fields_part[k] = jnp.concatenate(
+            [v, jnp.zeros((1,), v.dtype)])[gather_idx]
+    return gather_idx, pos_part, fields_part
 
-    if n_shards == 1:
-        # degenerate mesh: no exchange partner (and with periodic Z the ring
-        # would alias a shard with itself) — run the single-device schedule.
-        from ..core.api import ParticleState, plan
-        p = plan(domain, kernel, m_c=m_c, strategy=strategy,
-                 batch_size=batch_size)
 
-        @jax.jit
-        def single(pos_part):
-            valid = pos_part[:, 0] < _VALID_MAX
-            safe = jnp.where(valid[:, None], pos_part, 0.0)
-            f, pot = p.execute(ParticleState(safe))
-            return f * valid[:, None], pot * valid
-        return single
+def scatter_from_shards(gather_idx: Array, n: int, values: Array) -> Array:
+    """Inverse of :func:`partition_by_shard` for per-row shard outputs:
+    rows land back at their particle index, pad rows are dropped."""
+    out_shape = (n,) + values.shape[1:]
+    return jnp.zeros(out_shape, values.dtype).at[gather_idx].set(
+        values, mode="drop")
 
+
+# --------------------------------------------------------------------------
+# the ghost-plane exchange (inside shard_map)
+# --------------------------------------------------------------------------
+
+def exchange_halo(plane: Array, *, axis: str, n_shards: int, nz_loc: int,
+                  shard_index: Array, periodic_z: bool, fill,
+                  coord_shift: float = 0.0) -> Array:
+    """Fill a padded plane's two ghost Z-planes from the neighbouring shards.
+
+    ``plane`` is any per-slot plane of the local ``CellBins`` layout —
+    shape ``(nz_loc + 2, ny + 2, (nx + 2) * m_c)``. Each shard sends its
+    last interior plane up the ring and its first interior plane down
+    (``ppermute``); a periodic global Z wraps around the ring, with
+    ``coord_shift`` applied so neighbour coordinates land in this shard's
+    local frame (the minimum-image shift — pass the slab height for the
+    "z" coordinate plane, 0 for everything else).
+
+    At **non-periodic Z boundaries the ghost planes are filled with
+    ``fill``** (the empty sentinel): the bottom shard's below-ghost and the
+    top shard's above-ghost must contribute zero ghost particles, never the
+    wrapped-around plane the ring permutation would otherwise deliver.
+    """
     fwd = [(i, (i + 1) % n_shards) for i in range(n_shards)]
     bwd = [(i, (i - 1) % n_shards) for i in range(n_shards)]
-
-    def body(pos_local):
-        cap = pos_local.shape[0]
-        idx = jax.lax.axis_index(axis)
-        valid = pos_local[:, 0] < _VALID_MAX
-        shift = jnp.asarray([0.0, 0.0, 1.0], pos_local.dtype) * \
-            (idx.astype(pos_local.dtype) * lz_loc)
-        bins = bin_particles(local_dom, pos_local - shift, m_c=m_c,
-                             valid=valid)
-
-        # globally unique slot ids: shard offset under the periodic bump
-        sid = bins.slot_id
-        sid = jnp.where(sid >= 0, sid + idx * cap, sid)
-
-        def exchange(plane, fill, z_shift):
-            """Fill the two ghost Z-planes from the neighbouring shards."""
-            top = plane[nz_loc:nz_loc + 1]     # last interior plane
-            bot = plane[1:2]                   # first interior plane
-            from_below = jax.lax.ppermute(top, axis, fwd)
-            from_above = jax.lax.ppermute(bot, axis, bwd)
-            if z_shift:                        # neighbour frame -> ours
-                from_below = from_below - lz_loc
-                from_above = from_above + lz_loc
-            empty = _empty_like_plane(bot, fill)
-            if not pz:                         # open Z: border shards stay
-                from_below = jnp.where(idx == 0, empty, from_below)
-                from_above = jnp.where(idx == n_shards - 1, empty,
-                                       from_above)
-            plane = plane.at[0:1].set(from_below)
-            return plane.at[nz_loc + 1:nz_loc + 2].set(from_above)
-
-        planes = dict(bins.planes)
-        planes["x"] = exchange(planes["x"], EMPTY_POS, z_shift=False)
-        planes["y"] = exchange(planes["y"], EMPTY_POS, z_shift=False)
-        planes["z"] = exchange(planes["z"], EMPTY_POS, z_shift=True)
-        sid = exchange(sid, -1, z_shift=False)
-        bins = dataclasses.replace(bins, planes=planes, slot_id=sid)
-
-        kwargs = {"batch_size": batch_size}
-        fx, fy, fz, pot = strat_fn(local_dom, bins, kernel, **kwargs)
-        outs = [gather_to_particles(bins, interior_to_padded(
-            local_dom, plane.reshape(nz_loc, local_dom.ny, local_dom.nx,
-                                     m_c), m_c))
-                for plane in (fx, fy, fz, pot)]
-        forces = jnp.stack(outs[:3], axis=-1) * valid[:, None]
-        return forces, outs[3] * valid
-
-    sharded = shard_map(body, mesh=mesh, in_specs=P(axis),
-                        out_specs=(P(axis), P(axis)), check_rep=False)
-    return jax.jit(sharded)
+    top = plane[nz_loc:nz_loc + 1]          # last interior plane
+    bot = plane[1:2]                        # first interior plane
+    from_below = jax.lax.ppermute(top, axis, fwd)
+    from_above = jax.lax.ppermute(bot, axis, bwd)
+    if coord_shift:                         # neighbour frame -> ours
+        from_below = from_below - coord_shift
+        from_above = from_above + coord_shift
+    if not periodic_z:                      # open Z: border ghosts stay empty
+        empty = jnp.full(bot.shape, fill, plane.dtype)
+        from_below = jnp.where(shard_index == 0, empty, from_below)
+        from_above = jnp.where(shard_index == n_shards - 1, empty,
+                               from_above)
+    plane = plane.at[0:1].set(from_below)
+    return plane.at[nz_loc + 1:nz_loc + 2].set(from_above)

@@ -22,8 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..core import Domain, make_lennard_jones
-from ..dist.halo import make_distributed_compute
+from ..core import Domain, ParticleState, make_lennard_jones
+from ..core import api as A
 from . import roofline as RL
 from .mesh import make_production_mesh
 
@@ -43,10 +43,15 @@ def run(multi_pod: bool, division: int = 128, ppc: int = 16,
     n = division ** 3 * ppc
     kernel = make_lennard_jones()
 
-    n_shards = mesh.shape["data"]
-    fn = make_distributed_compute(domain, kernel, m_c, mesh, axis="data",
-                                  strategy="xpencil")
-    spec = jax.ShapeDtypeStruct((n, 3), jnp.float32)
+    n_shards = int(mesh.shape["data"])
+    # uniform benchmark load: the analytic per-shard capacity with the
+    # usual slack + alignment (no positions exist at dry-run time)
+    cap = -(-int(n / n_shards * 1.3) // 8) * 8
+    p = A.plan(domain, kernel, m_c=m_c, strategy="xpencil", backend="halo",
+               mesh=mesh, shard_axis="data", n_shards=n_shards,
+               shard_cap=cap)
+    fn = jax.jit(A._impl(p))
+    spec = ParticleState(jax.ShapeDtypeStruct((n, 3), jnp.float32))
     t0 = time.time()
     lowered = fn.lower(spec)
     compiled = lowered.compile()

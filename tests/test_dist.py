@@ -36,33 +36,27 @@ def test_main_process_sees_one_device():
 
 
 def test_halo_engine_matches_single_device():
+    """The halo execution engine on an explicit user mesh (the
+    ``plan.distribute(mesh)`` path; the default-mesh path is covered in
+    tests/test_halo.py)."""
     out = run_sub("""
         import jax, jax.numpy as jnp, numpy as np
-        from repro.core import Domain, CellListEngine, suggest_m_c, \\
-            make_lennard_jones
-        from repro.dist.halo import make_distributed_compute, partition_by_z
+        from repro.core import Domain, ParticleState, make_lennard_jones, \\
+            plan
         mesh = jax.make_mesh((4,), ("data",))
         kern = make_lennard_jones()
         for periodic in (False, True):
             dom = Domain.cubic(8, cutoff=1.0, periodic=periodic)
             pos = dom.sample_uniform(jax.random.PRNGKey(3), 1500)
-            m_c = suggest_m_c(dom, pos)
-            f_ref, _ = CellListEngine(dom, kern, m_c=m_c,
-                                      strategy="xpencil").compute(pos)
-            pos_part = partition_by_z(dom, pos, 4)
-            f, _ = make_distributed_compute(dom, kern, m_c, mesh)(pos_part)
-            ref = {tuple(np.round(np.asarray(pos)[i], 5)): i
-                   for i in range(pos.shape[0])}
-            pp, fn = np.asarray(pos_part), np.asarray(f)
-            checked = 0
-            for j in range(pp.shape[0]):
-                if pp[j, 0] > 1e7:
-                    continue
-                i = ref[tuple(np.round(pp[j], 5))]
-                np.testing.assert_allclose(fn[j], np.asarray(f_ref)[i],
-                                           rtol=3e-4, atol=3e-4)
-                checked += 1
-            assert checked == 1500
+            state = ParticleState(pos)
+            p_ref = plan(dom, kern, positions=pos, strategy="xpencil")
+            f_ref, _ = p_ref.execute(state)
+            p_dist = p_ref.distribute(mesh, positions=pos)
+            assert p_dist.n_shards == 4 and p_dist.shard_axis == "data"
+            f, _ = p_dist.execute(state)
+            scale = max(float(np.abs(np.asarray(f_ref)).max()), 1.0)
+            np.testing.assert_allclose(np.asarray(f), np.asarray(f_ref),
+                                       rtol=3e-4, atol=3e-4 * scale)
         print("HALO_OK")
     """)
     assert "HALO_OK" in out

@@ -1,0 +1,82 @@
+"""Perf-trajectory renderer (``benchmarks.perf_history``)."""
+
+import json
+import pathlib
+import sys
+
+import pytest
+
+BENCH = pathlib.Path(__file__).resolve().parents[1] / "benchmarks"
+if str(BENCH.parent) not in sys.path:
+    sys.path.insert(0, str(BENCH.parent))
+
+from benchmarks import perf_history as PH  # noqa: E402
+
+
+def _snap(tmp_path, name, rows):
+    p = tmp_path / name
+    p.write_text(json.dumps(rows))
+    return p
+
+
+def _rec(case, us, strategy="xpencil", backend="reference"):
+    return {"case": case, "strategy": strategy, "backend": backend,
+            "us_per_call": us, "reps": 3, "platform": "cpu"}
+
+
+def test_collect_orders_by_name_and_skips_corrupt(tmp_path, capsys):
+    _snap(tmp_path, "BENCH_002.json", [_rec("a", 30.0)])
+    _snap(tmp_path, "BENCH_001.json", [_rec("a", 10.0)])
+    (tmp_path / "BENCH_000.json").write_text("{not json")
+    snaps = PH.collect(tmp_path)
+    assert [s[0] for s in snaps] == ["BENCH_001.json", "BENCH_002.json"]
+    assert "skipping BENCH_000.json" in capsys.readouterr().err
+
+
+def test_series_tracks_gaps_and_values(tmp_path):
+    _snap(tmp_path, "BENCH_001.json", [_rec("a", 10.0), _rec("b", 5.0)])
+    _snap(tmp_path, "BENCH_002.json", [_rec("a", 20.0)])
+    _snap(tmp_path, "BENCH_003.json", [_rec("a", 40.0), _rec("b", 6.0)])
+    snaps = PH.collect(tmp_path)
+    ss = PH.series(snaps)
+    assert ss[("a", "xpencil", "reference")] == [10.0, 20.0, 40.0]
+    assert ss[("b", "xpencil", "reference")] == [5.0, None, 6.0]
+    only_a = PH.series(snaps, case_filter="a")
+    assert list(only_a) == [("a", "xpencil", "reference")]
+
+
+def test_sparkline_shape_and_gaps():
+    assert PH.sparkline([1.0, None, 8.0]) == "▁·█"
+    assert PH.sparkline([None, None]) == "··"
+    assert PH.sparkline([3.0, 3.0]) == "▁▁"    # flat series doesn't divide 0
+
+
+def test_format_table_reports_delta(tmp_path):
+    _snap(tmp_path, "BENCH_001.json", [_rec("a", 10.0)])
+    _snap(tmp_path, "BENCH_002.json", [_rec("a", 15.0)])
+    snaps = PH.collect(tmp_path)
+    out = PH.format_table(snaps, PH.series(snaps))
+    assert "a,xpencil,reference,10.0,15.0,+50.0%" in out
+
+
+def test_main_end_to_end(tmp_path, capsys):
+    _snap(tmp_path, "BENCH_001.json", [_rec("a", 10.0)])
+    _snap(tmp_path, "BENCH_002.json", [_rec("a", 12.0)])
+    out_json = tmp_path / "series.json"
+    rc = PH.main([str(tmp_path), "--json", str(out_json)])
+    assert rc == 0
+    assert "2 snapshots" in capsys.readouterr().out
+    payload = json.loads(out_json.read_text())
+    assert payload["snapshots"] == ["BENCH_001.json", "BENCH_002.json"]
+    assert payload["series"][0]["us_per_call"] == [10.0, 12.0]
+
+
+def test_main_empty_dir_fails_cleanly(tmp_path, capsys):
+    assert PH.main([str(tmp_path)]) == 1
+    assert "no BENCH_*.json" in capsys.readouterr().err
+
+
+def test_fastest_duplicate_wins_within_snapshot(tmp_path):
+    _snap(tmp_path, "BENCH_001.json", [_rec("a", 30.0), _rec("a", 12.0)])
+    snaps = PH.collect(tmp_path)
+    assert PH.series(snaps)[("a", "xpencil", "reference")] == [12.0]

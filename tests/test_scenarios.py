@@ -1,0 +1,63 @@
+"""Scenario registry (``repro.core.scenarios``): lookup errors,
+determinism under a fixed seed, and domain-box containment."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Domain, scenarios
+
+DOM = Domain.cubic(12, cutoff=1.0)
+NAMES = sorted(scenarios.SCENARIOS)
+
+
+def test_registry_lists_expected_family():
+    assert {"uniform", "gaussian_blob", "two_phase",
+            "power_law_cluster"} <= set(NAMES)
+
+
+def test_unknown_name_raises_with_inventory():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        scenarios.sample("no_such_scene", DOM, jax.random.PRNGKey(0), 10)
+    with pytest.raises(ValueError, match="gaussian_blob"):
+        # the error names the available scenarios
+        scenarios.sample("no_such_scene", DOM, jax.random.PRNGKey(0), 10)
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_samplers_deterministic_under_fixed_seed(name):
+    a = scenarios.sample(name, DOM, jax.random.PRNGKey(7), 300)
+    b = scenarios.sample(name, DOM, jax.random.PRNGKey(7), 300)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = scenarios.sample(name, DOM, jax.random.PRNGKey(8), 300)
+    assert not np.array_equal(np.asarray(a), np.asarray(c)), \
+        "different seeds must produce different scenes"
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_samples_respect_domain_box(name):
+    pos = np.asarray(scenarios.sample(name, DOM, jax.random.PRNGKey(3),
+                                      1000))
+    assert pos.shape == (1000, 3)
+    box = np.asarray(DOM.box)
+    assert (pos > 0.0).all() and (pos < box).all(), \
+        f"{name} produced positions outside the open box"
+    assert np.isfinite(pos).all()
+
+
+def test_samplers_respect_anisotropic_box():
+    dom = Domain(box=(4.0, 8.0, 16.0), ncells=(4, 8, 16), cutoff=1.0)
+    for name in NAMES:
+        pos = np.asarray(scenarios.sample(name, dom,
+                                          jax.random.PRNGKey(1), 400))
+        assert (pos > 0.0).all()
+        assert (pos < np.asarray(dom.box)).all(), name
+
+
+def test_sampler_knobs_change_the_scene():
+    tight = scenarios.sample("gaussian_blob", DOM, jax.random.PRNGKey(0),
+                             500, sigma_frac=0.03)
+    wide = scenarios.sample("gaussian_blob", DOM, jax.random.PRNGKey(0),
+                            500, sigma_frac=0.2)
+    assert float(np.std(np.asarray(tight))) < float(
+        np.std(np.asarray(wide)))
