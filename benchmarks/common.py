@@ -25,12 +25,18 @@ from repro.core.timing import time_fn  # noqa: F401
 
 
 def bench_record(case: str, strategy: str, backend: str, seconds: float,
-                 reps: int) -> dict:
+                 reps: int, layout: str | None = None) -> dict:
     """One BENCH_*.json perf record — the schema the perf trajectory
-    accumulates across PRs (CI uploads these files as artifacts)."""
-    return {"case": case, "strategy": strategy, "backend": backend,
-            "us_per_call": seconds * 1e6, "reps": reps,
-            "platform": jax.default_backend()}
+    accumulates across PRs (CI uploads these files as artifacts).
+    ``layout`` tags the execution layout (dense / compact / packed) so
+    ``perf_history`` can render it; older records without the key are
+    inferred from the strategy suffix."""
+    rec = {"case": case, "strategy": strategy, "backend": backend,
+           "us_per_call": seconds * 1e6, "reps": reps,
+           "platform": jax.default_backend()}
+    if layout is not None:
+        rec["layout"] = layout
+    return rec
 
 
 def write_bench_json(path: str | pathlib.Path, records: List[dict]) -> None:

@@ -1,0 +1,129 @@
+"""Packed figure: packed-row (CSR) layout speedup vs particles per cell.
+
+The occupancy-compacted path (``fig_sparse``) removes empty *pencils*; the
+packed-row layout (``plan(..., layout="packed")``) removes the slot padding
+*inside* active cells — the paper's "few particles per cell" tail, where
+every active cell still pays for all ``m_c`` sublane-aligned slots. This
+benchmark sweeps ppc ∈ {1, 2, 4, 8} on the gaussian-blob scenario and
+reports
+
+    speedup = t(compacted xpencil, dense layout) / t(compacted xpencil,
+                                                     packed layout)
+
+per case, with the measured ``m_c``/``row_cap`` alongside (their ratio —
+times nx — is the padding the packed layout refuses to touch). Expectation:
+the win grows as the slot-padding waste ``nx * m_c / row_cap`` grows, i.e.
+toward *low* global ppc on clustered scenes.
+
+Both plans are executed once on the same positions and checked bit-for-bit
+against the plain dense schedule before anything is timed — a benchmark
+that silently drifted from the oracle would be worse than no benchmark.
+
+``--json PATH`` writes the timings as BENCH_*.json perf records (with a
+``layout`` tag and ppc/m_c/row_cap/speedup extras); the committed
+``benchmarks/BENCH_packed.json`` is this module's output on the reference
+container and is diffed (report-only) by the CI docs job.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core import (Domain, ParticleState, make_lennard_jones, plan,
+                        scenarios, suggest_m_c)
+
+from .common import bench_record, time_fn, write_bench_json
+
+DEFAULT_PPCS = (1, 2, 4, 8)
+
+
+def run(csv: bool = True, json_path: Optional[str] = None,
+        record_sink: Optional[List[dict]] = None, division: int = 12,
+        ppcs: Sequence[int] = DEFAULT_PPCS, sigma_frac: float = 0.18,
+        seed: int = 0, budget_s: float = 1.0) -> List[dict]:
+    dom = Domain.cubic(division, cutoff=1.0)
+    kern = make_lennard_jones()
+    rows: List[dict] = []
+    records: List[dict] = []
+    if csv:
+        print("name,us_per_call,derived")
+    for ppc in ppcs:
+        case = f"packed/blob_ppc{ppc}"
+        n = ppc * dom.n_cells
+        pos = scenarios.sample_gaussian_blob(
+            dom, jax.random.PRNGKey(seed), n, sigma_frac=sigma_frac)
+        m_c = suggest_m_c(dom, pos)
+        state = ParticleState(pos)
+        p_dense = plan(dom, kern, m_c=m_c, strategy="xpencil",
+                       backend="reference")
+        p_comp = plan(dom, kern, m_c=m_c, strategy="xpencil",
+                      backend="reference", compact=True, positions=pos)
+        p_pack = plan(dom, kern, m_c=m_c, strategy="xpencil",
+                      backend="reference", compact=True, layout="packed",
+                      positions=pos)
+
+        # correctness gate: both timed paths must agree with the dense
+        # schedule bit-for-bit on the scene they are about to be timed on
+        f_d, q_d = p_dense.execute(state)
+        ok = True
+        for name, p in (("compact", p_comp), ("packed", p_pack)):
+            f, q = p.execute(state)
+            if not (np.array_equal(np.asarray(f_d), np.asarray(f))
+                    and np.array_equal(np.asarray(q_d), np.asarray(q))):
+                print(f"fig_packed: {case}: {name} result DIVERGED from "
+                      "dense — not timing a wrong answer", file=sys.stderr)
+                ok = False
+        if not ok:
+            continue
+
+        t_c, r_c = time_fn(p_comp.execute, state, budget_s=budget_s)
+        t_p, r_p = time_fn(p_pack.execute, state, budget_s=budget_s)
+        speedup = t_c / t_p
+        row = {"case": case, "ppc": ppc, "m_c": m_c,
+               "row_cap": p_pack.row_cap, "max_active": p_comp.max_active,
+               "compact_s": t_c, "packed_s": t_p, "speedup": speedup}
+        rows.append(row)
+        records.append(dict(bench_record(case, "xpencil_compact",
+                                         "reference", t_c, r_c,
+                                         layout="dense"),
+                            ppc=ppc, m_c=m_c))
+        records.append(dict(bench_record(case, "xpencil_packed",
+                                         "reference", t_p, r_p,
+                                         layout="packed"),
+                            ppc=ppc, m_c=m_c, row_cap=p_pack.row_cap,
+                            speedup_vs_compact=speedup))
+        if csv:
+            print(f"{case}/xpencil_compact,{t_c * 1e6:.1f},m_c={m_c}")
+            print(f"{case}/xpencil_packed,{t_p * 1e6:.1f},"
+                  f"row_cap={p_pack.row_cap};speedup={speedup:.2f}")
+    if json_path:
+        write_bench_json(json_path, records)
+    if record_sink is not None:
+        record_sink.extend(records)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--division", type=int, default=12,
+                    help="cells per axis")
+    ap.add_argument("--ppc", type=int, nargs="+", default=list(DEFAULT_PPCS),
+                    help="global particles-per-cell sweep")
+    ap.add_argument("--sigma", type=float, default=0.18,
+                    help="gaussian blob sigma as a fraction of the box")
+    ap.add_argument("--budget", type=float, default=1.0,
+                    help="stopwatch budget per case (seconds)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write BENCH_*.json perf records to PATH")
+    args = ap.parse_args()
+    run(division=args.division, ppcs=tuple(args.ppc),
+        sigma_frac=args.sigma, budget_s=args.budget, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

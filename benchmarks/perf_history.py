@@ -11,8 +11,10 @@ trajectory::
 Snapshots are ordered by filename by default (name your artifacts
 ``BENCH_0017_<sha>.json`` and lexicographic order is commit order) or by
 mtime with ``--order mtime``. Output is one row per (case, strategy,
-backend) series: first/last us_per_call, total delta, and a unicode
-sparkline of the whole trajectory — the visible per-commit perf record the
+backend) series: first/last us_per_call, total delta, a unicode sparkline
+of the whole trajectory, and the execution-layout tag (dense / compact /
+packed — from the record's ``layout`` field, inferred from the strategy
+suffix for older records) — the visible per-commit perf record the
 ROADMAP asks for. ``--json`` additionally dumps the raw series for
 downstream plotting.
 
@@ -69,6 +71,31 @@ def series(snapshots: List[Tuple[str, Dict[Key, dict]]],
             for k in sorted(keys)}
 
 
+def layout_of(snapshots: List[Tuple[str, Dict[Key, dict]]],
+              key: Key) -> str:
+    """Execution-layout tag of a series: the latest record's ``layout``
+    field, else inferred from the strategy suffix (records predating the
+    tag), so the trajectory distinguishes dense / compact / packed rows."""
+    for _, recs in reversed(snapshots):
+        rec = recs.get(key)
+        if rec is not None and "layout" in rec:
+            tag = rec["layout"]
+            # a dense-layout record of a *_compact strategy is the
+            # compacted execution path: render the finer tag
+            if tag == "dense" and key[1].endswith("_compact"):
+                return "compact"
+            return tag
+    return _infer_layout(key[1])
+
+
+def _infer_layout(strategy: str) -> str:
+    if strategy.endswith("_packed"):
+        return "packed"
+    if strategy.endswith("_compact"):
+        return "compact"
+    return "dense"
+
+
 def sparkline(values: List[Optional[float]]) -> str:
     """Unicode trajectory; gaps (absent snapshots) render as ``·``."""
     present = [v for v in values if v is not None]
@@ -89,7 +116,8 @@ def format_table(snapshots: List[Tuple[str, Dict[Key, dict]]],
                  ss: Dict[Key, List[Optional[float]]]) -> str:
     lines = [f"# {len(snapshots)} snapshots: "
              + " -> ".join(label for label, _ in snapshots),
-             "case,strategy,backend,first_us,last_us,delta_pct,trajectory"]
+             "case,strategy,backend,first_us,last_us,delta_pct,trajectory,"
+             "layout"]
     for key, vals in ss.items():
         present = [(i, v) for i, v in enumerate(vals) if v is not None]
         if not present:
@@ -97,7 +125,8 @@ def format_table(snapshots: List[Tuple[str, Dict[Key, dict]]],
         first, last = present[0][1], present[-1][1]
         delta = (last / first - 1.0) * 100.0 if first > 0 else float("inf")
         lines.append(f"{key[0]},{key[1]},{key[2]},{first:.1f},{last:.1f},"
-                     f"{delta:+.1f}%,{sparkline(vals)}")
+                     f"{delta:+.1f}%,{sparkline(vals)},"
+                     f"{layout_of(snapshots, key)}")
     return "\n".join(lines)
 
 
@@ -125,6 +154,7 @@ def main(argv=None) -> int:
         payload = {
             "snapshots": [label for label, _ in snapshots],
             "series": [{"case": k[0], "strategy": k[1], "backend": k[2],
+                        "layout": layout_of(snapshots, k),
                         "us_per_call": v} for k, v in ss.items()],
         }
         with open(args.json, "w") as f:

@@ -7,6 +7,7 @@
   table1/*    PPNL vs X-pencil seconds (paper Table 1)
   fig8/*      arithmetic-intensity sweep (paper Fig. 8)
   sparse/*    compacted-schedule speedup vs fill fraction (clustered scenes)
+  packed/*    packed-row (CSR) layout speedup vs particles per cell
   halo/*      distributed-backend weak scaling (smoke: whatever devices
               this process sees; full sweeps via ``benchmarks.fig_halo``)
   prefix/*    §6 prefix-sum op/barrier counts + timing
@@ -36,8 +37,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (autotune_bench, fig6_speedup, fig8_flop_sweep,
-                   fig_halo, fig_sparse, lm_roofline, prefix_bench,
-                   table1_timing, traffic_model)
+                   fig_halo, fig_packed, fig_sparse, lm_roofline,
+                   prefix_bench, table1_timing, traffic_model)
 
     print("# traffic model (paper Fig. 7 analogue)", flush=True)
     traffic_model.run()
@@ -63,6 +64,9 @@ def main() -> None:
     fig8_flop_sweep.run()
     print("# sparse: compacted speedup vs fill fraction", flush=True)
     fig_sparse.run(record_sink=records, division=8, n=300)
+    print("# packed: CSR-row layout speedup vs ppc", flush=True)
+    fig_packed.run(record_sink=records, division=8, ppcs=(1, 2),
+                   budget_s=0.3)
     print("# halo: distributed-backend smoke (local device set)",
           flush=True)
     fig_halo.run(record_sink=records, division=4, ppc=3)

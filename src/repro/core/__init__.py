@@ -11,10 +11,13 @@ from .domain import Domain
 from .api import (InteractionPlan, ParticleState, active_unit_count,
                   backend_matrix, choose_strategy, clear_executor_cache,
                   dispatch_count, plan, register_backend, suggest_max_active,
-                  supports_compact)
-from .binning import (CellBins, Occupancy, bin_particles, dense_to_particles,
+                  suggest_row_cap, supports_compact, supports_layout)
+from .binning import (CellBins, Occupancy, PackedRows, bin_particles,
+                      dense_to_particles, full_pencil_occupancy,
                       gather_pencil_rows, gather_to_particles,
-                      interior_to_padded, pencil_occupancy, subbox_occupancy)
+                      interior_to_padded, pack_rows, packed_to_particles,
+                      padded_row_counts, pencil_occupancy, subbox_occupancy,
+                      unpack_scatter)
 from .engine import CellListEngine, compute_interactions, suggest_m_c
 from .interactions import (
     PairKernel,
@@ -36,13 +39,16 @@ from . import autotune, scenarios, strategies, traffic
 from .autotune import TuneResult, tune
 
 __all__ = [
-    "Domain", "CellBins", "Occupancy", "bin_particles",
+    "Domain", "CellBins", "Occupancy", "PackedRows", "bin_particles",
     "gather_to_particles", "gather_pencil_rows", "dense_to_particles",
-    "interior_to_padded", "pencil_occupancy", "subbox_occupancy",
+    "interior_to_padded", "pack_rows", "packed_to_particles",
+    "padded_row_counts", "unpack_scatter", "full_pencil_occupancy",
+    "pencil_occupancy", "subbox_occupancy",
     "InteractionPlan", "ParticleState", "plan", "register_backend",
     "backend_matrix", "choose_strategy", "clear_executor_cache",
     "dispatch_count", "active_unit_count", "suggest_max_active",
-    "supports_compact", "tune", "TuneResult", "time_fn", "autotune",
+    "suggest_row_cap", "supports_compact", "supports_layout",
+    "tune", "TuneResult", "time_fn", "autotune",
     "CellListEngine", "compute_interactions", "suggest_m_c",
     "PairKernel", "make_gravity", "make_high_flop", "make_lennard_jones",
     "make_low_flop", "make_sph_density", "pair_contribution",

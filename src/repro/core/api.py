@@ -42,9 +42,11 @@ import jax.numpy as jnp
 
 from . import strategies as S
 from . import traffic
-from .binning import (CellBins, bin_particles, cell_counts,
-                      dense_to_particles, pencil_counts, pencil_occupancy,
-                      subbox_counts, subbox_occupancy)
+from .binning import (CellBins, PackedRows, bin_particles, cell_counts,
+                      dense_to_particles, full_pencil_occupancy,
+                      pack_rows, packed_to_particles, padded_row_counts,
+                      pencil_counts, pencil_occupancy, subbox_counts,
+                      subbox_occupancy)
 from .domain import Domain, slab_domain
 from .interactions import PairKernel, make_lennard_jones
 
@@ -79,52 +81,74 @@ class ParticleState:
 # backend registry
 # --------------------------------------------------------------------------
 
-# (backend, strategy) -> fn(plan, bins, state) -> (forces (N, 3), pot (N,))
-_BACKENDS: Dict[Tuple[str, str], Callable] = {}
+# (backend, strategy, layout) -> fn(plan, bins, state) -> (forces, pot).
+# ``layout`` is the execution layout the implementation reads: "dense"
+# implementations receive a CellBins, "packed" ones a binning.PackedRows.
+_BACKENDS: Dict[Tuple[str, str, str], Callable] = {}
 
-# (backend, strategy) pairs whose implementation honours ``plan.compact``
-# (the occupancy-compacted execution path). Populated by register_backend.
+LAYOUT_NAMES = ("dense", "packed")
+
+# (backend, strategy, layout) triples whose implementation honours
+# ``plan.compact`` (occupancy-compacted iteration). By register_backend.
 _COMPACT_OK: set = set()
 
 
-def register_backend(backend: str, strategy: str, compact: bool = False):
-    """Register an implementation under ``(backend, strategy)``.
+def register_backend(backend: str, strategy: str, compact: bool = False,
+                     layout: str = "dense"):
+    """Register an implementation under ``(backend, strategy, layout)``.
 
-    The implementation receives the (static) plan, the binned slot layout,
-    and the traced state, and must return per-particle ``(forces, pot)`` —
-    the one normalized signature both the reference schedules and the Pallas
+    The implementation receives the (static) plan, the binned layout
+    (:class:`~repro.core.binning.CellBins` for ``layout="dense"``,
+    :class:`~repro.core.binning.PackedRows` for ``layout="packed"``), and
+    the traced state, and must return per-particle ``(forces, pot)`` — the
+    one normalized signature both the reference schedules and the Pallas
     kernels conform to. ``compact=True`` declares that the implementation
     also honours ``plan.compact`` (occupancy-compacted iteration).
     """
+    if layout not in LAYOUT_NAMES:
+        raise ValueError(f"unknown layout {layout!r}; have {LAYOUT_NAMES}")
+
     def deco(fn: Callable) -> Callable:
-        _BACKENDS[(backend, strategy)] = fn
+        _BACKENDS[(backend, strategy, layout)] = fn
         if compact:
-            _COMPACT_OK.add((backend, strategy))
+            _COMPACT_OK.add((backend, strategy, layout))
         return fn
     return deco
 
 
-def supports_compact(backend: str, strategy: str) -> bool:
-    """True if ``(backend, strategy)`` implements the compacted path."""
+def supports_compact(backend: str, strategy: str,
+                     layout: str = "dense") -> bool:
+    """True if ``(backend, strategy, layout)`` implements the compacted
+    path."""
     if backend == "pallas":
         import repro.kernels  # noqa: F401  (trigger registration)
-    return (backend, strategy) in _COMPACT_OK
+    return (backend, strategy, layout) in _COMPACT_OK
 
 
-def get_backend(backend: str, strategy: str) -> Callable:
+def supports_layout(backend: str, strategy: str, layout: str) -> bool:
+    """True if ``(backend, strategy)`` implements the given execution
+    layout (``"dense"`` / ``"packed"``)."""
+    if backend == "pallas":
+        import repro.kernels  # noqa: F401  (trigger registration)
+    return (backend, strategy, layout) in _BACKENDS
+
+
+def get_backend(backend: str, strategy: str,
+                layout: str = "dense") -> Callable:
     if backend == "pallas":
         # Pallas implementations self-register on import; make sure the
         # module ran before declaring the combination missing.
         import repro.kernels  # noqa: F401
-    fn = _BACKENDS.get((backend, strategy))
+    fn = _BACKENDS.get((backend, strategy, layout))
     if fn is None:
         import repro.kernels  # noqa: F401  (list *all* backends in the error)
-        fn = _BACKENDS.get((backend, strategy))
+        fn = _BACKENDS.get((backend, strategy, layout))
     if fn is None:
-        have = sorted(set(b for b, _ in _BACKENDS))
+        have = sorted(set(b for b, _, _ in _BACKENDS))
         raise ValueError(
-            f"no backend {backend!r} for strategy {strategy!r}; registered "
-            f"backends: {have}, pairs: {sorted(_BACKENDS)}")
+            f"no backend {backend!r} for strategy {strategy!r} with layout "
+            f"{layout!r}; registered backends: {have}, triples: "
+            f"{sorted(_BACKENDS)}")
     return fn
 
 
@@ -132,8 +156,9 @@ def backend_matrix() -> Dict[str, Tuple[str, ...]]:
     """backend name -> strategies it implements (docs / README helper)."""
     import repro.kernels  # noqa: F401  (trigger pallas registration)
     out: Dict[str, list] = {}
-    for b, s in sorted(_BACKENDS):
-        out.setdefault(b, []).append(s)
+    for b, s, layout in sorted(_BACKENDS):
+        if s not in out.setdefault(b, []):
+            out[b].append(s)
     return {b: tuple(s) for b, s in out.items()}
 
 
@@ -159,6 +184,8 @@ class InteractionPlan:
     interpret: Optional[bool] = None             # pallas: None = auto
     compact: bool = False                        # occupancy-compacted path
     max_active: Optional[int] = None             # static active-unit bound
+    layout: str = "dense"                        # slot layout: dense | packed
+    row_cap: Optional[int] = None                # static packed-row bound
     # -- distributed halo execution (backend="halo"; repro.dist.engine) ----
     halo_inner: str = "reference"                # per-shard backend
     n_shards: Optional[int] = None               # Z-slabs on the mesh axis
@@ -217,6 +244,19 @@ class InteractionPlan:
                 raise ValueError(
                     "compact=True needs a positive static max_active bound "
                     "(plan(..., positions=...) measures one)")
+        if self.layout not in LAYOUT_NAMES:
+            raise ValueError(
+                f"unknown layout {self.layout!r}; have {LAYOUT_NAMES}")
+        if self.layout == "packed":
+            if self.strategy not in S.PACKED_STRATEGIES:
+                raise ValueError(
+                    f'layout="packed" is not defined for '
+                    f"{self.strategy!r}; packed strategies: "
+                    f"{sorted(S.PACKED_STRATEGIES)}")
+            if not self.row_cap or self.row_cap < 1:
+                raise ValueError(
+                    'layout="packed" needs a positive static row_cap bound '
+                    "(plan(..., positions=...) measures one)")
 
     # -- hot path ----------------------------------------------------------
 
@@ -247,16 +287,21 @@ class InteractionPlan:
     # -- M_C safety net ----------------------------------------------------
 
     def check_overflow(self, state: ParticleState) -> bool:
-        """True if a static bound no longer covers these positions: some
-        cell holds more than ``m_c`` particles, (compacted plans) more
-        work units are active than ``max_active``, or (multi-shard halo
-        plans) some shard's load or active-pencil count exceeds its bound
-        — either way results would silently drop interactions, so the
-        caller must replan. For halo plans the per-shard flags are reduced
-        (max) across shards, keeping the safety contract global."""
+        """True if some static bound of this plan no longer covers these
+        positions — results computed anyway would silently drop
+        interactions. Which bounds exist, what each one covers and how an
+        overflowed one grows is the replan contract: see :meth:`replan`
+        (the canonical statement) and ARCHITECTURE.md. For halo plans the
+        per-shard flags are reduced (max) across shards, keeping the
+        safety contract global; everything derives from one binning
+        pass."""
         counts = _cell_counts(self.domain, state.positions)
         if int(jnp.max(counts)) > self.m_c:
             return True
+        if self.layout == "packed":
+            if int(jnp.max(padded_row_counts(self.domain, counts))
+                   ) > self.row_cap:
+                return True
         if self._multi_shard:
             from ..dist.engine import halo_overflow
             return halo_overflow(self, counts)
@@ -276,15 +321,34 @@ class InteractionPlan:
                align: int = 8) -> "InteractionPlan":
         """A new plan whose static bounds cover ``state``.
 
-        Only the bound that actually overflowed grows (so a pencil-count
-        overflow does not churn ``m_c`` — and with it the whole slot
-        layout — for nothing): an overflowing ``m_c`` is re-measured with
-        slack (sublane aligned, via ``suggest_m_c``) and strictly exceeds
-        the current bound; a compacted plan whose active-unit count
-        outgrew ``max_active`` gets a re-measured bound the same way. The
-        allin sub-box is recomputed whenever ``m_c`` changes (its sizing
-        depends on it), and a compacted allin re-measures ``max_active``
-        against the new tiling."""
+        **The replan contract** (canonical statement — ``check_overflow``,
+        ``execute_or_replan``, the ``plan()`` bound arguments and the halo
+        engine all defer here; prose version in ARCHITECTURE.md):
+
+        Every static bound follows one pattern — *measure with slack,
+        round up to ``align``, detect overflow, grow only what
+        overflowed*. The bounds, each paired with its measuring probe:
+
+        * ``m_c`` — max particles per cell (``suggest_m_c``),
+        * ``max_active`` — active work units of a compacted plan
+          (``suggest_max_active``),
+        * ``row_cap`` — particles per packed pencil row of a
+          ``layout="packed"`` plan (``suggest_row_cap``),
+        * ``shard_cap`` — per-shard particle load of a multi-shard halo
+          plan (``dist.halo.suggest_shard_cap``; halo plans also apply
+          per-shard reductions to ``max_active``).
+
+        Exceeding a bound makes results *silently drop* interactions, so
+        bounds are never trusted blindly: ``check_overflow`` detects an
+        exceeded bound from one binning pass, and this method grows
+        **only the bound that actually overflowed** — re-measured with
+        slack and forced strictly past the old value — so e.g. a pencil
+        count outgrowing ``max_active`` does not churn ``m_c`` (and with
+        it the whole slot layout) for nothing. Derived statics follow
+        their inputs: the allin sub-box is recomputed whenever ``m_c``
+        changes, and a compacted allin re-measures ``max_active`` against
+        the new tiling. ``row_cap`` depends only on the positions, so it
+        never moves when ``m_c`` does."""
         from .engine import suggest_m_c
         m_c = self.m_c
         if int(_max_cell_count(self.domain, state.positions)) > self.m_c:
@@ -293,6 +357,15 @@ class InteractionPlan:
             grow = -(-(self.m_c + 1) // align) * align  # aligned, > m_c
             m_c = max(measured, grow)
         box = self.box if m_c == self.m_c else None
+        row_cap = self.row_cap
+        if self.layout == "packed":
+            counts = _cell_counts(self.domain, state.positions)
+            mx_row = int(jnp.max(padded_row_counts(self.domain, counts)))
+            if mx_row > row_cap:
+                grow = -(-(row_cap + 1) // align) * align
+                row_cap = max(suggest_row_cap(self.domain, state.positions,
+                                              align=align, counts=counts),
+                              grow)
         max_active = self.max_active
         shard_cap = self.shard_cap
         if self._multi_shard:
@@ -315,14 +388,15 @@ class InteractionPlan:
                 max_active = max(suggested, n_act)
         return dataclasses.replace(self, m_c=m_c, box=box,
                                    max_active=max_active,
-                                   shard_cap=shard_cap)
+                                   shard_cap=shard_cap, row_cap=row_cap)
 
     def execute_or_replan(self, state: ParticleState
                           ) -> Tuple[Tuple[Array, Array], "InteractionPlan"]:
-        """Overflow-safe execute: detects an exceeded ``m_c`` bound (outside
-        jit — replanning changes statics) and re-executes under a replanned
-        bound. Returns ``((forces, potential), plan)`` where ``plan`` is
-        ``self`` when the bound held."""
+        """Overflow-safe execute: detects an exceeded static bound (outside
+        jit — replanning changes statics) and re-executes under replanned
+        bounds (see :meth:`replan` for the contract). Returns
+        ``((forces, potential), plan)`` where ``plan`` is ``self`` when
+        every bound held."""
         p: InteractionPlan = self
         while p.check_overflow(state):
             p = p.replan(state)
@@ -401,11 +475,17 @@ def plan(domain: Domain, kernel: Optional[PairKernel] = None, *,
          batch_size: int = 64, box: Optional[Tuple[int, int, int]] = None,
          interpret: Optional[bool] = None,
          compact: bool = False, max_active: Optional[int] = None,
+         layout: str = "dense", row_cap: Optional[int] = None,
          m_c_slack: float = 1.5,
          halo_inner: str = "reference", n_shards: Optional[int] = None,
          shard_axis: str = "halo", shard_cap: Optional[int] = None,
          mesh=None) -> InteractionPlan:
     """Build an :class:`InteractionPlan` (static planning, done once).
+
+    Every static bound taken or measured here (``m_c``, ``max_active``,
+    ``row_cap``, ``shard_cap``) obeys one safety contract — measured with
+    slack, overflow detectable, grown individually by
+    ``execute_or_replan`` — stated once on :meth:`InteractionPlan.replan`.
 
     Args:
       domain: the cell grid.
@@ -432,11 +512,21 @@ def plan(domain: Domain, kernel: Optional[PairKernel] = None, *,
         (pencils / sub-boxes) that actually hold particles. Big win on
         clustered or inhomogeneous distributions; a no-op-sized overhead on
         uniform ones. ``strategy="autotune"`` explores compact candidates
-        on its own and ignores this flag.
+        on its own and ignores this flag (and ``max_active``).
       max_active: static bound on active work units for ``compact=True``;
-        measured from ``positions`` (with slack) when omitted. Like
-        ``m_c``, an exceeded bound is caught by ``check_overflow`` /
-        ``execute_or_replan``, never silently wrong.
+        measured from ``positions`` (with slack) when omitted.
+      layout: slot layout the schedule reads — ``"dense"`` (every cell
+        owns ``m_c`` slots) or ``"packed"`` (CSR pencil rows: particles
+        stored contiguously per row under ``row_cap``, bytes proportional
+        to the particles instead of the padding — the few-particles-per-
+        cell fix; ``xpencil`` only). Composes with ``compact`` (packed
+        rows *and* only active rows) and with ``backend="halo"`` (ghost
+        planes exchanged packed). Bit-identical to dense.
+        ``strategy="autotune"`` explores packed candidates on its own and
+        ignores this flag (and ``row_cap``), exactly like ``compact``.
+      row_cap: static particles-per-packed-row bound for
+        ``layout="packed"``; measured from ``positions`` (with slack)
+        when omitted.
       halo_inner: per-shard backend for ``backend="halo"``
         (``"reference"``/``"pallas"``).
       n_shards: Z-slab count for ``backend="halo"`` (must divide ``nz``);
@@ -446,8 +536,7 @@ def plan(domain: Domain, kernel: Optional[PairKernel] = None, *,
         ``jax.sharding.Mesh``; by default the engine builds a 1-D mesh
         over the local devices.
       shard_cap: static per-shard particle capacity for ``backend="halo"``;
-        measured from ``positions`` (with slack) when omitted. Same
-        overflow contract as ``m_c``.
+        measured from ``positions`` (with slack) when omitted.
     """
     kernel = kernel or make_lennard_jones()
     if strategy == "autotune":
@@ -482,11 +571,14 @@ def plan(domain: Domain, kernel: Optional[PairKernel] = None, *,
         # compacted path — otherwise whether auto+compact works would
         # depend on which strategy the cost model happens to pick. The halo
         # decomposition only exists for cell schedules (compacted halo:
-        # pencil schedules only).
+        # pencil schedules only). layout="packed" narrows further to the
+        # packed-capable schedules.
         among = (("cell_dense", "xpencil", "allin") if compact else None)
         if backend == "halo":
             among = (("cell_dense", "xpencil") if compact
                      else ("cell_dense", "xpencil", "allin"))
+        if layout == "packed":
+            among = tuple(S.PACKED_STRATEGIES)
         strategy = choose_strategy(domain, m_c,
                                    positions.shape[0] / domain.n_cells,
                                    among=among)
@@ -511,12 +603,24 @@ def plan(domain: Domain, kernel: Optional[PairKernel] = None, *,
                                  "positions (to measure the per-shard "
                                  "capacity)")
             shard_cap = suggest_shard_cap(domain, positions, n_shards)
+    if layout == "packed":
+        if not supports_layout(inner_backend, strategy, "packed"):
+            raise ValueError(
+                f"backend {inner_backend!r} has no packed path for "
+                f"strategy {strategy!r}; packed-capable pairs: "
+                f"{sorted(k[:2] for k in _BACKENDS if k[2] == 'packed')}")
+        if row_cap is None:
+            if positions is None:
+                raise ValueError('layout="packed" needs either row_cap or '
+                                 "positions (to measure the packed-row "
+                                 "bound)")
+            row_cap = suggest_row_cap(domain, positions)
     if compact:
-        if not supports_compact(inner_backend, strategy):
+        if not supports_compact(inner_backend, strategy, layout):
             raise ValueError(
                 f"backend {inner_backend!r} has no compacted path for "
-                f"strategy {strategy!r}; compact-capable pairs: "
-                f"{sorted(_COMPACT_OK)}")
+                f"strategy {strategy!r} (layout {layout!r}); "
+                f"compact-capable triples: {sorted(_COMPACT_OK)}")
         if max_active is None:
             if positions is None:
                 raise ValueError("compact=True needs either max_active or "
@@ -538,13 +642,14 @@ def plan(domain: Domain, kernel: Optional[PairKernel] = None, *,
                         strategy=strategy, backend=backend,
                         batch_size=batch_size, box=box, interpret=interpret,
                         compact=compact, max_active=max_active,
+                        layout=layout, row_cap=row_cap,
                         halo_inner=halo_inner, n_shards=n_shards,
                         shard_axis=shard_axis, shard_cap=shard_cap,
                         mesh=mesh)
     if strategy != "naive_n2":
         # fail at plan time, not execute time (halo validates the
         # per-shard backend the slab schedule will actually dispatch to)
-        get_backend(inner_backend, strategy)
+        get_backend(inner_backend, strategy, layout)
     return p
 
 
@@ -623,6 +728,22 @@ def suggest_max_active(domain: Domain, positions: Array,
     return min(bound, total)
 
 
+def suggest_row_cap(domain: Domain, positions: Array, slack: float = 1.25,
+                    align: int = 8, counts: Optional[Array] = None) -> int:
+    """One-off static ``row_cap`` bound for ``layout="packed"``: the
+    fullest *padded* pencil row (interior particles plus periodic X-ghost
+    copies — ``binning.padded_row_counts``) with slack, rounded up to
+    ``align`` (sublane contract). The packed-layout counterpart of
+    ``suggest_m_c``; obeys the replan contract
+    (:meth:`InteractionPlan.replan`). Pass precomputed per-cell ``counts``
+    to skip the binning pass."""
+    if counts is None:
+        counts = _cell_counts(domain, positions)
+    mx = int(jnp.max(padded_row_counts(domain, counts)))
+    cap = max(1, int(mx * slack + 0.999))
+    return -(-cap // align) * align
+
+
 # --------------------------------------------------------------------------
 # execution (jitted per plan)
 # --------------------------------------------------------------------------
@@ -662,6 +783,10 @@ def _impl(p: InteractionPlan) -> Callable:
             return jnp.stack([fx, fy, fz], axis=-1), pot
         bins = bin_particles(p.domain, state.positions, state.fields,
                              m_c=p.m_c)
+        if p.layout == "packed":
+            packed = pack_rows(p.domain, bins, row_cap=p.row_cap)
+            return get_backend(backend, p.strategy, "packed")(p, packed,
+                                                              state)
         return get_backend(backend, p.strategy)(p, bins, state)
 
     return impl
@@ -737,3 +862,15 @@ register_backend("reference", "cell_dense", compact=True)(
     _ref_dense("cell_dense"))
 register_backend("reference", "xpencil", compact=True)(_ref_dense("xpencil"))
 register_backend("reference", "allin", compact=True)(_ref_dense("allin"))
+
+
+@register_backend("reference", "xpencil", compact=True, layout="packed")
+def _ref_xpencil_packed(p: InteractionPlan, packed: PackedRows,
+                        state: ParticleState):
+    """Packed-row reference backend: CSR rows, active-list iteration when
+    the plan is compacted, identity active list otherwise."""
+    occ = (pencil_occupancy(p.domain, packed.counts, p.max_active)
+           if p.compact else full_pencil_occupancy(p.domain))
+    out = S.xpencil_packed(p.domain, packed, p.kernel, occ,
+                           batch_size=p.batch_size)
+    return packed_to_particles(p.domain, packed, *out)

@@ -52,7 +52,11 @@ Array = jax.Array
 # v2: dense-vs-compact candidate axis + occupancy bucket in the cache key.
 # v3: halo shard-count candidate axis + device count in the cache key (a
 #     winner tuned on an 8-device mesh must not answer a 1-device query).
-CACHE_VERSION = 3
+# v4: dense-vs-packed layout axis (Candidate.layout/row_cap). The key's
+#     ppc and occupancy buckets already separate the regimes the layout
+#     decision depends on; the version bump retires v3 entries whose
+#     candidate space lacked packed twins.
+CACHE_VERSION = 4
 
 _CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 _CACHE_FILE = "autotune_cache.json"
@@ -78,6 +82,8 @@ class Candidate:
     max_active: Optional[int] = None             # static active-unit bound
     n_shards: Optional[int] = None               # halo Z-slabs (None = 1)
     shard_cap: Optional[int] = None              # halo per-shard capacity
+    layout: str = "dense"                        # slot layout: dense|packed
+    row_cap: Optional[int] = None                # static packed-row bound
 
     @property
     def distributed(self) -> bool:
@@ -94,20 +100,23 @@ class Candidate:
                 strategy=self.strategy, backend="halo",
                 halo_inner=self.backend, batch_size=self.batch_size,
                 box=None, interpret=interpret, compact=self.compact,
-                max_active=self.max_active, n_shards=self.n_shards,
+                max_active=self.max_active, layout=self.layout,
+                row_cap=self.row_cap, n_shards=self.n_shards,
                 shard_cap=self.shard_cap)
         return InteractionPlan(domain=domain, kernel=kernel, m_c=self.m_c,
                                strategy=self.strategy, backend=self.backend,
                                batch_size=self.batch_size, box=self.box,
                                interpret=interpret, compact=self.compact,
-                               max_active=self.max_active)
+                               max_active=self.max_active,
+                               layout=self.layout, row_cap=self.row_cap)
 
     def to_json(self) -> dict:
         return {"strategy": self.strategy, "backend": self.backend,
                 "batch_size": self.batch_size, "m_c": self.m_c,
                 "box": list(self.box) if self.box else None,
                 "compact": self.compact, "max_active": self.max_active,
-                "n_shards": self.n_shards, "shard_cap": self.shard_cap}
+                "n_shards": self.n_shards, "shard_cap": self.shard_cap,
+                "layout": self.layout, "row_cap": self.row_cap}
 
     @classmethod
     def from_json(cls, d: dict) -> "Candidate":
@@ -120,7 +129,10 @@ class Candidate:
                    n_shards=(int(d["n_shards"])
                              if d.get("n_shards") else None),
                    shard_cap=(int(d["shard_cap"])
-                              if d.get("shard_cap") else None))
+                              if d.get("shard_cap") else None),
+                   layout=d.get("layout", "dense"),
+                   row_cap=(int(d["row_cap"])
+                            if d.get("row_cap") else None))
 
 
 def enumerate_candidates(domain: Domain, m_c_choices: Sequence[int], *,
@@ -182,7 +194,7 @@ def _cost(domain: Domain, avg_ppc: float, c: Candidate,
     fill = fill_for(c) if (fill_for is not None and c.compact) else 1.0
     return traffic.candidate_cost(domain, c.m_c, avg_ppc, c.strategy,
                                   subbox=c.box, compact=c.compact,
-                                  fill=fill)
+                                  fill=fill, layout=c.layout)
 
 
 def compact_twins(domain: Domain, positions: Array,
@@ -206,6 +218,36 @@ def compact_twins(domain: Domain, positions: Array,
         twins.append(dataclasses.replace(c, compact=True,
                                          max_active=bounds[key]))
     return list(dict.fromkeys(twins))
+
+
+def packed_twins(domain: Domain, positions: Array,
+                 candidates: Sequence[Candidate], *, slack: float = 1.25,
+                 align: int = 8) -> List[Candidate]:
+    """The dense-vs-packed layout axis: for every candidate whose
+    (backend, strategy) implements the packed-row layout, a twin with
+    ``layout="packed"`` and a ``row_cap`` bound measured from
+    ``positions`` (the same slack-plus-alignment contract as ``m_c``).
+    Applied after :func:`compact_twins`, so compacted candidates get
+    packed twins too — the two axes compose."""
+    from .api import suggest_row_cap, supports_layout
+    twins: List[Candidate] = []
+    bound: Optional[int] = None
+    for c in candidates:
+        if (c.layout != "dense"
+                or not supports_layout(c.backend, c.strategy, "packed")):
+            continue
+        if c.compact and not _supports_packed_compact(c):
+            continue
+        if bound is None:
+            bound = suggest_row_cap(domain, positions, slack=slack,
+                                    align=align)
+        twins.append(dataclasses.replace(c, layout="packed", row_cap=bound))
+    return list(dict.fromkeys(twins))
+
+
+def _supports_packed_compact(c: Candidate) -> bool:
+    from .api import supports_compact
+    return supports_compact(c.backend, c.strategy, "packed")
 
 
 def halo_twins(domain: Domain, positions: Array,
@@ -266,8 +308,9 @@ def prune_candidates(domain: Domain, avg_ppc: float,
     Dense and compacted variants of a strategy form separate round-robin
     queues for the same reason: the fill-scaled model must not be able to
     crowd its dense twin (or vice versa) out of the timed field — and so
-    do distributed (halo) variants per shard count, whose ppermute cost
-    the model does not see at all.
+    do packed-layout variants (whose gather/expand overhead the byte model
+    does not see) and distributed (halo) variants per shard count, whose
+    ppermute cost the model does not see at all.
 
     ``fill_for``: optional ``Candidate -> fill fraction`` hook used to
     score compacted candidates (measured occupancy; default 1.0).
@@ -275,12 +318,13 @@ def prune_candidates(domain: Domain, avg_ppc: float,
     def order_key(c: Candidate):
         return (_cost(domain, avg_ppc, c, fill_for), c.backend,
                 c.batch_size, c.m_c, c.box or (), c.compact,
-                c.n_shards or 1)
+                c.n_shards or 1, c.layout)
 
-    by_strategy: Dict[Tuple[str, bool, int], List[Candidate]] = {}
+    by_strategy: Dict[Tuple[str, bool, int, str], List[Candidate]] = {}
     for c in sorted(candidates, key=order_key):
-        by_strategy.setdefault((c.strategy, c.compact, c.n_shards or 1),
-                               []).append(c)
+        by_strategy.setdefault(
+            (c.strategy, c.compact, c.n_shards or 1, c.layout),
+            []).append(c)
     queues = sorted(by_strategy.values(),
                     key=lambda q: order_key(q[0]))
     interleaved = [c for round_ in itertools.zip_longest(*queues)
@@ -418,6 +462,7 @@ def tune(domain: Domain, kernel: Optional[PairKernel] = None,
          candidates: Optional[Sequence[Candidate]] = None,
          m_c_slack: float = 1.5,
          include_compact: bool = True,
+         include_packed: bool = True,
          shard_counts: Optional[Sequence[int]] = None,
          top_k: int = DEFAULT_TOP_K,
          reps: Optional[int] = None, budget_s: float = 0.5,
@@ -448,6 +493,10 @@ def tune(domain: Domain, kernel: Optional[PairKernel] = None,
         enumerated candidate whose (backend, strategy) implements the
         compacted path — the dense-vs-compact axis of the search. The
         bound is measured from ``positions``.
+      include_packed: add a packed-row-layout twin (``layout="packed"``,
+        ``row_cap`` measured from ``positions``) for every candidate —
+        dense *and* compacted — whose (backend, strategy) implements the
+        packed layout: the dense-vs-packed axis of the search.
       shard_counts: halo shard counts to sweep (the distributed axis —
         every cell-schedule candidate gets a ``backend="halo"`` twin per
         viable count). Default: the full visible device count when more
@@ -517,7 +566,29 @@ def tune(domain: Domain, kernel: Optional[PairKernel] = None,
                 int(shard_pencil_active(domain, counts, ns).max()))
         return _shard_measures[ns]
 
+    # measured packed-row maximum, memoized — the row_cap analogue of
+    # max_count for the packed-layout candidates
+    _row_max: list = []
+
+    def max_row_count() -> int:
+        if not _row_max:
+            from .binning import cell_counts, padded_row_counts
+            if not _counts_box:
+                _counts_box.append(cell_counts(domain, positions))
+            _row_max.append(int(jax.numpy.max(
+                padded_row_counts(domain, _counts_box[0]))))
+        return _row_max[0]
+
     def active_safe(c: Candidate, strict: bool = True) -> bool:
+        if c.layout == "packed":
+            if c.row_cap is None:
+                if strict:
+                    raise ValueError(
+                        f"packed candidate {c} has no row_cap bound "
+                        "(repro.core.suggest_row_cap measures one)")
+                return False
+            if c.row_cap < max_row_count():
+                return False
         if c.distributed:
             ns = c.n_shards
             if ns > jax.device_count() or domain.nz % ns:
@@ -563,6 +634,9 @@ def tune(domain: Domain, kernel: Optional[PairKernel] = None,
             extra_allin_boxes=(box,) if box is not None else ())
         if include_compact:
             candidates = list(candidates) + compact_twins(
+                domain, positions, candidates)
+        if include_packed:
+            candidates = list(candidates) + packed_twins(
                 domain, positions, candidates)
         if shard_counts is None:
             # default distributed axis: the full local mesh (one extra

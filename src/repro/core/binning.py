@@ -276,6 +276,20 @@ def _compact_active(unit_counts: Array, max_active: int,
                      n_units=n_units)
 
 
+def full_pencil_occupancy(domain: Domain) -> Occupancy:
+    """The identity occupancy: every (z, y) pencil active, in order.
+
+    Lets the packed (and any compacted-shaped) runners iterate *all* rows
+    through the same chunked active-list machinery when a plan is not
+    compacted — ``active`` is just ``arange(nz * ny)`` with no padding.
+    """
+    n = domain.nz * domain.ny
+    return Occupancy(unit_counts=jnp.ones((n,), jnp.int32),
+                     active=jnp.arange(n, dtype=jnp.int32),
+                     n_active=jnp.asarray(n, jnp.int32),
+                     max_active=n, n_units=n)
+
+
 def counts_grid(domain: Domain, counts: Array) -> Array:
     """(n_cells,) linear cell counts -> (nz, ny, nx) grid (X fastest)."""
     return counts.reshape(domain.nz, domain.ny, domain.nx)
@@ -361,6 +375,173 @@ def gather_pencil_rows(plane: Array, active_zy: Array, ny: int,
     z = active_zy // ny + 1 + dz
     y = active_zy % ny + 1 + dy
     return plane[z, y, :]
+
+
+# --------------------------------------------------------------------------
+# packed-row layout: CSR-style slot compaction per pencil row
+# --------------------------------------------------------------------------
+#
+# The occupancy path (above) removes empty work *units*; inside an active
+# cell the dense layout still pays for all m_c slots. In the paper's
+# "few particles per cell" regime (ppc 1-4, m_c sublane-aligned to 8) that
+# is 2-8x more bytes than the particles warrant. The packed layout is the
+# CSR answer: each padded (z, y) pencil row stores its particles
+# *contiguously* (cell order preserved), with per-cell start offsets from
+# the paper's prefix-sum kernel, under a static ``row_cap`` bound that
+# follows the same overflow/replan contract as ``m_c``/``max_active``
+# (see ARCHITECTURE.md "Static bounds & the replan contract").
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PackedRows:
+    """CSR cell layout: per-pencil packed rows + prefix-sum cell offsets.
+
+    Every padded (z, y) pencil row — interior rows and the ghost ring —
+    owns ``row_cap`` slots; the row's particles (including its X-ghost
+    copies) sit contiguously at the front in cell-then-rank order, exactly
+    the order the dense row stores them in minus the empty slots. The
+    per-row exclusive prefix sum ``cell_offsets`` (built with the paper's
+    §6 scan, ``core.prefix``) says where each padded cell's particles
+    start, so the dense layout's contiguous 3-cell X-window becomes an
+    (offset, length) pair: ``[cell_offsets[c-1], cell_offsets[c+2])``.
+
+    Like every static bound, ``row_cap`` overflowing means particles were
+    *dropped* by the pack — detectable (``overflowed`` /
+    ``InteractionPlan.check_overflow``), never silently wrong.
+    """
+
+    planes: Dict[str, Array]      # (nz+2, ny+2, row_cap) packed SoA fields
+    slot_id: Array                # (nz+2, ny+2, row_cap) int32, -1 padding
+    slot_cell: Array              # (nz+2, ny+2, row_cap) int32 padded cell
+    cell_offsets: Array           # (nz+2, ny+2, nx+3) int32 exclusive prefix
+    row_counts: Array             # (nz+2, ny+2) int32 particles per row
+    counts: Array                 # (n_cells,) pass-through from CellBins
+    particle_slot: Array          # (N,) interior flat packed slot per particle
+    row_cap: int = dataclasses.field(metadata=dict(static=True))
+    m_c: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def overflowed(self) -> Array:
+        """True when some row held more than ``row_cap`` particles (replan)."""
+        return jnp.max(self.row_counts) > self.row_cap
+
+
+def padded_row_counts(domain: Domain, counts: Array) -> Array:
+    """(n_cells,) cell counts -> (nz, ny) particles per *padded* pencil row.
+
+    A padded row holds the pencil's interior particles plus, under a
+    periodic X axis, the ghost copies of its first and last cell (a
+    1-cell-thick periodic X axis counts its single cell three times). The
+    host-side probe behind ``suggest_row_cap`` and the packed
+    ``check_overflow``: ghost Y/Z rows are wrapped copies of interior rows,
+    so the interior maximum covers every padded row of the layout.
+    """
+    grid = counts_grid(domain, counts)
+    per_row = grid.sum(axis=-1)
+    if domain.periodic_axes[0]:
+        per_row = per_row + grid[..., 0] + grid[..., -1]
+    return per_row
+
+
+def pack_rows(domain: Domain, bins: CellBins, row_cap: int) -> PackedRows:
+    """Compact a dense :class:`CellBins` into the packed-row (CSR) layout.
+
+    Traceable (runs inside the jitted executor). Per padded row: per-cell
+    counts come from the occupied slots, the paper's prefix sum turns them
+    into start offsets, and every occupied dense slot ``(cell c, rank r)``
+    scatters to packed position ``cell_offsets[c] + r`` — a stable
+    compaction, so packed order is dense order minus the sentinels and the
+    dense 3-cell window survives as an (offset, length) range. Rows whose
+    count exceeds ``row_cap`` drop their tail (``mode='drop'``), flagged by
+    :attr:`PackedRows.overflowed` for the replan contract.
+    """
+    nx, ny, nz = domain.ncells
+    m_c = bins.m_c
+    nzp, nyp = nz + 2, ny + 2
+    shape4 = (nzp, nyp, nx + 2, m_c)
+
+    occupied = (bins.slot_id.reshape(shape4) >= 0)
+    cell_counts_p = occupied.sum(axis=-1).astype(jnp.int32)  # (nzp,nyp,nx+2)
+    offsets = exclusive_prefix_sum(cell_counts_p)            # paper §6 scan
+    row_counts = cell_counts_p.sum(axis=-1)                  # (nzp, nyp)
+    cell_offsets = jnp.concatenate(
+        [offsets, row_counts[..., None]], axis=-1)           # (nzp,nyp,nx+3)
+
+    # destination of dense slot (c, r): cell start + rank; unoccupied slots
+    # and rows past row_cap are pushed out of range so 'drop' discards them
+    rank = jnp.arange(m_c, dtype=jnp.int32)
+    dest = offsets[..., None] + rank                         # (nzp,nyp,nx+2,m_c)
+    dest = jnp.where(occupied & (dest < row_cap), dest, row_cap)
+    row_base = (jnp.arange(nzp, dtype=jnp.int32)[:, None] * nyp
+                + jnp.arange(nyp, dtype=jnp.int32)[None, :])
+    flat = (row_base[..., None, None] * (row_cap + 1) + dest).reshape(-1)
+    total = nzp * nyp * (row_cap + 1)
+
+    def pack(plane: Array, fill) -> Array:
+        out = jnp.full((total,), fill, dtype=plane.dtype)
+        out = out.at[flat].set(plane.reshape(-1), mode="drop")
+        return out.reshape(nzp, nyp, row_cap + 1)[..., :row_cap]
+
+    planes = {}
+    for name, plane in bins.planes.items():
+        fill = EMPTY_POS if name in ("x", "y", "z") else 0.0
+        planes[name] = pack(plane, jnp.asarray(fill, plane.dtype))
+    slot_id = pack(bins.slot_id, jnp.int32(-1))
+
+    # padded cell index of every packed slot; padding slots read cell 1 (a
+    # valid interior cell) so window arithmetic stays in bounds — their
+    # results are masked by slot_id == -1 and never unpacked
+    cell_idx = jnp.broadcast_to(
+        jnp.arange(nx + 2, dtype=jnp.int32)[None, None, :, None], shape4)
+    slot_cell = pack(cell_idx.reshape(bins.slot_id.shape), jnp.int32(1))
+
+    # per-particle packed slot (interior rows only): dense flat slot ->
+    # (z, y, c, r) -> interior flat (z*ny + y) * row_cap + offset + rank
+    row_len = (nx + 2) * m_c
+    ds = bins.particle_slot
+    zp = ds // ((nyp) * row_len)
+    rem = ds % ((nyp) * row_len)
+    yp = rem // row_len
+    col = rem % row_len
+    c = col // m_c
+    r = col % m_c
+    pos_in_row = offsets[zp, yp, c] + r
+    pos_in_row = jnp.minimum(pos_in_row, row_cap)       # overflow-safe read
+    particle_slot = (((zp - 1) * ny + (yp - 1)) * (row_cap + 1)
+                     + pos_in_row).astype(jnp.int32)
+
+    return PackedRows(planes=planes, slot_id=slot_id, slot_cell=slot_cell,
+                      cell_offsets=cell_offsets, row_counts=row_counts,
+                      counts=bins.counts, particle_slot=particle_slot,
+                      row_cap=row_cap, m_c=m_c)
+
+
+def unpack_scatter(domain: Domain, packed: PackedRows,
+                   rows: Array) -> Array:
+    """Packed per-slot values back to particle order (packed counterpart of
+    :func:`gather_to_particles` / :func:`dense_to_particles`).
+
+    ``rows`` holds one value per *interior* packed slot —
+    ``(nz * ny, row_cap)`` (or any reshape of it) in pencil-id order
+    ``z * ny + y``. Out-of-cap particles (an overflowed pack — caught by
+    ``check_overflow`` before results are trusted) read a zero pad slot.
+    """
+    nz, ny = domain.nz, domain.ny
+    per_row = rows.reshape(nz * ny, packed.row_cap)
+    padded = jnp.concatenate(
+        [per_row, jnp.zeros((nz * ny, 1), per_row.dtype)], axis=-1)
+    return padded.reshape(-1)[packed.particle_slot]
+
+
+def packed_to_particles(domain: Domain, packed: PackedRows, fx: Array,
+                        fy: Array, fz: Array, pot: Array
+                        ) -> Tuple[Array, Array]:
+    """Normalize packed ``(nz * ny, row_cap)`` schedule outputs to
+    per-particle ``(forces (N, 3), potential (N,))`` — the same output
+    contract as :func:`dense_to_particles`."""
+    out = [unpack_scatter(domain, packed, p) for p in (fx, fy, fz, pot)]
+    return jnp.stack(out[:3], axis=-1), out[3]
 
 
 def interior(domain: Domain, plane: Array, m_c: int) -> Array:

@@ -31,7 +31,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from .binning import CellBins, Occupancy, gather_pencil_rows
+from .binning import (EMPTY_POS, CellBins, Occupancy, PackedRows,
+                      gather_pencil_rows)
 from .domain import Domain
 from .interactions import PairKernel, pair_contribution
 
@@ -532,6 +533,125 @@ def allin_sparse(domain: Domain, bins: CellBins, kernel: PairKernel,
     return tuple(scatter(o) for o in outs)
 
 
+# --------------------------------------------------------------------------
+# packed-row (CSR) X-pencil: dense windows re-expanded from packed rows
+# --------------------------------------------------------------------------
+#
+# The occupancy-compacted variants above still move every active pencil's
+# full (nx+2)*m_c dense row; the packed variant reads the CSR layout
+# (``binning.PackedRows``) instead — row_cap slots per row, bytes
+# proportional to the particles, not to m_c. Each target slot's 3-cell
+# X-window is re-expanded to the *dense* (3*m_c,) shape by offset/length
+# (invalid ranks read the sentinel), so every pair contribution, mask and
+# last-axis reduction is elementwise identical to the dense schedule's —
+# packing changes where bytes live, never a computed value.
+
+
+def _packed_window(off: Array, rows: dict, scell: Array, tcell: Array,
+                   nx: int, m_c: int):
+    """Expand packed source rows into per-target dense 3-cell windows.
+
+    Two stages, so the per-element dynamic indexing stays proportional to
+    the *particles*, not to the window tensor: first each packed source
+    row is scatter-reconstructed into its dense ``(nx+2)*m_c`` row (every
+    packed slot knows its dense position ``cell * m_c + rank``; untouched
+    slots keep the sentinel — bit-equal to the row the dense layout
+    stores), then windows come from the dense schedule's own static
+    ``_window_indices`` view and each target slot row-gathers its cell's
+    window (contiguous rows, cheap). One dynamic scatter of ``row_cap``
+    values per row per field replaces a ``row_cap * 3 * m_c`` gather.
+
+    Args:
+      off: (chunk, nx+3) per-source-row cell offsets (prefix + total).
+      rows: field name -> (chunk, row_cap) packed source rows ("id" is
+        the slot-id row; ids >= 0 mark real particles).
+      scell: (chunk, row_cap) the source rows' packed slot cells.
+      tcell: (chunk, row_cap) target padded cell, pre-clipped to [1, nx].
+    Returns:
+      field name -> (chunk, row_cap, 3*m_c) window values per target slot
+      — elementwise equal to the dense layout's
+      ``row[(c-1)*m_c:(c+2)*m_c]`` per target cell.
+    """
+    chunk, row_cap = scell.shape
+    row_len = (nx + 2) * m_c
+    start = jnp.take_along_axis(off, scell, axis=-1)
+    rank = jnp.arange(row_cap, dtype=jnp.int32) - start
+    valid = rows["id"] >= 0
+    dest = jnp.where(valid, scell * m_c + rank, row_len)    # pads dropped
+    flat = (jnp.arange(chunk, dtype=jnp.int32)[:, None] * (row_len + 1)
+            + dest).reshape(-1)
+    total = chunk * (row_len + 1)
+
+    widx = _window_indices(nx, m_c)
+    sel = jnp.broadcast_to((tcell - 1)[..., None],
+                           (chunk, row_cap, 3 * m_c))
+    out = {}
+    for name, row in rows.items():
+        fill = jnp.asarray(-1 if name == "id" else EMPTY_POS, row.dtype)
+        dense = jnp.full((total,), fill, row.dtype)
+        dense = dense.at[flat].set(row.reshape(-1), mode="drop")
+        dense = dense.reshape(chunk, row_len + 1)[:, :row_len]
+        out[name] = jnp.take_along_axis(dense[:, widx], sel, axis=-2)
+    return out
+
+
+def xpencil_packed(domain: Domain, packed: PackedRows, kernel: PairKernel,
+                   occ: Occupancy, batch_size: int = 64) -> ForceOut:
+    """Packed-row X-pencil schedule over the (active) pencil rows.
+
+    Iterates the occupancy summary's active list (pass
+    ``binning.full_pencil_occupancy`` for every row) in chunks; per chunk,
+    the 9 (dz, dy) neighbor rows are gathered as packed ``row_cap`` rows
+    plus their offset rows, windows are re-expanded per target slot, and
+    the shared masked pair reduction runs. Returns packed
+    ``(nz * ny, row_cap)`` planes (pencil-id order) for
+    :func:`binning.packed_to_particles`.
+    """
+    nx, ny, nz = domain.ncells
+    m_c, row_cap = packed.m_c, packed.row_cap
+    cut2 = domain.cutoff ** 2
+    dt = packed.planes["x"].dtype
+
+    def one_chunk(zy):                       # (chunk,) active pencil ids
+        tx = gather_pencil_rows(packed.planes["x"], zy, ny)
+        ty = gather_pencil_rows(packed.planes["y"], zy, ny)
+        tz = gather_pencil_rows(packed.planes["z"], zy, ny)
+        tid = gather_pencil_rows(packed.slot_id, zy, ny)
+        tc = gather_pencil_rows(packed.slot_cell, zy, ny)
+        tcell = jnp.clip(tc, 1, nx)          # ghost/pad targets never unpack
+
+        acc = tuple(jnp.zeros(tx.shape, dtype=dt) for _ in range(4))
+        for dz in (-1, 0, 1):
+            for dy in (-1, 0, 1):
+                off = gather_pencil_rows(packed.cell_offsets, zy, ny, dz, dy)
+                rows = {f: gather_pencil_rows(packed.planes[f], zy, ny,
+                                              dz, dy)
+                        for f in ("x", "y", "z")}
+                rows["id"] = gather_pencil_rows(packed.slot_id, zy, ny,
+                                                dz, dy)
+                scell = gather_pencil_rows(packed.slot_cell, zy, ny, dz, dy)
+                w = _packed_window(off, rows, scell, tcell, nx, m_c)
+                sid, txe = w["id"], tx[..., None]
+                mask = ((sid != tid[..., None]) & (sid >= 0)
+                        & (tid[..., None] >= 0))
+                fx, fy, fz, pot = pair_contribution(
+                    kernel, txe - w["x"], ty[..., None] - w["y"],
+                    tz[..., None] - w["z"], mask, cut2)
+                out = (fx.sum(-1), fy.sum(-1), fz.sum(-1), pot.sum(-1))
+                acc = tuple(a + o for a, o in zip(acc, out))
+        return acc
+
+    chunks, scatter_idx = _chunked_active(occ, batch_size)
+    outs = jax.lax.map(one_chunk, chunks)    # 4 x (n_chunks, chunk, row_cap)
+
+    def scatter(o):
+        compact = o.reshape(-1, row_cap)
+        dense = jnp.zeros((nz * ny, row_cap), o.dtype)
+        return dense.at[scatter_idx].set(compact, mode="drop")
+
+    return tuple(scatter(o) for o in outs)
+
+
 STRATEGIES = {
     "par_part": par_part,
     "cell_dense": cell_dense,
@@ -543,4 +663,8 @@ SPARSE_STRATEGIES = {
     "cell_dense": cell_dense_sparse,
     "xpencil": xpencil_sparse,
     "allin": allin_sparse,
+}
+
+PACKED_STRATEGIES = {
+    "xpencil": xpencil_packed,
 }

@@ -15,7 +15,10 @@ executor per plan does, end to end:
      (coordinates, extra fields, slot ids) cross to the neighbouring shards
      via ``ppermute`` (``dist.halo.exchange_halo``); periodic Z wraps around
      the shard ring with the minimum-image shift, open Z boundaries get
-     empty planes,
+     empty planes. ``layout="packed"`` plans pack the slab *first*
+     (``binning.pack_rows``) and exchange the packed planes — each
+     boundary plane crosses as ``row_cap`` slots plus its row-local
+     prefix-sum offsets instead of ``(nx+2)*m_c`` dense slots,
   4. **local schedule** — the plan's strategy runs on the local slab through
      the same backend registry as single-device execution (reference or
      Pallas, dense or occupancy-compacted), so every schedule the registry
@@ -44,7 +47,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ..core.binning import (EMPTY_POS, bin_particles, cell_counts,
-                            shard_pencil_active, shard_slab_counts)
+                            pack_rows, shard_pencil_active,
+                            shard_slab_counts)
 from ..core.domain import Domain, slab_domain
 from . import halo as H
 
@@ -124,7 +128,7 @@ def halo_impl(plan):
     inner = dataclasses.replace(plan, domain=local_dom,
                                 backend=plan.halo_inner, n_shards=None,
                                 shard_cap=None, mesh=None)
-    inner_fn = get_backend(inner.backend, inner.strategy)
+    inner_fn = get_backend(inner.backend, inner.strategy, plan.layout)
     mesh = resolve_mesh(plan)
 
     def body(pos_blk: Array, fields_blk: Dict[str, Array]):
@@ -145,19 +149,47 @@ def halo_impl(plan):
             plane, axis=axis, n_shards=n_shards, nz_loc=nz_loc,
             shard_index=idx, periodic_z=pz, fill=fill,
             coord_shift=coord_shift)
-        planes = {}
-        for name, plane in bins.planes.items():
-            if name == "z":
-                planes[name] = exchange(plane, EMPTY_POS, lz_loc)
-            elif name in ("x", "y"):
-                planes[name] = exchange(plane, EMPTY_POS)
-            else:                                  # extra per-particle field
-                planes[name] = exchange(plane, 0.0)
-        sid = exchange(sid, -1)
-        bins = dataclasses.replace(bins, planes=planes, slot_id=sid)
+
+        def exchange_planes(planes):
+            out = {}
+            for name, plane in planes.items():
+                if name == "z":
+                    out[name] = exchange(plane, EMPTY_POS, lz_loc)
+                elif name in ("x", "y"):
+                    out[name] = exchange(plane, EMPTY_POS)
+                else:                          # extra per-particle field
+                    out[name] = exchange(plane, 0.0)
+            return out
 
         safe_pos = jnp.where(valid[:, None], local_pos, 0.0)
-        f, pot = inner_fn(inner, bins, ParticleState(safe_pos, fields_blk))
+        local_state = ParticleState(safe_pos, fields_blk)
+
+        if plan.layout == "packed":
+            # pack the local slab first, then exchange the *packed* ghost
+            # planes: each boundary plane crosses as row_cap packed slots
+            # plus its (nx+3) prefix-sum offsets — bytes proportional to
+            # the boundary particles, not to m_c. No offset rebasing is
+            # needed on arrival: cell offsets are row-local (a packed row
+            # is self-describing), slot ids already carry the sender's
+            # shard offset, and only the z coordinates are rebased into
+            # this shard's frame (the usual minimum-image shift).
+            packed = pack_rows(local_dom,
+                               dataclasses.replace(bins, slot_id=sid),
+                               row_cap=plan.row_cap)
+            packed = dataclasses.replace(
+                packed,
+                planes=exchange_planes(packed.planes),
+                slot_id=exchange(packed.slot_id, -1),
+                slot_cell=exchange(packed.slot_cell, 1),
+                cell_offsets=exchange(packed.cell_offsets, 0),
+                row_counts=exchange(packed.row_counts[..., None],
+                                    0)[..., 0])
+            f, pot = inner_fn(inner, packed, local_state)
+        else:
+            bins = dataclasses.replace(bins,
+                                       planes=exchange_planes(bins.planes),
+                                       slot_id=exchange(sid, -1))
+            f, pot = inner_fn(inner, bins, local_state)
         return (jnp.where(valid[:, None], f, 0.0),
                 jnp.where(valid, pot, 0.0))
 

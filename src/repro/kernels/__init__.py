@@ -20,12 +20,14 @@ through exactly the API users already select strategies with.
 """
 
 from ..core.api import InteractionPlan, ParticleState, register_backend
-from ..core.binning import CellBins
+from ..core.binning import CellBins, PackedRows
 from .ops import (allin_interactions, prefix_sum, window_attention,
-                  xpencil_interactions, xpencil_sparse_interactions)
+                  xpencil_interactions, xpencil_packed_interactions,
+                  xpencil_sparse_interactions)
 
 __all__ = ["allin_interactions", "prefix_sum", "window_attention",
-           "xpencil_interactions", "xpencil_sparse_interactions"]
+           "xpencil_interactions", "xpencil_packed_interactions",
+           "xpencil_sparse_interactions"]
 
 
 # -- plan/execute backend registration (normalized signature) ---------------
@@ -46,3 +48,12 @@ def _pallas_allin(plan: InteractionPlan, bins: CellBins,
                   state: ParticleState):
     return allin_interactions(plan.domain, bins, plan.kernel, plan.box,
                               interpret=plan.interpret)
+
+
+@register_backend("pallas", "xpencil", compact=True, layout="packed")
+def _pallas_xpencil_packed(plan: InteractionPlan, packed: PackedRows,
+                           state: ParticleState):
+    return xpencil_packed_interactions(
+        plan.domain, packed, plan.kernel,
+        max_active=plan.max_active if plan.compact else None,
+        interpret=plan.interpret)

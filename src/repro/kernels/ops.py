@@ -12,14 +12,17 @@ from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
-from ..core.binning import CellBins, dense_to_particles, pencil_occupancy
+from ..core.binning import (CellBins, PackedRows, dense_to_particles,
+                            full_pencil_occupancy, packed_to_particles,
+                            pencil_occupancy)
 from ..core.domain import Domain
 from ..core.interactions import PairKernel
 from ._platform import resolve_interpret as _interpret
 from .allin import allin_forces
 from .prefix_sum import prefix_sum as _prefix_sum
 from .window_attn import window_attention as _window_attention
-from .xpencil import xpencil_forces, xpencil_sparse_forces
+from .xpencil import (xpencil_forces, xpencil_packed_forces,
+                      xpencil_sparse_forces)
 
 Array = jnp.ndarray
 
@@ -62,6 +65,38 @@ def xpencil_sparse_interactions(domain: Domain, bins: CellBins,
 
     fx, fy, fz, pot = (scatter(r) for r in compact)
     return _to_particles(domain, bins, fx, fy, fz, pot)
+
+
+def xpencil_packed_interactions(domain: Domain, packed: PackedRows,
+                                kernel: PairKernel,
+                                max_active: Optional[int] = None,
+                                interpret: Optional[bool] = None
+                                ) -> Tuple[Array, Array]:
+    """Packed-row X-pencil kernel -> per-particle (forces, potential).
+
+    Iterates every pencil row when ``max_active`` is None, or the
+    occupancy-compacted active list bounded by ``max_active`` otherwise
+    (the packed and compacted axes compose). Compact kernel rows scatter
+    back into packed ``(nz * ny, row_cap)`` planes, then unpack to
+    particle order; overflow of either bound is the caller's replan
+    contract (``InteractionPlan.check_overflow``).
+    """
+    nx, ny, nz = domain.ncells
+    occ = (full_pencil_occupancy(domain) if max_active is None
+           else pencil_occupancy(domain, packed.counts, max_active))
+    compact = xpencil_packed_forces(
+        packed.planes, packed.slot_id, packed.slot_cell,
+        packed.cell_offsets, occ.active, nx=nx, ny=ny, m_c=packed.m_c,
+        row_cap=packed.row_cap, kernel=kernel,
+        cutoff2=float(domain.cutoff) ** 2, interpret=_interpret(interpret))
+    idx = occ.scatter_indices()
+
+    def scatter(rows: Array) -> Array:      # (n_rows, row_cap) -> packed
+        dense = jnp.zeros((nz * ny, packed.row_cap), rows.dtype)
+        return dense.at[idx].set(rows, mode="drop")
+
+    fx, fy, fz, pot = (scatter(r) for r in compact)
+    return packed_to_particles(domain, packed, fx, fy, fz, pot)
 
 
 def allin_interactions(domain: Domain, bins: CellBins, kernel: PairKernel,

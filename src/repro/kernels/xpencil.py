@@ -28,6 +28,10 @@ multiple of 8 keeps slices sublane-aligned (``suggest_m_c`` does this).
 ``xpencil_sparse_forces`` below is the occupancy-compacted variant: its grid
 runs over the *active* pencils only, with the active-index list
 scalar-prefetched so the BlockSpec index maps become data-dependent.
+``xpencil_packed_forces`` is the packed-row (CSR) variant on top of that:
+each DMA moves ``row_cap`` packed slots plus a prefix-sum offset row
+instead of a dense ``(nx+2)*m_c`` row — bytes proportional to the
+particles, the paper's few-particles-per-cell fix.
 """
 
 from __future__ import annotations
@@ -40,6 +44,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core.binning import EMPTY_POS
 from ..core.interactions import PairKernel
 from ._platform import resolve_interpret
 
@@ -244,3 +249,152 @@ def xpencil_sparse_forces(planes: dict, slot_id: Array, active_zy: Array, *,
     )(active_zy.astype(jnp.int32),
       x, planes["y"], planes["z"], slot_id,
       x, planes["y"], planes["z"], slot_id)
+
+
+# --------------------------------------------------------------------------
+# packed-row (CSR) variant: row_cap rows, offset-driven windows
+# --------------------------------------------------------------------------
+#
+# The compacted kernel above still DMAs every active pencil's full dense
+# (nx+2)*m_c row; in the few-particles-per-cell regime most of those bytes
+# are sentinel padding. This variant reads the packed layout
+# (``core.binning.PackedRows``) instead: each DMA moves ``row_cap`` packed
+# slots plus an (nx+3)-entry offset row — bytes proportional to the
+# particles, not to m_c. The scalar-prefetched active-row ids drive the
+# BlockSpec index maps exactly as in the compacted kernel (the same
+# data-dependent staging, composed with the packed rows' own CSR offsets,
+# which stay *row-local* so a DMA'd row is self-describing); inside the
+# body each target slot's 3-cell X-window is re-expanded to the dense
+# (3*m_c,) shape by offset/length, so every pair term, mask and reduction
+# is elementwise identical to the dense kernel's — bit-identical results.
+
+def _packed_contrib(trows, srow, soff, *, nx: int, m_c: int, row_cap: int,
+                    kernel: PairKernel, cutoff2: float):
+    """One (dz, dy) step over packed rows.
+
+    ``trows`` = (tx, ty, tz, tid, tcell) packed target row vectors, each
+    ``(row_cap,)``; ``srow`` = (xs, ys, zs, ids) packed source row;
+    ``soff`` = the source row's ``(nx+3,)`` cell offsets. Returns 4 flat
+    ``(row_cap,)`` contributions, elementwise equal to what the dense
+    body computes for the same particles.
+    """
+    tx, ty, tz, tid, tc = trows
+    xs, ys, zs, ids = srow
+    tcell = jnp.clip(tc, 1, nx)          # pad/ghost targets never unpacked
+
+    j = jnp.arange(3 * m_c, dtype=jnp.int32)
+    wcell = tcell[:, None] - 1 + j // m_c            # (row_cap, 3*m_c)
+    rank = j % m_c
+    start = jnp.take(soff, wcell.reshape(-1)).reshape(wcell.shape)
+    cnt = jnp.take(soff, (wcell + 1).reshape(-1)).reshape(wcell.shape) - start
+    valid = rank < cnt
+    src = jnp.where(valid, start + rank, 0).reshape(-1)
+
+    def expand(row, fill):
+        vals = jnp.take(row, src).reshape(wcell.shape)
+        return jnp.where(valid, vals, fill)
+
+    sx = expand(xs, EMPTY_POS)
+    sy = expand(ys, EMPTY_POS)
+    sz = expand(zs, EMPTY_POS)
+    sid = expand(ids, jnp.int32(-1))
+
+    ddx = tx[:, None] - sx
+    ddy = ty[:, None] - sy
+    ddz = tz[:, None] - sz
+    r2 = ddx * ddx + ddy * ddy + ddz * ddz
+    mask = ((sid != tid[:, None]) & (sid >= 0) & (tid[:, None] >= 0)
+            & (r2 < cutoff2) & (r2 > 0.0))
+    r2s = jnp.where(mask, r2, 1.0)
+    w = mask.astype(ddx.dtype)
+    s = kernel.coeff(r2s) * w
+    pot = kernel.potential(r2s) * w
+    return ((s * ddx).sum(-1), (s * ddy).sum(-1), (s * ddz).sum(-1),
+            pot.sum(-1))
+
+
+def _packed_kernel(act_ref,                          # scalar-prefetched ids
+                   xt_ref, yt_ref, zt_ref, it_ref, ct_ref,
+                   xs_ref, ys_ref, zs_ref, is_ref, os_ref,
+                   fx_ref, fy_ref, fz_ref, pot_ref,
+                   *, nx: int, m_c: int, row_cap: int, kernel: PairKernel,
+                   cutoff2: float):
+    del act_ref  # consumed by the BlockSpec index maps, not the body
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        fx_ref[...] = jnp.zeros_like(fx_ref)
+        fy_ref[...] = jnp.zeros_like(fy_ref)
+        fz_ref[...] = jnp.zeros_like(fz_ref)
+        pot_ref[...] = jnp.zeros_like(pot_ref)
+
+    fx, fy, fz, pot = _packed_contrib(
+        (xt_ref[0, 0, :], yt_ref[0, 0, :], zt_ref[0, 0, :], it_ref[0, 0, :],
+         ct_ref[0, 0, :]),
+        (xs_ref[0, 0, :], ys_ref[0, 0, :], zs_ref[0, 0, :], is_ref[0, 0, :]),
+        os_ref[0, 0, :],
+        nx=nx, m_c=m_c, row_cap=row_cap, kernel=kernel, cutoff2=cutoff2)
+
+    fx_ref[...] += fx.reshape(1, row_cap)
+    fy_ref[...] += fy.reshape(1, row_cap)
+    fz_ref[...] += fz.reshape(1, row_cap)
+    pot_ref[...] += pot.reshape(1, row_cap)
+
+
+@functools.partial(jax.jit, static_argnames=("nx", "ny", "m_c", "row_cap",
+                                             "kernel", "cutoff2",
+                                             "interpret"))
+def xpencil_packed_forces(planes: dict, slot_id: Array, slot_cell: Array,
+                          cell_offsets: Array, active_zy: Array, *,
+                          nx: int, ny: int, m_c: int, row_cap: int,
+                          kernel: PairKernel, cutoff2: float,
+                          interpret: Optional[bool] = None
+                          ) -> Tuple[Array, Array, Array, Array]:
+    """Run the packed-row X-pencil kernel over the given pencil rows.
+
+    Args:
+      planes / slot_id / slot_cell / cell_offsets: the packed layout's
+        padded planes (``core.binning.PackedRows``) — planes and ids are
+        ``(nz+2, ny+2, row_cap)``, offsets ``(nz+2, ny+2, nx+3)``.
+      active_zy: (n_rows,) int32 linearized interior pencil ids
+        ``z * ny + y`` to iterate — the full ``arange(nz * ny)`` for a
+        dense sweep or an ``Occupancy.active`` list for a compacted one
+        (padding recomputes pencil 0; drop it with ``scatter_indices``).
+    Returns:
+      (fx, fy, fz, pot), each compact ``(n_rows, row_cap)``: row ``a``
+      holds the packed-slot forces of pencil ``active_zy[a]``.
+    """
+    interpret = resolve_interpret(interpret)
+    x = planes["x"]
+    n_rows = active_zy.shape[0]
+
+    def tgt_map(a, k, act):
+        return (act[a] // ny + 1, act[a] % ny + 1, 0)
+
+    def nbr_map(a, k, act):
+        return (act[a] // ny + k // 3, act[a] % ny + k % 3, 0)
+
+    row_block = pl.BlockSpec((1, 1, row_cap), tgt_map)
+    nbr_block = pl.BlockSpec((1, 1, row_cap), nbr_map)
+    off_block = pl.BlockSpec((1, 1, nx + 3), nbr_map)
+    out_block = pl.BlockSpec((1, row_cap), lambda a, k, act: (a, 0))
+    out_shape = jax.ShapeDtypeStruct((n_rows, row_cap), x.dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_rows, 9),
+        in_specs=[row_block] * 5 + [nbr_block] * 4 + [off_block],
+        out_specs=[out_block] * 4,
+    )
+    body = functools.partial(_packed_kernel, nx=nx, m_c=m_c,
+                             row_cap=row_cap, kernel=kernel,
+                             cutoff2=float(cutoff2))
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=[out_shape] * 4,
+        interpret=interpret,
+    )(active_zy.astype(jnp.int32),
+      x, planes["y"], planes["z"], slot_id, slot_cell,
+      x, planes["y"], planes["z"], slot_id, cell_offsets)

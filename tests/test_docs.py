@@ -1,0 +1,56 @@
+"""Docs gate (``tools/check_docs.py``) + the ISSUE 5 docs acceptance:
+ARCHITECTURE.md exists, is linked from the README, and no intra-repo
+markdown link is dead."""
+
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+if str(ROOT) not in sys.path:
+    sys.path.insert(0, str(ROOT))
+
+from tools import check_docs as CD  # noqa: E402
+
+
+def test_architecture_doc_exists_and_linked_from_readme():
+    assert (ROOT / "ARCHITECTURE.md").exists()
+    links = CD.markdown_links(ROOT / "README.md")
+    assert any(t.split("#")[0] == "ARCHITECTURE.md" for t in links), \
+        "README must link ARCHITECTURE.md"
+
+
+def test_repo_docs_have_no_dead_links():
+    broken = CD.check_links([ROOT / "README.md", ROOT / "ARCHITECTURE.md"])
+    assert broken == [], f"dead intra-repo links: {broken}"
+
+
+def test_check_links_catches_dead_target(tmp_path):
+    md = tmp_path / "doc.md"
+    md.write_text("see [here](missing.md) and [ok](real.md) and "
+                  "[web](https://example.com) and [anchor](#section)")
+    (tmp_path / "real.md").write_text("x")
+    broken = CD.check_links([md])
+    assert broken == [(str(md), "missing.md")]
+
+
+def test_quickstart_block_extracted_and_sane():
+    code = CD.first_python_block(ROOT / "README.md")
+    # the quickstart must exercise the plan/execute front door
+    assert "plan(" in code and "execute" in code
+
+
+def test_quickstart_runner_propagates_failure(tmp_path):
+    md = tmp_path / "bad.md"
+    md.write_text("```python\nraise RuntimeError('boom')\n```")
+    assert CD.main(["--quickstart", str(md)]) == 1
+    good = tmp_path / "good.md"
+    good.write_text("```python\nx = 1 + 1\n```")
+    assert CD.main(["--quickstart", str(good)]) == 0
+
+
+def test_main_link_mode_exit_codes(tmp_path):
+    md = tmp_path / "doc.md"
+    md.write_text("[dead](nope.md)")
+    assert CD.main(["--links", str(md)]) == 1
+    md.write_text("[live](doc.md)")
+    assert CD.main(["--links", str(md)]) == 0

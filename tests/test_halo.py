@@ -367,3 +367,62 @@ def test_halo_batch_replan_and_fields_subprocess():
         print("BATCH_REPLAN_OK")
     """, n_dev=2)
     assert "BATCH_REPLAN_OK" in out
+
+
+@multi
+def test_halo_packed_bit_identical_in_process():
+    """Packed per-shard execution (ghost planes exchanged packed) is
+    bit-identical to the dense-layout halo path, with and without
+    per-shard compaction."""
+    ndev = jax.device_count()
+    ns = max(n for n in (2, 4) if n <= ndev)
+    dom = Domain.cubic(8, cutoff=1.0)
+    pos = dom.sample_uniform(jax.random.PRNGKey(9), 500)
+    state = ParticleState(pos)
+    kern = make_lennard_jones()
+    pd = plan(dom, kern, positions=pos, strategy="xpencil", backend="halo",
+              n_shards=ns)
+    f_d, q_d = pd.execute(state)
+    for compact in (False, True):
+        pp = plan(dom, kern, m_c=pd.m_c, positions=pos, strategy="xpencil",
+                  backend="halo", n_shards=ns, layout="packed",
+                  compact=compact)
+        f_p, q_p = pp.execute(state)
+        np.testing.assert_array_equal(np.asarray(f_p), np.asarray(f_d))
+        np.testing.assert_array_equal(np.asarray(q_p), np.asarray(q_d))
+
+
+def test_halo_packed_parity_subprocess():
+    """On 4 emulated devices the packed halo path (per-shard CSR packing +
+    packed ghost-plane exchange) is bit-identical to the dense halo path
+    on periodic and open Z, and its row_cap replan grows only that
+    bound."""
+    out = run_sub("""
+        import dataclasses
+        import jax, numpy as np
+        from repro.core import Domain, ParticleState, make_lennard_jones, \\
+            plan
+        kern = make_lennard_jones()
+        for periodic in (False, True):
+            dom = Domain.cubic(8, cutoff=1.0, periodic=periodic)
+            pos = dom.sample_uniform(jax.random.PRNGKey(5), 1200)
+            state = ParticleState(pos)
+            p_d = plan(dom, kern, positions=pos, strategy="xpencil",
+                       backend="halo", n_shards=4)
+            f_d, q_d = p_d.execute(state)
+            p_p = plan(dom, kern, m_c=p_d.m_c, positions=pos,
+                       strategy="xpencil", backend="halo", n_shards=4,
+                       layout="packed", compact=True)
+            f_p, q_p = p_p.execute(state)
+            assert np.array_equal(np.asarray(f_p), np.asarray(f_d)), periodic
+            assert np.array_equal(np.asarray(q_p), np.asarray(q_d)), periodic
+
+            tight = dataclasses.replace(p_p, row_cap=8)
+            assert tight.check_overflow(state)
+            (f2, _), grown = tight.execute_or_replan(state)
+            assert grown.row_cap > 8 and grown.m_c == p_p.m_c
+            assert grown.shard_cap == p_p.shard_cap
+            assert np.array_equal(np.asarray(f2), np.asarray(f_d))
+        print("PACKED_HALO_OK")
+    """)
+    assert "PACKED_HALO_OK" in out

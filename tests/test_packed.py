@@ -1,0 +1,369 @@
+"""Packed-row (CSR) execution layout: pack/unpack, parity, replan, tuning.
+
+The correctness bar (ISSUE 5): the packed schedules must be *bit-parity*
+with their dense oracles on uniform and clustered scenes — packing may only
+change where bytes live, never a computed value. Edge cases named by the
+issue: empty pencil rows, a row hitting ``row_cap`` exactly, ``row_cap``
+overflow growing only that bound, and periodic 1-cell-thick axes.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Domain, ParticleState, bin_particles,
+                        full_pencil_occupancy, make_lennard_jones,
+                        pack_rows, padded_row_counts, plan, scenarios,
+                        suggest_m_c, suggest_row_cap, supports_compact,
+                        supports_layout, unpack_scatter)
+from repro.core import traffic
+from repro.core.binning import cell_counts
+
+KERN = make_lennard_jones()
+
+
+def _blob(division=6, n=300, seed=0, sigma_frac=0.08, periodic=False):
+    dom = Domain.cubic(division, cutoff=1.0, periodic=periodic)
+    pos = scenarios.sample_gaussian_blob(
+        dom, jax.random.PRNGKey(seed), n, sigma_frac=sigma_frac)
+    return dom, pos
+
+
+SCENES = [
+    ("uniform", lambda dom, key, n: dom.sample_uniform(key, n)),
+    ("gaussian_blob", lambda dom, key, n: scenarios.sample_gaussian_blob(
+        dom, key, n, sigma_frac=0.08)),
+    ("power_law", lambda dom, key, n: scenarios.sample_power_law_cluster(
+        dom, key, n, n_clusters=2, alpha=2.0, r_min_frac=0.05)),
+]
+
+
+# ---------------------------------------------------------------------------
+# pack_rows / unpack_scatter algebra
+# ---------------------------------------------------------------------------
+
+def test_pack_rows_matches_dense_layout():
+    dom, pos = _blob()
+    m_c = suggest_m_c(dom, pos)
+    bins = bin_particles(dom, pos, m_c=m_c)
+    rc = suggest_row_cap(dom, pos)
+    pk = pack_rows(dom, bins, rc)
+    assert not bool(pk.overflowed)
+
+    # row counts match the occupied dense slots per padded row
+    occ = np.asarray(bins.slot_id) >= 0
+    np.testing.assert_array_equal(np.asarray(pk.row_counts),
+                                  occ.sum(axis=-1))
+    # packed order is dense order minus the sentinels, per row
+    for (z, y) in [(1, 1), (3, 3), (0, 0)]:
+        dense_row = np.asarray(bins.planes["x"][z, y])
+        dense_ids = np.asarray(bins.slot_id[z, y])
+        packed_row = np.asarray(pk.planes["x"][z, y])
+        n_row = int(pk.row_counts[z, y])
+        np.testing.assert_array_equal(packed_row[:n_row],
+                                      dense_row[dense_ids >= 0])
+        assert (packed_row[n_row:] > 1e7).all()        # sentinel padding
+    # per-cell offsets are the prefix sum of per-cell occupancy
+    cellocc = occ.reshape(*occ.shape[:2], dom.nx + 2, bins.m_c).sum(-1)
+    np.testing.assert_array_equal(
+        np.asarray(pk.cell_offsets)[..., :-1],
+        np.concatenate([np.zeros_like(cellocc[..., :1]),
+                        np.cumsum(cellocc, axis=-1)[..., :-1]], axis=-1))
+
+
+def test_unpack_scatter_roundtrip():
+    dom, pos = _blob()
+    bins = bin_particles(dom, pos, m_c=suggest_m_c(dom, pos))
+    pk = pack_rows(dom, bins, suggest_row_cap(dom, pos))
+    interior = pk.planes["y"][1:dom.nz + 1, 1:dom.ny + 1, :]
+    back = unpack_scatter(dom, pk, interior)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(pos[:, 1]))
+
+
+def test_empty_rows_pack_to_zero_counts():
+    """Empty pencil rows (the issue's first edge case): everything lands in
+    one pencil, every other row packs to count 0 and sentinel slots."""
+    dom = Domain.cubic(4, cutoff=1.0)
+    pos = jnp.stack([jnp.linspace(0.1, 3.9, 7),
+                     jnp.full((7,), 0.5), jnp.full((7,), 0.5)], axis=-1)
+    bins = bin_particles(dom, pos, m_c=8)
+    pk = pack_rows(dom, bins, row_cap=8)
+    counts = np.asarray(pk.row_counts)
+    assert counts[1, 1] == 7                     # the one occupied pencil
+    mask = np.ones_like(counts, bool)
+    mask[1, 1] = False
+    assert (counts[mask] == 0).all()
+    assert (np.asarray(pk.slot_id[2, 2]) == -1).all()
+    # and the packed schedule still matches dense on this scene
+    state = ParticleState(pos)
+    f_d, _ = plan(dom, KERN, m_c=8, strategy="xpencil").execute(state)
+    f_p, _ = plan(dom, KERN, m_c=8, strategy="xpencil", layout="packed",
+                  row_cap=8).execute(state)
+    np.testing.assert_array_equal(np.asarray(f_p), np.asarray(f_d))
+
+
+def test_row_cap_hit_exactly_no_overflow():
+    """A grid where one row holds exactly ``row_cap`` particles: full, not
+    overflowed, still bit-identical (the fencepost the drop-scatter must
+    not eat)."""
+    dom, pos = _blob()
+    exact = int(jnp.max(padded_row_counts(dom, cell_counts(dom, pos))))
+    bins = bin_particles(dom, pos, m_c=suggest_m_c(dom, pos))
+    pk = pack_rows(dom, bins, row_cap=exact)
+    assert int(jnp.max(pk.row_counts)) == exact
+    assert not bool(pk.overflowed)
+    state = ParticleState(pos)
+    p = plan(dom, KERN, positions=pos, strategy="xpencil", layout="packed",
+             row_cap=exact)
+    assert not p.check_overflow(state)
+    f_d, _ = plan(dom, KERN, positions=pos, strategy="xpencil").execute(
+        state)
+    f_p, _ = p.execute(state)
+    np.testing.assert_array_equal(np.asarray(f_p), np.asarray(f_d))
+
+
+# ---------------------------------------------------------------------------
+# bit-parity with the dense oracles (the acceptance bar)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scene,sample", SCENES)
+@pytest.mark.parametrize("compact", [False, True])
+def test_reference_packed_bit_parity(scene, sample, compact):
+    dom = Domain.cubic(6, cutoff=1.0)
+    pos = sample(dom, jax.random.PRNGKey(3), 300)
+    state = ParticleState(pos)
+    f_d, q_d = plan(dom, KERN, positions=pos, strategy="xpencil").execute(
+        state)
+    f_p, q_p = plan(dom, KERN, positions=pos, strategy="xpencil",
+                    layout="packed", compact=compact).execute(state)
+    np.testing.assert_array_equal(np.asarray(f_p), np.asarray(f_d))
+    np.testing.assert_array_equal(np.asarray(q_p), np.asarray(q_d))
+
+
+@pytest.mark.parametrize("compact", [False, True])
+def test_pallas_packed_bit_parity(compact):
+    dom, pos = _blob(n=250, seed=4)
+    state = ParticleState(pos)
+    f_d, q_d = plan(dom, KERN, positions=pos, strategy="xpencil").execute(
+        state)
+    f_p, q_p = plan(dom, KERN, positions=pos, strategy="xpencil",
+                    backend="pallas", layout="packed", compact=compact,
+                    interpret=True).execute(state)
+    np.testing.assert_array_equal(np.asarray(f_p), np.asarray(f_d))
+    np.testing.assert_array_equal(np.asarray(q_p), np.asarray(q_d))
+
+
+def test_packed_periodic_thin_axes_bit_parity():
+    """Periodic 1-cell-thick axes (the issue's hardest ghost case): the
+    single cell's particles appear three times per row as ghost copies,
+    and the packed row must reproduce the dense window exactly."""
+    dom = Domain(box=(1.0, 5.0, 5.0), ncells=(1, 5, 5), cutoff=1.0,
+                 periodic=(True, True, False))
+    pos = dom.sample_uniform(jax.random.PRNGKey(7), 120)
+    state = ParticleState(pos)
+    f_d, q_d = plan(dom, KERN, positions=pos, strategy="xpencil").execute(
+        state)
+    f_p, q_p = plan(dom, KERN, positions=pos, strategy="xpencil",
+                    layout="packed").execute(state)
+    np.testing.assert_array_equal(np.asarray(f_p), np.asarray(f_d))
+    np.testing.assert_array_equal(np.asarray(q_p), np.asarray(q_d))
+
+    dom2 = Domain(box=(5.0, 1.0, 1.0), ncells=(5, 1, 1), cutoff=1.0,
+                  periodic=True)
+    pos2 = dom2.sample_uniform(jax.random.PRNGKey(9), 80)
+    state2 = ParticleState(pos2)
+    f_d2, _ = plan(dom2, KERN, positions=pos2, strategy="xpencil").execute(
+        state2)
+    f_p2, _ = plan(dom2, KERN, positions=pos2, strategy="xpencil",
+                   layout="packed").execute(state2)
+    np.testing.assert_array_equal(np.asarray(f_p2), np.asarray(f_d2))
+
+
+def test_packed_matches_naive_oracle_periodic():
+    dom, pos = _blob(division=4, n=200, seed=5, sigma_frac=0.12,
+                     periodic=True)
+    state = ParticleState(pos)
+    f_o, _ = plan(dom, KERN, positions=pos, strategy="naive_n2").execute(
+        state)
+    f_p, _ = plan(dom, KERN, positions=pos, strategy="xpencil",
+                  layout="packed", compact=True).execute(state)
+    np.testing.assert_allclose(np.asarray(f_p), np.asarray(f_o),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_packed_with_fields_binned():
+    """Extra per-particle fields ride through the packed planes."""
+    dom, pos = _blob()
+    mass = jnp.arange(pos.shape[0], dtype=jnp.float32)
+    state = ParticleState(pos, {"mass": mass})
+    bins = bin_particles(dom, pos, {"mass": mass},
+                         m_c=suggest_m_c(dom, pos))
+    pk = pack_rows(dom, bins, suggest_row_cap(dom, pos))
+    back = unpack_scatter(dom, pk,
+                          pk.planes["mass"][1:dom.nz + 1, 1:dom.ny + 1, :])
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(mass))
+    f_d, _ = plan(dom, KERN, positions=pos, strategy="xpencil").execute(
+        state)
+    f_p, _ = plan(dom, KERN, positions=pos, strategy="xpencil",
+                  layout="packed").execute(state)
+    np.testing.assert_array_equal(np.asarray(f_p), np.asarray(f_d))
+
+
+# ---------------------------------------------------------------------------
+# the row_cap replan contract
+# ---------------------------------------------------------------------------
+
+def test_row_cap_overflow_detected_and_replanned():
+    dom, pos = _blob()
+    state = ParticleState(pos)
+    f_d, _ = plan(dom, KERN, positions=pos, strategy="xpencil").execute(
+        state)
+
+    p0 = plan(dom, KERN, positions=pos, strategy="xpencil",
+              layout="packed", row_cap=8)
+    assert p0.check_overflow(state)
+    (f1, _), p1 = p0.execute_or_replan(state)
+    assert p1.row_cap > p0.row_cap
+    assert p1.m_c == p0.m_c                       # only row_cap grew
+    assert p1.max_active == p0.max_active
+    assert not p1.check_overflow(state)
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f_d))
+
+    # an overflowed bound really does drop particles (the thing replan
+    # protects against): forces under the tiny bound are wrong
+    f_bad, _ = p0.execute(state)
+    assert not np.array_equal(np.asarray(f_bad), np.asarray(f_d))
+
+
+def test_suggest_row_cap_covers_periodic_x_ghosts():
+    dom, pos = _blob()
+    counts = cell_counts(dom, pos)
+    mx = int(jnp.max(padded_row_counts(dom, counts)))
+    assert suggest_row_cap(dom, pos) >= mx
+    assert suggest_row_cap(dom, pos) % 8 == 0     # sublane aligned
+
+    # a 1-cell-thick periodic X axis counts its single cell three times
+    dom1 = Domain(box=(1.0, 3.0, 3.0), ncells=(1, 3, 3), cutoff=1.0,
+                  periodic=(True, False, False))
+    pos1 = jnp.full((5, 3), 0.5)
+    rows = padded_row_counts(dom1, cell_counts(dom1, pos1))
+    assert int(jnp.max(rows)) == 15
+
+
+def test_packed_plan_validation():
+    dom, pos = _blob()
+    with pytest.raises(ValueError, match="packed"):
+        plan(dom, KERN, positions=pos, strategy="par_part",
+             layout="packed")
+    with pytest.raises(ValueError, match="row_cap|positions"):
+        plan(dom, KERN, m_c=16, strategy="xpencil", layout="packed")
+    with pytest.raises(ValueError, match="layout"):
+        plan(dom, KERN, positions=pos, strategy="xpencil", layout="csr")
+    assert supports_layout("reference", "xpencil", "packed")
+    assert supports_layout("pallas", "xpencil", "packed")
+    assert not supports_layout("reference", "cell_dense", "packed")
+    assert not supports_layout("pallas", "allin", "packed")
+    assert supports_compact("reference", "xpencil", "packed")
+    assert supports_compact("pallas", "xpencil", "packed")
+
+
+def test_packed_plans_hash_and_trace_separately():
+    dom, pos = _blob()
+    pd = plan(dom, KERN, positions=pos, strategy="xpencil")
+    pp = plan(dom, KERN, positions=pos, strategy="xpencil",
+              layout="packed")
+    assert pd != pp and hash(pd) != hash(pp)
+    pp2 = plan(dom, KERN, positions=pos, strategy="xpencil",
+               layout="packed")
+    assert pp == pp2                              # same measured bound
+
+
+def test_full_pencil_occupancy_identity():
+    dom = Domain.cubic(3, cutoff=1.0)
+    occ = full_pencil_occupancy(dom)
+    np.testing.assert_array_equal(np.asarray(occ.active), np.arange(9))
+    assert int(occ.n_active) == 9 and occ.max_active == 9
+    idx = np.asarray(occ.scatter_indices())
+    np.testing.assert_array_equal(idx, np.arange(9))   # no padding to drop
+
+
+# ---------------------------------------------------------------------------
+# traffic model + autotuner layout axis
+# ---------------------------------------------------------------------------
+
+def test_traffic_packed_cost_scales_with_ppc():
+    dom = Domain.cubic(8, cutoff=1.0)
+    dense = traffic.candidate_cost(dom, 16, 2.0, "xpencil")
+    packed = traffic.candidate_cost(dom, 16, 2.0, "xpencil",
+                                    layout="packed")
+    assert packed < dense                         # ppc 2 vs m_c 16 slots
+    # full cells: the byte factor clips at 1 — packing never *costs* bytes
+    dense_full = traffic.candidate_cost(dom, 16, 16.0, "xpencil")
+    packed_full = traffic.candidate_cost(dom, 16, 16.0, "xpencil",
+                                         layout="packed")
+    np.testing.assert_allclose(packed_full, dense_full, rtol=1e-6)
+    # the layout and compact axes compose multiplicatively
+    both = traffic.candidate_cost(dom, 16, 2.0, "xpencil", compact=True,
+                                  fill=0.5, layout="packed")
+    np.testing.assert_allclose(both, packed * 0.5, rtol=1e-6)
+
+
+def test_autotune_packed_twins_and_safety():
+    from repro.core import autotune as at
+    dom, pos = _blob()
+    cands = at.enumerate_candidates(dom, [suggest_m_c(dom, pos)],
+                                    backends=("reference",),
+                                    batch_sizes=(32,),
+                                    strategies=("xpencil", "par_part"))
+    cands = list(cands) + at.compact_twins(dom, pos, cands)
+    twins = at.packed_twins(dom, pos, cands)
+    # one packed twin per (dense, compact) xpencil candidate; none for
+    # par_part (no packed path)
+    assert {("xpencil", False), ("xpencil", True)} == {
+        (c.strategy, c.compact) for c in twins}
+    assert all(c.layout == "packed" and c.row_cap
+               and c.row_cap % 8 == 0 for c in twins)
+    # candidate json roundtrip keeps the layout axis
+    c = twins[0]
+    assert at.Candidate.from_json(c.to_json()) == c
+    # a too-small cached row_cap must be re-measured, not trusted
+    res = at.tune(dom, KERN, pos, strategies=("xpencil",), top_k=4,
+                  reps=2, budget_s=0.01, batch_sizes=(32,),
+                  candidates=[dataclasses.replace(c, row_cap=8),
+                              dataclasses.replace(c, layout="dense",
+                                                  row_cap=None)])
+    assert res.candidate.layout == "dense"        # the unsafe twin filtered
+
+
+def test_autotune_packed_candidate_requires_row_cap():
+    from repro.core import autotune as at
+    dom, pos = _blob()
+    bad = at.Candidate("xpencil", "reference", 32,
+                       suggest_m_c(dom, pos), layout="packed")
+    with pytest.raises(ValueError, match="row_cap"):
+        at.tune(dom, KERN, pos, candidates=[bad], use_cache=False)
+
+
+# ---------------------------------------------------------------------------
+# committed benchmark acceptance
+# ---------------------------------------------------------------------------
+
+def test_committed_bench_packed_meets_acceptance():
+    """The committed BENCH_packed.json must contain a ppc <= 2 gaussian-blob
+    case with >= 1.5x measured packed-over-compacted speedup (ISSUE 5)."""
+    import json
+    import pathlib
+    path = pathlib.Path(__file__).parent.parent / "benchmarks" / \
+        "BENCH_packed.json"
+    records = json.loads(path.read_text())
+    wins = [r for r in records
+            if r["strategy"] == "xpencil_packed"
+            and r.get("ppc", 99) <= 2
+            and r.get("speedup_vs_compact", 0.0) >= 1.5]
+    assert wins, ("no committed ppc<=2 case with >=1.5x packed speedup "
+                  f"in {path}")
+    assert all(r.get("layout") == "packed" for r in records
+               if r["strategy"] == "xpencil_packed")

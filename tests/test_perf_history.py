@@ -80,3 +80,32 @@ def test_fastest_duplicate_wins_within_snapshot(tmp_path):
     _snap(tmp_path, "BENCH_001.json", [_rec("a", 30.0), _rec("a", 12.0)])
     snaps = PH.collect(tmp_path)
     assert PH.series(snaps)[("a", "xpencil", "reference")] == [12.0]
+
+
+def test_layout_column_distinguishes_dense_compact_packed(tmp_path):
+    """The trajectory renders an execution-layout tag per series: from the
+    record's ``layout`` field when present, inferred from the strategy
+    suffix for records predating the tag."""
+    tagged = dict(_rec("p", 7.0, strategy="xpencil_packed"),
+                  layout="packed")
+    _snap(tmp_path, "BENCH_001.json",
+          [_rec("a", 10.0),                                  # dense, untagged
+           _rec("c", 5.0, strategy="xpencil_compact"),       # inferred
+           tagged])
+    snaps = PH.collect(tmp_path)
+    ss = PH.series(snaps)
+    assert PH.layout_of(snaps, ("a", "xpencil", "reference")) == "dense"
+    assert PH.layout_of(snaps, ("c", "xpencil_compact",
+                                "reference")) == "compact"
+    assert PH.layout_of(snaps, ("p", "xpencil_packed",
+                                "reference")) == "packed"
+    out = PH.format_table(snaps, ss)
+    assert out.splitlines()[1].endswith(",layout")
+    assert any(line.endswith(",packed") for line in out.splitlines())
+    # --json payload carries the tag too
+    import json as _json
+    rc = PH.main([str(tmp_path), "--json", str(tmp_path / "s.json")])
+    assert rc == 0
+    payload = _json.loads((tmp_path / "s.json").read_text())
+    by_case = {s["case"]: s["layout"] for s in payload["series"]}
+    assert by_case == {"a": "dense", "c": "compact", "p": "packed"}

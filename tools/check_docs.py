@@ -1,0 +1,98 @@
+"""Docs gate: dead intra-repo links + runnable README quickstart.
+
+Two checks, both used by the CI docs job and unit-tested in
+``tests/test_docs.py``:
+
+  ``--links FILE...``       every relative markdown link target
+                            (``[text](path)`` / ``[text](path#anchor)``)
+                            must exist on disk. External links
+                            (http/https/mailto) are skipped — the gate is
+                            about *intra-repo* rot, not the internet.
+  ``--quickstart FILE``     extract the first fenced ```python block and
+                            ``exec`` it — the README's quickstart must
+                            actually run, not just read well.
+
+Exit code 0 when every requested check passes, 1 otherwise, with one line
+per failure on stderr.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+from typing import List, Tuple
+
+# [text](target) — target captured up to the closing paren; images too
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+_PY_BLOCK_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def markdown_links(path: pathlib.Path) -> List[str]:
+    """All link targets in a markdown file (anchors kept)."""
+    return _LINK_RE.findall(path.read_text())
+
+
+def check_links(paths: List[pathlib.Path]) -> List[Tuple[str, str]]:
+    """-> [(file, broken target)] for every relative link whose file part
+    does not exist (resolved against the linking file's directory)."""
+    broken: List[Tuple[str, str]] = []
+    for path in paths:
+        for target in markdown_links(path):
+            if target.startswith(_EXTERNAL):
+                continue
+            file_part = target.split("#", 1)[0]
+            if not file_part:          # pure in-page anchor (#section)
+                continue
+            if not (path.parent / file_part).exists():
+                broken.append((str(path), target))
+    return broken
+
+
+def first_python_block(path: pathlib.Path) -> str:
+    """The first fenced ```python block of a markdown file."""
+    m = _PY_BLOCK_RE.search(path.read_text())
+    if not m:
+        raise ValueError(f"{path}: no ```python block found")
+    return m.group(1)
+
+
+def run_quickstart(path: pathlib.Path) -> None:
+    """Exec the first python block (raises on failure)."""
+    code = first_python_block(path)
+    exec(compile(code, f"{path}:quickstart", "exec"), {"__name__": "__qs__"})
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--links", nargs="+", metavar="FILE", default=[],
+                    help="markdown files whose relative links must resolve")
+    ap.add_argument("--quickstart", metavar="FILE", default=None,
+                    help="markdown file whose first ```python block must run")
+    args = ap.parse_args(argv)
+
+    rc = 0
+    if args.links:
+        broken = check_links([pathlib.Path(p) for p in args.links])
+        for src, target in broken:
+            print(f"check_docs: DEAD LINK {target!r} in {src}",
+                  file=sys.stderr)
+        if broken:
+            rc = 1
+        else:
+            print(f"check_docs: links OK in {len(args.links)} file(s)")
+    if args.quickstart:
+        try:
+            run_quickstart(pathlib.Path(args.quickstart))
+            print(f"check_docs: quickstart OK ({args.quickstart})")
+        except Exception as e:  # noqa: BLE001 — report, fail the gate
+            print(f"check_docs: QUICKSTART FAILED ({args.quickstart}): "
+                  f"{e!r}", file=sys.stderr)
+            rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())
