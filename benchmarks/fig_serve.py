@@ -1,0 +1,207 @@
+"""Serving figure: open-loop latency/throughput of the batching front door.
+
+Drives :class:`repro.serve.ServingEngine` with a synthetic open-loop
+workload: Poisson arrivals (seeded PRNG — the schedule is reproducible)
+over a request mix sampled from the scenario family, each request its own
+``(N, scenario)`` draw. Arrivals run on a VirtualClock — the schedule is
+simulated, but every dispatched batch advances the clock by its *measured*
+wall time, so queueing and service compose into honest latencies on any
+container.
+
+Two committed mixes:
+
+* ``uniform``  — homogeneous scenes, N drawn from two adjacent shape
+  classes (the steady-state best case: few classes, high batch fill).
+* ``clustered`` — skewed N distribution (power-law-ish over four classes)
+  and inhomogeneous scenes (blobs, two-phase droplets), the shape-class
+  fragmentation stress case.
+
+Per mix the engine is warmed on one full pass (plans built, executors
+traced, autotune winners cached), then re-measured on a fresh clock +
+fresh metrics; the steady-state pass asserts **zero recompiles** via the
+core counters. Before anything is timed, a parity gate executes a probe
+request per shape class and compares the engine's response bit-for-bit
+against an unbatched ``plan.execute`` of the same state — a serving tier
+that changed answers would be worse than a slow one.
+
+``--json PATH`` writes BENCH_*.json perf records (us_per_call = mean
+total latency; rps / p50_ms / p99_ms / batch_fill extras); the committed
+``benchmarks/BENCH_serve.json`` is this module's output on the reference
+container.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from repro.core import Domain, ParticleState, scenarios
+from repro.core import api, autotune as at
+from repro.serve import ServeMetrics, ServingEngine, VirtualClock, classify
+
+from .common import bench_record, write_bench_json
+
+# Each mix: (name, [(weight, n, scenario knobs), ...]).  N values straddle
+# shape-class boundaries on purpose: 50/60 share the n_cap-64 class,
+# 100/200/250 spread across 128/256.
+MIXES = [
+    ("uniform", [
+        (0.5, 50, dict(name="uniform")),
+        (0.3, 60, dict(name="uniform")),
+        (0.2, 100, dict(name="uniform")),
+    ]),
+    ("clustered", [
+        (0.55, 50, dict(name="gaussian_blob", sigma_frac=0.15)),
+        (0.25, 100, dict(name="two_phase", droplet_frac=0.7,
+                         radius_frac=0.2)),
+        (0.15, 200, dict(name="gaussian_blob", sigma_frac=0.10)),
+        (0.05, 250, dict(name="uniform")),
+    ]),
+]
+
+
+def _sample_requests(dom: Domain, mix, n_requests: int, rate: float,
+                     seed: int):
+    """The open-loop schedule: (arrival_time, state) pairs, Poisson
+    arrivals at ``rate`` req/s, mix sampled by weight — all from one
+    seeded PRNG so every run replays the identical workload."""
+    rng = np.random.default_rng(seed)
+    weights = np.array([w for w, _, _ in mix], float)
+    weights /= weights.sum()
+    t = 0.0
+    out = []
+    for i in range(n_requests):
+        t += rng.exponential(1.0 / rate)
+        _, n, knobs = mix[rng.choice(len(mix), p=weights)]
+        key = jax.random.PRNGKey(int(rng.integers(1 << 30)))
+        pos = scenarios.sample(domain=dom, key=key, n=n, **knobs)
+        out.append((t, ParticleState(pos)))
+    return out
+
+
+def _drive(eng: ServingEngine, dom: Domain, requests) -> None:
+    clock = eng.clock
+    for t_arrival, state in requests:
+        clock.advance_to(t_arrival)
+        eng.poll()                       # dispatch overdue buckets first
+        eng.submit(dom, state)
+    clock.advance(eng.max_wait)
+    eng.flush()
+
+
+def _parity_gate(eng: ServingEngine, dom: Domain, requests) -> bool:
+    """One probe per shape class through the warm engine, checked
+    bit-for-bit against the unbatched reference executor."""
+    probes = {}
+    for _, state in requests:
+        sc = classify(dom, eng.kernel, state.positions.shape[0],
+                      tuple(state.fields), eng.min_n_cap)
+        probes.setdefault(sc, state)
+    ok = True
+    for sc, state in probes.items():
+        rid = eng.submit(dom, state)
+        eng.flush()
+        resp = {r.req_id: r for r in eng.take_responses()}[rid]
+        f_ref, u_ref = eng.class_plan(sc).execute(state)
+        if not (np.array_equal(np.asarray(resp.forces), np.asarray(f_ref))
+                and np.array_equal(np.asarray(resp.potential),
+                                   np.asarray(u_ref))):
+            print(f"fig_serve: {sc.label()}: batched response DIVERGED "
+                  "from plan.execute — not timing a wrong answer",
+                  file=sys.stderr)
+            ok = False
+    return ok
+
+
+def run(csv: bool = True, json_path: Optional[str] = None,
+        record_sink: Optional[List[dict]] = None, division: int = 4,
+        n_requests: int = 200, rate: float = 200.0, max_batch: int = 8,
+        seed: int = 0) -> List[dict]:
+    dom = Domain.cubic(division, cutoff=1.0)
+    rows: List[dict] = []
+    records: List[dict] = []
+    if csv:
+        print("mix,rps,p50_ms,p99_ms,batch_fill,recompiles")
+    for mix_name, mix in MIXES:
+        requests = _sample_requests(dom, mix, n_requests, rate, seed)
+        eng = ServingEngine(max_batch=max_batch, max_wait=2.0 / rate,
+                            max_queue=4 * n_requests)
+
+        # warmup: drive once (plans + autotune winners), then prewarm
+        # every (class, batch-size) executor shape the dispatcher could
+        # form — bucket composition varies with service time, and an
+        # untraced part-full batch would be a steady-state recompile
+        _drive(eng, dom, requests)
+        eng.take_responses()
+        probes = {}
+        for _, state in requests:
+            sc = classify(dom, eng.kernel, state.positions.shape[0],
+                          tuple(state.fields), eng.min_n_cap)
+            probes.setdefault(sc, state)
+        for state in probes.values():
+            eng.prewarm(dom, state)
+        if not _parity_gate(eng, dom, requests):
+            continue
+
+        # steady-state pass: fresh clock + metrics, warm executors
+        eng.clock = VirtualClock()
+        eng.metrics = ServeMetrics()
+        rc0, tr0 = api.recompile_count(), at.timing_run_count()
+        _drive(eng, dom, requests)
+        eng.take_responses()
+        snap = eng.metrics.snapshot()
+        if (api.recompile_count() != rc0 or at.timing_run_count() != tr0
+                or snap["served"] != n_requests):
+            print(f"fig_serve: {mix_name}: steady state violated "
+                  f"(recompiles={api.recompile_count() - rc0}, "
+                  f"timing_runs={at.timing_run_count() - tr0}, "
+                  f"served={snap['served']}/{n_requests}) — not recording",
+                  file=sys.stderr)
+            continue
+
+        total = snap["total_latency"]
+        row = {"mix": mix_name, "rps": snap["rps"],
+               "p50_ms": total["p50_s"] * 1e3,
+               "p99_ms": total["p99_s"] * 1e3,
+               "batch_fill": snap["batch_fill"],
+               "batches": snap["batches"], "served": snap["served"]}
+        rows.append(row)
+        records.append(dict(
+            bench_record(f"serve/{mix_name}", "serve", "reference",
+                         total["mean_s"], snap["served"]),
+            rps=row["rps"], p50_ms=row["p50_ms"], p99_ms=row["p99_ms"],
+            batch_fill=row["batch_fill"], max_batch=max_batch,
+            arrival_rate=rate))
+        if csv:
+            print(f"serve/{mix_name},{row['rps']:.1f},"
+                  f"{row['p50_ms']:.2f},{row['p99_ms']:.2f},"
+                  f"{row['batch_fill']:.3f},0")
+    if json_path:
+        write_bench_json(json_path, records)
+    if record_sink is not None:
+        record_sink.extend(records)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--division", type=int, default=4,
+                    help="cells per axis")
+    ap.add_argument("--requests", type=int, default=200,
+                    help="requests per mix")
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="Poisson arrival rate (req/s, virtual)")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write BENCH_*.json perf records to PATH")
+    args = ap.parse_args()
+    run(division=args.division, n_requests=args.requests, rate=args.rate,
+        max_batch=args.max_batch, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

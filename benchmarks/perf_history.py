@@ -88,6 +88,21 @@ def layout_of(snapshots: List[Tuple[str, Dict[Key, dict]]],
     return _infer_layout(key[1])
 
 
+def serving_of(snapshots: List[Tuple[str, Dict[Key, dict]]],
+               key: Key) -> Tuple[str, str]:
+    """Serving-tier columns of a series: the latest record's throughput
+    (``rps``) and tail latency (``p99_ms``) extras, as rendered strings.
+    Non-serving records (no ``rps`` field) render as ``-`` so the columns
+    stay aligned across the whole table."""
+    for _, recs in reversed(snapshots):
+        rec = recs.get(key)
+        if rec is not None and "rps" in rec:
+            p99 = rec.get("p99_ms")
+            return (f"{rec['rps']:.1f}",
+                    "-" if p99 is None else f"{p99:.2f}")
+    return "-", "-"
+
+
 def _infer_layout(strategy: str) -> str:
     if strategy.endswith("_packed"):
         return "packed"
@@ -117,15 +132,16 @@ def format_table(snapshots: List[Tuple[str, Dict[Key, dict]]],
     lines = [f"# {len(snapshots)} snapshots: "
              + " -> ".join(label for label, _ in snapshots),
              "case,strategy,backend,first_us,last_us,delta_pct,trajectory,"
-             "layout"]
+             "rps,p99_ms,layout"]
     for key, vals in ss.items():
         present = [(i, v) for i, v in enumerate(vals) if v is not None]
         if not present:
             continue
         first, last = present[0][1], present[-1][1]
         delta = (last / first - 1.0) * 100.0 if first > 0 else float("inf")
+        rps, p99 = serving_of(snapshots, key)
         lines.append(f"{key[0]},{key[1]},{key[2]},{first:.1f},{last:.1f},"
-                     f"{delta:+.1f}%,{sparkline(vals)},"
+                     f"{delta:+.1f}%,{sparkline(vals)},{rps},{p99},"
                      f"{layout_of(snapshots, key)}")
     return "\n".join(lines)
 
@@ -155,6 +171,8 @@ def main(argv=None) -> int:
             "snapshots": [label for label, _ in snapshots],
             "series": [{"case": k[0], "strategy": k[1], "backend": k[2],
                         "layout": layout_of(snapshots, k),
+                        "rps": serving_of(snapshots, k)[0],
+                        "p99_ms": serving_of(snapshots, k)[1],
                         "us_per_call": v} for k, v in ss.items()],
         }
         with open(args.json, "w") as f:

@@ -8,6 +8,7 @@
   fig8/*      arithmetic-intensity sweep (paper Fig. 8)
   sparse/*    compacted-schedule speedup vs fill fraction (clustered scenes)
   packed/*    packed-row (CSR) layout speedup vs particles per cell
+  serve/*     serving-tier open-loop latency/throughput (batching front door)
   halo/*      distributed-backend weak scaling (smoke: whatever devices
               this process sees; full sweeps via ``benchmarks.fig_halo``)
   prefix/*    §6 prefix-sum op/barrier counts + timing
@@ -37,8 +38,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (autotune_bench, fig6_speedup, fig8_flop_sweep,
-                   fig_halo, fig_packed, fig_sparse, lm_roofline,
-                   prefix_bench, table1_timing, traffic_model)
+                   fig_halo, fig_packed, fig_serve, fig_sparse,
+                   lm_roofline, prefix_bench, table1_timing,
+                   traffic_model)
 
     print("# traffic model (paper Fig. 7 analogue)", flush=True)
     traffic_model.run()
@@ -70,6 +72,9 @@ def main() -> None:
     print("# halo: distributed-backend smoke (local device set)",
           flush=True)
     fig_halo.run(record_sink=records, division=4, ppc=3)
+    print("# serve: batching front door, open-loop workload", flush=True)
+    fig_serve.run(record_sink=records, n_requests=60 if not args.full
+                  else 200)
     print("# autotune: measured winner vs model pick", flush=True)
     autotune_bench.run(record_sink=records)
     if args.json:

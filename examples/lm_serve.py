@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.models import model as M
-from repro.train.serve import generate
+from repro.models.serving import generate
 
 
 def main():

@@ -10,8 +10,10 @@ and ``compute_interactions`` are compatibility shims over it.
 from .domain import Domain
 from .api import (InteractionPlan, ParticleState, active_unit_count,
                   backend_matrix, choose_strategy, clear_executor_cache,
-                  dispatch_count, plan, register_backend, suggest_max_active,
-                  suggest_row_cap, supports_compact, supports_layout)
+                  dispatch_count, executor_cache_info, plan, recompile_count,
+                  register_backend, reset_counters, set_executor_cache_size,
+                  suggest_max_active, suggest_row_cap, supports_compact,
+                  supports_layout)
 from .binning import (CellBins, Occupancy, PackedRows, bin_particles,
                       dense_to_particles, full_pencil_occupancy,
                       gather_pencil_rows, gather_to_particles,
@@ -46,7 +48,9 @@ __all__ = [
     "pencil_occupancy", "subbox_occupancy",
     "InteractionPlan", "ParticleState", "plan", "register_backend",
     "backend_matrix", "choose_strategy", "clear_executor_cache",
-    "dispatch_count", "active_unit_count", "suggest_max_active",
+    "dispatch_count", "recompile_count", "reset_counters",
+    "executor_cache_info", "set_executor_cache_size",
+    "active_unit_count", "suggest_max_active",
     "suggest_row_cap", "supports_compact", "supports_layout",
     "tune", "TuneResult", "time_fn", "autotune",
     "CellListEngine", "compute_interactions", "suggest_m_c",

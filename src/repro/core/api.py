@@ -33,8 +33,8 @@ compatibility shims over this module.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-import functools
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
@@ -67,10 +67,19 @@ class ParticleState:
     ``fields`` maps names ("vx", "mass", ...) to (N,) arrays that are binned
     alongside x/y/z so schedules can read them per slot. The dict's *keys*
     are static (part of the trace); the values are traced.
+
+    ``valid`` is an optional (N,) bool mask marking padding rows (False):
+    those rows are excluded from binning, interact with nothing, and every
+    bound probe ignores them. This is how the serving tier
+    (``repro.serve``) pads heterogeneous request sizes up to one shape
+    class without perturbing a single real interaction — executing a
+    padded, masked state is bit-identical (for the real rows) to executing
+    the unpadded state.
     """
 
     positions: Array                                   # (N, 3)
     fields: Dict[str, Array] = dataclasses.field(default_factory=dict)
+    valid: Optional[Array] = None                      # (N,) bool, None=all
 
     @property
     def n(self) -> int:
@@ -294,8 +303,10 @@ class InteractionPlan:
         (the canonical statement) and ARCHITECTURE.md. For halo plans the
         per-shard flags are reduced (max) across shards, keeping the
         safety contract global; everything derives from one binning
-        pass."""
-        counts = _cell_counts(self.domain, state.positions)
+        pass. Padding rows (``state.valid`` False) are excluded — a padded
+        request must never trigger a replan its real particles don't
+        need."""
+        counts = _cell_counts(self.domain, state.positions, state.valid)
         if int(jnp.max(counts)) > self.m_c:
             return True
         if self.layout == "packed":
@@ -348,18 +359,22 @@ class InteractionPlan:
         their inputs: the allin sub-box is recomputed whenever ``m_c``
         changes, and a compacted allin re-measures ``max_active`` against
         the new tiling. ``row_cap`` depends only on the positions, so it
-        never moves when ``m_c`` does."""
-        from .engine import suggest_m_c
+        never moves when ``m_c`` does. Padding rows (``state.valid``
+        False) are excluded from every measure, exactly as in
+        ``check_overflow``."""
+        counts = _cell_counts(self.domain, state.positions, state.valid)
         m_c = self.m_c
-        if int(_max_cell_count(self.domain, state.positions)) > self.m_c:
-            measured = suggest_m_c(self.domain, state.positions, slack=slack,
-                                   align=align)
+        mx_cell = int(jnp.max(counts))
+        if mx_cell > self.m_c:
+            # suggest_m_c's slack-and-align contract, applied to the
+            # mask-aware counts of this one binning pass
+            measured = -(-max(1, int(mx_cell * slack + 0.999)) // align
+                         ) * align
             grow = -(-(self.m_c + 1) // align) * align  # aligned, > m_c
             m_c = max(measured, grow)
         box = self.box if m_c == self.m_c else None
         row_cap = self.row_cap
         if self.layout == "packed":
-            counts = _cell_counts(self.domain, state.positions)
             mx_row = int(jnp.max(padded_row_counts(self.domain, counts)))
             if mx_row > row_cap:
                 grow = -(-(row_cap + 1) // align) * align
@@ -380,11 +395,11 @@ class InteractionPlan:
                 # be measured against the grid that will actually run
                 box = _allin_box(self.domain, m_c)
             n_act = active_unit_count(self.domain, state.positions,
-                                      self.strategy, box=box)
+                                      self.strategy, box=box, counts=counts)
             if n_act > max_active or box != self.box:
                 suggested = suggest_max_active(self.domain, state.positions,
                                                self.strategy, box=box,
-                                               align=align)
+                                               align=align, counts=counts)
                 max_active = max(suggested, n_act)
         return dataclasses.replace(self, m_c=m_c, box=box,
                                    max_active=max_active,
@@ -716,12 +731,15 @@ def n_units(domain: Domain, strategy: str = "xpencil",
 def suggest_max_active(domain: Domain, positions: Array,
                        strategy: str = "xpencil",
                        box: Optional[Tuple[int, int, int]] = None,
-                       slack: float = 1.25, align: int = 8) -> int:
+                       slack: float = 1.25, align: int = 8,
+                       counts: Optional[Array] = None) -> int:
     """One-off static ``max_active`` bound: measured active units with
     slack, rounded up to ``align``, clipped to the total unit count (a full
     bound degrades gracefully to dense coverage). The compacted-path
-    counterpart of ``suggest_m_c``."""
-    n_act = active_unit_count(domain, positions, strategy, box=box)
+    counterpart of ``suggest_m_c``. Pass precomputed per-cell ``counts``
+    to skip the binning pass (or to exclude masked padding rows)."""
+    n_act = active_unit_count(domain, positions, strategy, box=box,
+                              counts=counts)
     total = n_units(domain, strategy, box=box)
     bound = max(1, int(n_act * slack + 0.999))
     bound = -(-bound // align) * align
@@ -752,16 +770,43 @@ def suggest_row_cap(domain: Domain, positions: Array, slack: float = 1.25,
 # per jitted dispatch, not per traced system). Lets tests and benchmarks
 # assert that the batched path really amortizes dispatch — B systems through
 # ``execute_batch`` move this by 1, a Python loop moves it by B.
+#
+# Recompile accounting: incremented every time an executor *body* is traced
+# (the Python body of a jitted function runs at trace time only, so a
+# counter bump inside it counts traces, not calls). The serving tier's
+# steady-state guarantee — "a warm engine never recompiles" — is asserted
+# against this counter instead of scraping JAX internals.
 _dispatches = 0
+_recompiles = 0
 
 
 def dispatch_count() -> int:
     return _dispatches
 
 
+def recompile_count() -> int:
+    """Executor traces so far (see the accounting note above): moves only
+    when a jitted executor body is (re-)traced — a new plan, a new state
+    structure/shape, or an LRU-evicted executor being rebuilt."""
+    return _recompiles
+
+
+def reset_counters() -> None:
+    """Zero both the dispatch and the recompile counter (test/benchmark
+    bookkeeping; the executor caches themselves are untouched)."""
+    global _dispatches, _recompiles
+    _dispatches = 0
+    _recompiles = 0
+
+
 def _count_dispatch() -> None:
     global _dispatches
     _dispatches += 1
+
+
+def _count_recompile() -> None:
+    global _recompiles
+    _recompiles += 1
 
 
 def _impl(p: InteractionPlan) -> Callable:
@@ -771,18 +816,28 @@ def _impl(p: InteractionPlan) -> Callable:
         # distributed halo execution: partition -> shard_map(bin + ghost
         # exchange + local schedule) -> scatter-back (repro.dist.engine)
         from ..dist.engine import halo_impl
-        return halo_impl(p)
+        inner = halo_impl(p)
+
+        def halo_counted(state: ParticleState) -> Tuple[Array, Array]:
+            _count_recompile()           # runs at trace time only
+            return inner(state)
+        return halo_counted
 
     # a single-shard halo plan runs the inner backend directly — no mesh,
     # no exchange: the bit-identical single-device fallback
     backend = p.halo_inner if p.backend == "halo" else p.backend
 
     def impl(state: ParticleState) -> Tuple[Array, Array]:
+        _count_recompile()               # runs at trace time only
         if p.strategy == "naive_n2":
+            if state.valid is not None:
+                raise ValueError(
+                    "naive_n2 bypasses binning and cannot mask padded "
+                    "(valid=) rows; use a cell schedule")
             fx, fy, fz, pot = S.naive_n2(p.domain, state.positions, p.kernel)
             return jnp.stack([fx, fy, fz], axis=-1), pot
         bins = bin_particles(p.domain, state.positions, state.fields,
-                             m_c=p.m_c)
+                             m_c=p.m_c, valid=state.valid)
         if p.layout == "packed":
             packed = pack_rows(p.domain, bins, row_cap=p.row_cap)
             return get_backend(backend, p.strategy, "packed")(p, packed,
@@ -792,18 +847,71 @@ def _impl(p: InteractionPlan) -> Callable:
     return impl
 
 
-# Bounded LRU (not unbounded): the autotuner times throwaway candidate plans
-# by the dozen, and an unbounded cache would pin every one of their traces
-# (and their compiled executables) for the process lifetime.
-@functools.lru_cache(maxsize=128)
-def _executor(p: InteractionPlan, field_names: Tuple[str, ...]) -> Callable:
+_CacheInfo = collections.namedtuple(
+    "CacheInfo", ["hits", "misses", "maxsize", "currsize"])
+
+
+class _LRU:
+    """A ``functools.lru_cache`` stand-in whose capacity can be resized.
+
+    Same observable surface as the stdlib decorator (``cache_info()`` /
+    ``cache_clear()``), plus :meth:`resize` so tests can shrink the cache
+    and exercise eviction + re-admission without building 100+ plans. Kept
+    bounded (not unbounded) because the autotuner times throwaway
+    candidate plans by the dozen, and an unbounded cache would pin every
+    one of their traces (and compiled executables) for the process
+    lifetime.
+    """
+
+    def __init__(self, maxsize: int, build: Callable):
+        self._build = build
+        self._maxsize = maxsize
+        self._data: "collections.OrderedDict" = collections.OrderedDict()
+        self._hits = 0
+        self._misses = 0
+
+    def __call__(self, *key):
+        if key in self._data:
+            self._hits += 1
+            self._data.move_to_end(key)
+            return self._data[key]
+        self._misses += 1
+        value = self._build(*key)
+        self._data[key] = value
+        self._evict()
+        return value
+
+    def _evict(self) -> None:
+        while len(self._data) > self._maxsize:
+            self._data.popitem(last=False)
+
+    def resize(self, maxsize: int) -> None:
+        """Change the capacity; excess (least-recent) entries are evicted
+        immediately. Evicting a live executor only costs a retrace on its
+        next use — never correctness (tests/test_serve.py proves it)."""
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        self._maxsize = maxsize
+        self._evict()
+
+    def cache_info(self) -> "_CacheInfo":
+        return _CacheInfo(self._hits, self._misses, self._maxsize,
+                          len(self._data))
+
+    def cache_clear(self) -> None:
+        self._data.clear()
+        self._hits = 0
+        self._misses = 0
+
+
+def _build_executor(p: InteractionPlan,
+                    field_names: Tuple[str, ...]) -> Callable:
     """One jitted executor per (plan, state structure)."""
     return jax.jit(_impl(p))
 
 
-@functools.lru_cache(maxsize=32)
-def _batch_executor(p: InteractionPlan, field_names: Tuple[str, ...]
-                    ) -> Callable:
+def _build_batch_executor(p: InteractionPlan,
+                          field_names: Tuple[str, ...]) -> Callable:
     """One jitted executor per (plan, state structure) for stacked states."""
     impl = _impl(p)
     if p._multi_shard:
@@ -814,10 +922,34 @@ def _batch_executor(p: InteractionPlan, field_names: Tuple[str, ...]
     return jax.jit(jax.vmap(impl))
 
 
+_executor = _LRU(128, _build_executor)
+_batch_executor = _LRU(32, _build_batch_executor)
+
+
 def clear_executor_cache() -> None:
     """Drop every cached executor trace (single and batched)."""
     _executor.cache_clear()
     _batch_executor.cache_clear()
+
+
+def set_executor_cache_size(single: Optional[int] = None,
+                            batch: Optional[int] = None) -> None:
+    """Resize the executor LRUs (excess entries evicted immediately).
+
+    Serving deployments with many live shape classes can raise the bounds;
+    tests shrink them to force eviction. Eviction is a latency event, never
+    a correctness one — a rebuilt executor retraces the same plan."""
+    if single is not None:
+        _executor.resize(single)
+    if batch is not None:
+        _batch_executor.resize(batch)
+
+
+def executor_cache_info() -> Dict[str, "_CacheInfo"]:
+    """Observability hook: ``{"single": CacheInfo, "batch": CacheInfo}``
+    (hits / misses / maxsize / currsize, stdlib ``lru_cache`` schema)."""
+    return {"single": _executor.cache_info(),
+            "batch": _batch_executor.cache_info()}
 
 
 # --------------------------------------------------------------------------

@@ -64,6 +64,22 @@ _CACHE_FILE = "autotune_cache.json"
 DEFAULT_BATCH_SIZES = (32, 64, 128)
 DEFAULT_TOP_K = 8
 
+# Re-tune accounting: one bump per candidate actually timed with the
+# stopwatch (cache hits bump nothing). The serving tier's steady-state
+# guarantee — "a warm engine never re-times" — asserts against this
+# counter, the autotune analogue of ``core.api.recompile_count``.
+_timing_runs = 0
+
+
+def timing_run_count() -> int:
+    """Stopwatch candidate timings so far (0 across pure cache hits)."""
+    return _timing_runs
+
+
+def reset_timing_runs() -> None:
+    global _timing_runs
+    _timing_runs = 0
+
 
 # --------------------------------------------------------------------------
 # candidates
@@ -678,9 +694,11 @@ def tune(domain: Domain, kernel: Optional[PairKernel] = None,
     state = ParticleState(positions)
     timings: Dict[Candidate, float] = {}
     nreps: Dict[Candidate, int] = {}
+    global _timing_runs
     for cand in kept:
         try:
             p = cand.plan(domain, kernel, interpret)
+            _timing_runs += 1
             secs, r = time_fn(p.execute, state, reps=reps, budget_s=budget_s)
         except Exception as e:  # noqa: BLE001 — a broken candidate loses,
             print(f"autotune: candidate {cand} failed: {e!r}",  # not the run

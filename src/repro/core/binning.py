@@ -71,12 +71,16 @@ def padded_shape(domain: Domain, m_c: int) -> Tuple[int, int, int]:
     return (nz + 2, ny + 2, (nx + 2) * m_c)
 
 
-def cell_counts(domain: Domain, positions: Array) -> Array:
+def cell_counts(domain: Domain, positions: Array,
+                valid: Array | None = None) -> Array:
     """(n_cells,) particles per cell — the one binning pass every static
-    bound probe (``m_c``, shard loads, occupancy) derives from."""
+    bound probe (``m_c``, shard loads, occupancy) derives from. ``valid``
+    masks out padding rows (the serving tier pads requests to a shape
+    class; padded rows must not inflate any bound probe)."""
+    weights = (jnp.ones((positions.shape[0],), jnp.int32) if valid is None
+               else valid.astype(jnp.int32))
     return jax.ops.segment_sum(
-        jnp.ones((positions.shape[0],), jnp.int32),
-        domain.cell_ids(positions), num_segments=domain.n_cells)
+        weights, domain.cell_ids(positions), num_segments=domain.n_cells)
 
 
 def bin_particles(domain: Domain, positions: Array,

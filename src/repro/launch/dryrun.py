@@ -32,7 +32,7 @@ from ..configs import (ARCH_IDS, ModelConfig, SHAPES, cell_is_runnable,
 from ..dist import sharding as SH
 from ..models import model as M
 from ..optim.adam import AdamConfig, init_opt_state
-from ..train.serve import make_decode_step, make_prefill_step
+from ..models.serving import make_decode_step, make_prefill_step
 from ..train.trainer import make_train_step
 from . import roofline as RL
 from .mesh import make_production_mesh

@@ -1,0 +1,67 @@
+"""LM serving helpers: batched prefill + decode loop (inference dry-run).
+
+``make_prefill_step`` / ``make_decode_step`` are the lowered entry points for
+the prefill_32k / decode_32k / long_500k cells; ``generate`` is the runnable
+greedy loop used by examples and tests (CPU, small configs).
+
+Lives under ``models/`` because it is model-shaped plumbing: the particle
+serving tier (``repro.serve``) owns the interaction front door, and this
+module's old home ``repro.train.serve`` remains as a deprecation shim.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import model as M
+
+Array = jnp.ndarray
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: Optional[int] = None
+                      ) -> Callable:
+    def prefill_step(params, batch: Dict[str, Array]):
+        extras = {k: v for k, v in batch.items() if k != "tokens"}
+        logits, cache = M.prefill(cfg, params, batch["tokens"],
+                                  max_len=max_len, **extras)
+        return logits[:, -1:], cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def step(params, cache, tokens: Array, cache_index: Array):
+        return M.decode_step(cfg, params, cache, tokens, cache_index)
+    return step
+
+
+def generate(cfg: ModelConfig, params, prompt: Array, n_tokens: int,
+             max_len: Optional[int] = None, **extras
+             ) -> Tuple[Array, Array]:
+    """Greedy generation. prompt (B, S) -> (tokens (B, n_tokens), logits)."""
+    b, s = prompt.shape
+    max_len = max_len or (s + n_tokens)
+    logits, cache = M.prefill(cfg, params, prompt, max_len=max_len, **extras)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    decode = jax.jit(make_decode_step(cfg))
+
+    if cfg.family in ("ssm", "hybrid"):
+        # state caches start empty: replay the prompt through decode steps
+        # (cheap: O(1) per token) so the state reflects the prefix.
+        cache = M.init_cache(cfg, b, max_len)
+        for t in range(s):
+            lg, cache = decode(params, cache, prompt[:, t:t + 1],
+                               jnp.int32(t))
+        tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+    outs = [tok]
+    idx = s
+    for _ in range(n_tokens - 1):
+        lg, cache = decode(params, cache, tok, jnp.int32(idx))
+        tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        outs.append(tok)
+        idx += 1
+    return jnp.concatenate(outs, axis=1), logits

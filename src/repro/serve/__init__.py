@@ -1,0 +1,23 @@
+"""Serving tier: continuous batching over the plan/execute API.
+
+A :class:`ServingEngine` is the front door for interaction requests of
+varying ``(N, grid, kernel, fields)``: each is normalized onto a padded
+:class:`ShapeClass`, bucketed with compatible requests, and dispatched
+through one jitted ``execute_batch`` call — keeping per-class plans and
+executors warm so steady-state traffic never recompiles or re-times.
+See ARCHITECTURE.md "Serving tier" for the shape-class anatomy and the
+admission/overflow state machine.
+"""
+
+from .bucketing import (MIN_N_CAP, ShapeClass, classify, pad_state,
+                        quantize_batch, quantize_n, split_batch,
+                        stack_states)
+from .engine import ADMISSION_POLICIES, Request, Response, ServingEngine
+from .metrics import LatencyStats, ServeMetrics, VirtualClock, percentile
+
+__all__ = [
+    "ADMISSION_POLICIES", "LatencyStats", "MIN_N_CAP", "Request",
+    "Response", "ServeMetrics", "ServingEngine", "ShapeClass",
+    "VirtualClock", "classify", "pad_state", "percentile",
+    "quantize_batch", "quantize_n", "split_batch", "stack_states",
+]

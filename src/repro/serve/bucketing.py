@@ -1,0 +1,161 @@
+"""Shape-class bucketing: normalize ragged requests onto a few jit shapes.
+
+The serving tier's whole compile-stability story lives here. An incoming
+request carries arbitrary ``(N, domain, kernel, fields)``; executing it
+directly would give every distinct N its own jit trace and the front door
+would recompile forever. Instead each request is normalized to a
+:class:`ShapeClass`:
+
+* ``n_cap`` — N rounded **up** to a power of two (floored at
+  ``MIN_N_CAP`` so tiny requests share one class instead of fragmenting
+  into 1/2/4/8...). Rows past the real N are padding: positions zero,
+  fields zero, ``ParticleState.valid`` False — ``bin_particles`` gives
+  them weight 0 and sorts them past every real cell, so padded execution
+  is bit-identical to unpadded (ARCHITECTURE.md "Serving tier").
+* the domain grid (cells + box) — binning shapes depend on it.
+* the kernel identity digest (``autotune._kernel_id``) — value-based, so
+  two kernels sharing a name but differing in FLOPs/params never share a
+  class (or its cached executor).
+* the sorted field-name tuple — field *keys* are static in the trace.
+
+Batches are padded the same way on the leading axis: B live requests are
+stacked and topped up to ``quantize_batch(B)`` fully-invalid rows, so the
+steady state sees one ``(B_cap, n_cap)`` shape per class and ``vmap``
+never retraces. Fully-invalid pad rows are safe: every slot weight is 0,
+bins come out empty, the kernel sees no pairs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from ..core.api import ParticleState
+from ..core.autotune import _kernel_id
+from ..core.domain import Domain
+from ..core.interactions import PairKernel
+
+__all__ = ["MIN_N_CAP", "ShapeClass", "classify", "pad_state",
+           "quantize_batch", "quantize_n", "stack_states", "split_batch"]
+
+# Smallest particle cap a class may quantize to. Keeps the long tail of
+# tiny requests (N = 3, 7, 12, ...) in ONE bucket — each extra class costs
+# a jit trace and an executor-cache slot, and padding 3 -> 64 rows is
+# cheaper than either.
+MIN_N_CAP = 64
+
+
+def _next_pow2(n: int) -> int:
+    if n < 1:
+        raise ValueError(f"need a positive size, got {n}")
+    return 1 << (n - 1).bit_length()
+
+
+def quantize_n(n: int, min_cap: int = MIN_N_CAP) -> int:
+    """Particle cap for a request of N rows: next power of two, floored at
+    ``min_cap``. Round-up bounds padding waste below 2x while collapsing
+    the unbounded space of Ns onto ~log2(N_max) classes."""
+    return max(int(min_cap), _next_pow2(int(n)))
+
+
+def quantize_batch(b: int, max_batch: int) -> int:
+    """Batch-slot count for b live requests: next power of two, capped at
+    ``max_batch``. Same retrace argument as :func:`quantize_n`, on the
+    leading axis."""
+    if b < 1:
+        raise ValueError(f"need a positive batch, got {b}")
+    return min(_next_pow2(int(b)), int(max_batch))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeClass:
+    """The bucketing key: everything that decides jit-trace compatibility.
+
+    Hashable and cheap to compare — the engine uses it as the dict key for
+    queues, plans, and metrics attribution. Two requests in the same class
+    are guaranteed to share one padded shape, one plan, one executor."""
+
+    domain: Domain
+    kernel_id: str
+    n_cap: int
+    field_names: Tuple[str, ...]
+
+    def label(self) -> str:
+        nx, ny, nz = self.domain.ncells
+        fields = ",".join(self.field_names) or "-"
+        return (f"{nx}x{ny}x{nz}/n{self.n_cap}/"
+                f"{self.kernel_id}/{fields}")
+
+
+def classify(domain: Domain, kernel: PairKernel, n: int,
+             field_names: Sequence[str],
+             min_cap: int = MIN_N_CAP) -> ShapeClass:
+    """The ShapeClass a request of ``n`` particles lands in."""
+    return ShapeClass(domain=domain, kernel_id=_kernel_id(kernel),
+                      n_cap=quantize_n(n, min_cap),
+                      field_names=tuple(sorted(field_names)))
+
+
+def pad_state(state: ParticleState, n_cap: int) -> ParticleState:
+    """Pad one request's state to ``n_cap`` rows with masked zeros.
+
+    Zero positions are safe *only* because the mask excludes them from
+    binning (an unmasked zero row would land in a real boundary cell —
+    ``Domain.cell_coords`` clips out-of-box points inward). Real rows keep
+    their original values bit-for-bit; an existing ``valid`` mask is
+    honored and extended."""
+    n = state.positions.shape[0]
+    if n > n_cap:
+        raise ValueError(f"state has {n} rows, class cap is {n_cap}")
+    pad = n_cap - n
+    base_valid = (state.valid if state.valid is not None
+                  else jnp.ones((n,), bool))
+    if pad == 0 and state.valid is not None:
+        return state
+    positions = jnp.pad(state.positions, ((0, pad), (0, 0)))
+    fields = {k: jnp.pad(v, ((0, pad),)) for k, v in state.fields.items()}
+    valid = jnp.pad(base_valid, ((0, pad),))  # pads with False
+    return ParticleState(positions=positions, fields=fields, valid=valid)
+
+
+def stack_states(states: Sequence[ParticleState], n_cap: int,
+                 b_cap: Optional[int] = None) -> ParticleState:
+    """Stack padded states into one batched ParticleState for
+    ``execute_batch``: positions ``(B_cap, n_cap, 3)``, fields
+    ``(B_cap, n_cap)``, valid ``(B_cap, n_cap)``. Slots past the live
+    requests are fully-invalid rows (all-False valid -> empty bins)."""
+    if not states:
+        raise ValueError("cannot stack an empty batch")
+    b_cap = len(states) if b_cap is None else int(b_cap)
+    if b_cap < len(states):
+        raise ValueError(f"{len(states)} states exceed batch cap {b_cap}")
+    padded = [pad_state(s, n_cap) for s in states]
+    names = {tuple(sorted(p.fields)) for p in padded}
+    if len(names) != 1:
+        raise ValueError(f"mixed field sets in one batch: {sorted(names)}")
+    n_ghost = b_cap - len(padded)
+    if n_ghost:
+        ghost = ParticleState(
+            positions=jnp.zeros((n_cap, 3), padded[0].positions.dtype),
+            fields={k: jnp.zeros((n_cap,), v.dtype)
+                    for k, v in padded[0].fields.items()},
+            valid=jnp.zeros((n_cap,), bool))
+        padded = padded + [ghost] * n_ghost
+    return ParticleState(
+        positions=jnp.stack([p.positions for p in padded]),
+        fields={k: jnp.stack([p.fields[k] for p in padded])
+                for k in padded[0].fields},
+        valid=jnp.stack([p.valid for p in padded]))
+
+
+def split_batch(forces: jnp.ndarray, potential: jnp.ndarray,
+                sizes: Sequence[int]) -> List[Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Un-batch ``execute_batch`` output back into per-request results,
+    trimming each to its request's true N (padding rows and ghost batch
+    slots are dropped on the floor)."""
+    out = []
+    for i, n in enumerate(sizes):
+        out.append((forces[i, :n], potential[i, :n]))
+    return out

@@ -1,0 +1,296 @@
+"""ServingEngine: the continuous-batching front door.
+
+Requests of varying ``(N, domain, kernel, fields)`` arrive one at a time;
+the engine normalizes each onto a :class:`~repro.serve.bucketing.ShapeClass`
+(padded N-cap + grid + kernel digest + field names), queues compatible
+requests together, and dispatches each bucket — when it fills to
+``max_batch`` or its oldest request has waited ``max_wait`` — through one
+jitted ``plan.execute_batch`` call. Per class it keeps a plan (built once
+from the first request, via the measured autotuner when ``autotune=True``)
+and relies on the core executor LRU to keep that plan's traced executor
+warm, so steady-state traffic performs **zero recompiles and zero autotune
+timing runs** — the guarantee ``tests/test_serve.py`` asserts via
+``core.recompile_count()`` / ``core.autotune.timing_run_count()``.
+
+Admission control bounds the queue: when ``max_queue`` requests are
+already waiting, policy ``"reject"`` refuses the newcomer and policy
+``"shed_oldest"`` evicts the longest-waiting request to admit it (both
+produce terminal Responses, counted in metrics). A request whose
+particles overflow the class plan's static bounds triggers a per-class
+replan (the :meth:`InteractionPlan.replan` contract) that replaces only
+that class's plan — other classes keep their warm executors.
+
+Time comes from an injectable clock (default: a fresh
+:class:`~repro.serve.metrics.VirtualClock`). Arrival timestamps are
+whatever the clock reads at ``submit``; each dispatch advances the clock
+by the *measured* wall time of the batched execution, so queue/dispatch/
+total latencies in :class:`~repro.serve.metrics.ServeMetrics` are honest
+even under a simulated arrival schedule (``benchmarks/fig_serve.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from ..core import api
+from ..core import autotune as at
+from ..core.api import InteractionPlan, ParticleState, plan as make_plan
+from ..core.domain import Domain
+from ..core.interactions import PairKernel, make_lennard_jones
+from .bucketing import (MIN_N_CAP, ShapeClass, classify, quantize_batch,
+                        split_batch, stack_states)
+from .metrics import ServeMetrics, VirtualClock
+
+__all__ = ["Request", "Response", "ServingEngine", "ADMISSION_POLICIES"]
+
+ADMISSION_POLICIES = ("reject", "shed_oldest")
+
+
+@dataclasses.dataclass
+class Request:
+    """One admitted unit of work, as tracked internally."""
+    req_id: int
+    shape_class: ShapeClass
+    state: ParticleState            # raw, unpadded (N rows)
+    kernel: PairKernel
+    t_submit: float
+
+
+@dataclasses.dataclass
+class Response:
+    """Terminal outcome of a request. ``status`` is ``"ok"`` (results
+    attached, trimmed to the request's true N), ``"rejected"`` (admission
+    refused — queue full under the reject policy) or ``"shed"`` (evicted
+    by shed_oldest after admission). Latencies are clock-seconds; None for
+    requests that never dispatched."""
+    req_id: int
+    status: str
+    forces: Optional[jax.Array] = None
+    potential: Optional[jax.Array] = None
+    shape_class: Optional[str] = None
+    queue_latency: Optional[float] = None
+    dispatch_latency: Optional[float] = None
+    total_latency: Optional[float] = None
+
+
+class ServingEngine:
+    """Continuous-batching front door over the plan/execute API.
+
+    Args:
+      kernel: default pair kernel for requests that don't bring their own.
+      max_batch: bucket dispatch threshold and upper batch-shape cap; live
+        batches are padded up to the next power of two below this, so the
+        steady state sees a handful of batch shapes per class, not one per
+        occupancy level.
+      max_queue: admission bound on the total number of waiting requests.
+      admission: ``"reject"`` (refuse the newcomer) or ``"shed_oldest"``
+        (evict the longest-waiting request to make room).
+      max_wait: clock-seconds a bucket's oldest request may wait before
+        ``poll()`` dispatches the bucket part-full.
+      autotune: build each class's plan with ``strategy="autotune"``
+        (measured winners, persisted in the on-disk cache) instead of the
+        analytical ``"auto"`` model.
+      clock: injectable time source (``() -> float``); defaults to a fresh
+        VirtualClock. Pass ``time.perf_counter`` for wall-clock serving.
+      min_n_cap: smallest shape-class particle cap (see bucketing).
+      plan_opts: extra keyword arguments forwarded to ``plan()``
+        (e.g. ``backend="pallas"``); ignored when ``autotune=True``.
+      tune_opts: extra keyword arguments forwarded to ``tune()`` when
+        ``autotune=True`` (e.g. ``budget_s=0.05``).
+    """
+
+    def __init__(self, kernel: Optional[PairKernel] = None, *,
+                 max_batch: int = 8, max_queue: int = 64,
+                 admission: str = "reject", max_wait: float = 0.05,
+                 autotune: bool = False,
+                 clock: Optional[Callable[[], float]] = None,
+                 min_n_cap: int = MIN_N_CAP,
+                 plan_opts: Optional[dict] = None,
+                 tune_opts: Optional[dict] = None):
+        if admission not in ADMISSION_POLICIES:
+            raise ValueError(f"unknown admission policy {admission!r}; "
+                             f"have {ADMISSION_POLICIES}")
+        if max_batch < 1 or max_queue < 1:
+            raise ValueError("max_batch and max_queue must be positive")
+        self.kernel = kernel or make_lennard_jones()
+        self.max_batch = int(max_batch)
+        self.max_queue = int(max_queue)
+        self.admission = admission
+        self.max_wait = float(max_wait)
+        self.autotune = bool(autotune)
+        self.clock = clock if clock is not None else VirtualClock()
+        self.min_n_cap = int(min_n_cap)
+        self.plan_opts = dict(plan_opts or {})
+        self.tune_opts = dict(tune_opts or {})
+        self.metrics = ServeMetrics()
+        self._queues: Dict[ShapeClass, List[Request]] = {}
+        self._plans: Dict[ShapeClass, InteractionPlan] = {}
+        self._kernels: Dict[str, PairKernel] = {}
+        self._responses: List[Response] = []
+        self._next_id = 0
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, domain: Domain, state: ParticleState,
+               kernel: Optional[PairKernel] = None) -> int:
+        """Admit one request; returns its ``req_id``. The outcome arrives
+        later as a :class:`Response` (drain with :meth:`take_responses`).
+        A full queue resolves per the admission policy: ``"reject"``
+        terminates the *newcomer* immediately; ``"shed_oldest"`` evicts
+        the longest-waiting admitted request instead. Admission may also
+        dispatch the request's bucket if it just filled."""
+        kernel = kernel or self.kernel
+        req_id = self._next_id
+        self._next_id += 1
+        now = self.clock()
+        self.metrics.note_submit(now)
+        if self._queued_total() >= self.max_queue:
+            if self.admission == "reject":
+                self.metrics.rejected += 1
+                self._responses.append(Response(req_id, "rejected"))
+                return req_id
+            self._shed_oldest()
+        sc = classify(domain, kernel, state.positions.shape[0],
+                      tuple(state.fields), self.min_n_cap)
+        self._kernels.setdefault(sc.kernel_id, kernel)
+        self._queues.setdefault(sc, []).append(
+            Request(req_id, sc, state, kernel, now))
+        if len(self._queues[sc]) >= self.max_batch:
+            self._dispatch(sc)
+        return req_id
+
+    def _queued_total(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def _shed_oldest(self) -> None:
+        sc, queue = min(((sc, q) for sc, q in self._queues.items() if q),
+                        key=lambda item: item[1][0].t_submit)
+        victim = queue.pop(0)
+        if not queue:
+            del self._queues[sc]
+        self.metrics.shed += 1
+        self._responses.append(Response(victim.req_id, "shed",
+                                        shape_class=sc.label()))
+
+    # -- dispatch ----------------------------------------------------------
+
+    def poll(self) -> int:
+        """Dispatch every bucket that is full or whose oldest request has
+        waited ``max_wait`` clock-seconds. Returns batches dispatched.
+        Call after advancing the clock (or on a timer under wall-clock)."""
+        now = self.clock()
+        due = [sc for sc, q in self._queues.items()
+               if len(q) >= self.max_batch
+               or (q and now - q[0].t_submit >= self.max_wait)]
+        for sc in due:
+            self._dispatch(sc)
+        return len(due)
+
+    def flush(self) -> int:
+        """Dispatch every non-empty bucket regardless of age or fill.
+        Returns batches dispatched."""
+        due = [sc for sc, q in self._queues.items() if q]
+        for sc in due:
+            self._dispatch(sc)
+        return len(due)
+
+    def take_responses(self) -> List[Response]:
+        """Drain and return all terminal responses produced so far."""
+        out, self._responses = self._responses, []
+        return out
+
+    def class_plan(self, sc: ShapeClass) -> Optional[InteractionPlan]:
+        """The current plan serving a shape class (None before its first
+        dispatch) — the reference executor for parity checks."""
+        return self._plans.get(sc)
+
+    def prewarm(self, domain: Domain, state: ParticleState,
+                kernel: Optional[PairKernel] = None) -> ShapeClass:
+        """Cold-start avoidance: given one representative request, build
+        the class's plan and trace its batched executor at **every**
+        quantized batch size up to ``max_batch``. After prewarming, no
+        bucket composition the dispatcher can form for this class — full,
+        part-full, or timeout-drained singleton — triggers a trace; the
+        steady state starts at request one. Returns the shape class."""
+        kernel = kernel or self.kernel
+        sc = classify(domain, kernel, state.positions.shape[0],
+                      tuple(state.fields), self.min_n_cap)
+        self._kernels.setdefault(sc.kernel_id, kernel)
+        if sc not in self._plans:
+            self._plans[sc] = self._build_plan(
+                sc, Request(-1, sc, state, kernel, self.clock()))
+        p = self._plans[sc]
+        if p.check_overflow(state):
+            p = p.replan(state)
+            self.metrics.replans += 1
+            self._plans[sc] = p
+        b = 1
+        while True:
+            cap = quantize_batch(b, self.max_batch)
+            jax.block_until_ready(
+                p.execute_batch(stack_states([state], sc.n_cap, cap)))
+            if cap >= self.max_batch:
+                return sc
+            b = cap + 1                  # next quantized size up
+
+    # -- internals ---------------------------------------------------------
+
+    def _build_plan(self, sc: ShapeClass,
+                    first: Request) -> InteractionPlan:
+        """Class plan from the first request's raw particles. Bounds are
+        measured with the replan contract's slack, so siblings in the
+        class usually fit without replanning; autotune winners persist in
+        the on-disk cache, so a re-created engine re-tunes nothing."""
+        if self.autotune:
+            result = at.tune(sc.domain, first.kernel,
+                             first.state.positions, **self.tune_opts)
+            self.metrics.autotune_cache_hits += int(result.cache_hit)
+            return result.plan
+        return make_plan(sc.domain, first.kernel,
+                         positions=first.state.positions,
+                         **self.plan_opts)
+
+    def _dispatch(self, sc: ShapeClass) -> None:
+        queue = self._queues.pop(sc)
+        rc0, tr0 = api.recompile_count(), at.timing_run_count()
+        if sc not in self._plans:
+            self._plans[sc] = self._build_plan(sc, queue[0])
+        p = self._plans[sc]
+        # Overflow safety net: grow this class's bounds to cover every
+        # request in the bucket (replacing only this class's plan — the
+        # new plan is a new executor-cache key; other classes stay warm).
+        for req in queue:
+            if p.check_overflow(req.state):
+                p = p.replan(req.state)
+                self.metrics.replans += 1
+        self._plans[sc] = p
+
+        b_cap = quantize_batch(len(queue), self.max_batch)
+        batched = stack_states([r.state for r in queue], sc.n_cap, b_cap)
+        t_dispatch = self.clock()
+        t0 = _time.perf_counter()
+        forces, potential = p.execute_batch(batched)
+        jax.block_until_ready((forces, potential))
+        elapsed = _time.perf_counter() - t0
+        if isinstance(self.clock, VirtualClock):
+            self.clock.advance(elapsed)
+        t_done = self.clock()
+
+        self.metrics.batches += 1
+        self.metrics.batch_fill.record(len(queue) / b_cap)
+        self.metrics.recompiles += api.recompile_count() - rc0
+        self.metrics.autotune_timing_runs += at.timing_run_count() - tr0
+        sizes = [r.state.positions.shape[0] for r in queue]
+        for req, (f, pot) in zip(queue, split_batch(forces, potential,
+                                                    sizes)):
+            self.metrics.note_served(req.t_submit, t_dispatch, t_done)
+            self._responses.append(Response(
+                req.req_id, "ok", forces=f, potential=pot,
+                shape_class=sc.label(),
+                queue_latency=t_dispatch - req.t_submit,
+                dispatch_latency=t_done - t_dispatch,
+                total_latency=t_done - req.t_submit))

@@ -1,6 +1,6 @@
 from .trainer import (cross_entropy, make_eval_step, make_loss_fn,
                       make_train_step)
-from .serve import generate, make_decode_step, make_prefill_step
+from ..models.serving import generate, make_decode_step, make_prefill_step
 
 __all__ = ["cross_entropy", "make_eval_step", "make_loss_fn",
            "make_train_step", "generate", "make_decode_step",

@@ -109,3 +109,18 @@ def test_layout_column_distinguishes_dense_compact_packed(tmp_path):
     payload = _json.loads((tmp_path / "s.json").read_text())
     by_case = {s["case"]: s["layout"] for s in payload["series"]}
     assert by_case == {"a": "dense", "c": "compact", "p": "packed"}
+
+
+def test_serving_columns_render_rps_and_p99(tmp_path):
+    """Serving-tier records (fig_serve) carry rps/p99_ms extras; the
+    trajectory renders them as columns, ``-`` for non-serving series."""
+    serving = dict(_rec("serve/uniform", 6000.0, strategy="serve"),
+                   rps=150.0, p99_ms=28.126)
+    _snap(tmp_path, "BENCH_001.json", [_rec("a", 10.0), serving])
+    snaps = PH.collect(tmp_path)
+    assert PH.serving_of(snaps, ("serve/uniform", "serve",
+                                 "reference")) == ("150.0", "28.13")
+    assert PH.serving_of(snaps, ("a", "xpencil", "reference")) == ("-", "-")
+    out = PH.format_table(snaps, PH.series(snaps))
+    assert out.splitlines()[1].endswith(",rps,p99_ms,layout")
+    assert any(",150.0,28.13," in line for line in out.splitlines())

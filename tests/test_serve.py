@@ -1,0 +1,436 @@
+"""Serving tier: shape-class bucketing, padded execution bit-identity,
+the steady-state zero-recompile/zero-retune guarantee, admission control,
+overflow replan isolation, executor-LRU behavior under many classes, and
+the packed execute_batch fast path."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Domain, ParticleState, clear_executor_cache,
+                        executor_cache_info, make_lennard_jones,
+                        make_low_flop, plan, recompile_count,
+                        reset_counters, set_executor_cache_size)
+from repro.core import api, autotune as at, scenarios
+from repro.serve import (MIN_N_CAP, Response, ServingEngine, ShapeClass,
+                         VirtualClock, classify, pad_state, percentile,
+                         quantize_batch, quantize_n, split_batch,
+                         stack_states)
+
+
+def _dom(division=4):
+    return Domain.cubic(division, cutoff=1.0)
+
+
+def _state(dom, n, seed=0, scenario="uniform", with_fields=False):
+    pos = scenarios.sample(scenario, dom, jax.random.PRNGKey(seed), n)
+    fields = {}
+    if with_fields:
+        fields["mass"] = jnp.abs(jax.random.normal(
+            jax.random.PRNGKey(seed + 7), (n,))) + 0.5
+    return ParticleState(pos, fields)
+
+
+def _assert_bitwise(a, b):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# bucketing
+# ---------------------------------------------------------------------------
+
+def test_quantize_n_rounds_up_with_floor():
+    assert quantize_n(3) == MIN_N_CAP
+    assert quantize_n(MIN_N_CAP) == MIN_N_CAP
+    assert quantize_n(MIN_N_CAP + 1) == 2 * MIN_N_CAP
+    assert quantize_n(1000) == 1024
+    with pytest.raises(ValueError):
+        quantize_n(0)
+
+
+def test_quantize_batch_pow2_capped():
+    assert quantize_batch(1, 8) == 1
+    assert quantize_batch(3, 8) == 4
+    assert quantize_batch(5, 8) == 8
+    assert quantize_batch(5, 6) == 6   # cap wins over pow2
+
+
+def test_classify_buckets_compatible_requests_together():
+    dom = _dom()
+    lj = make_lennard_jones()
+    a = classify(dom, lj, 50, ())
+    b = classify(dom, lj, 60, ())
+    assert a == b and hash(a) == hash(b)
+    # different kernel identity -> different class
+    assert classify(dom, make_low_flop(), 50, ()) != a
+    # different grid -> different class
+    assert classify(_dom(3), lj, 50, ()) != a
+    # different field set -> different class
+    assert classify(dom, lj, 50, ("mass",)) != a
+    # N crossing the pow2 boundary -> different class
+    assert classify(dom, lj, MIN_N_CAP + 1, ()) != a
+    assert isinstance(a, ShapeClass) and a.label()
+
+
+def test_pad_state_preserves_real_rows_and_masks_pads():
+    dom = _dom()
+    st = _state(dom, 50, with_fields=True)
+    padded = pad_state(st, 64)
+    assert padded.positions.shape == (64, 3)
+    assert padded.fields["mass"].shape == (64,)
+    assert padded.valid.shape == (64,)
+    _assert_bitwise(padded.positions[:50], st.positions)
+    _assert_bitwise(padded.fields["mass"][:50], st.fields["mass"])
+    assert bool(padded.valid[:50].all()) and not bool(padded.valid[50:].any())
+    with pytest.raises(ValueError):
+        pad_state(st, 32)
+
+
+def test_stack_states_rejects_mixed_field_sets():
+    dom = _dom()
+    with pytest.raises(ValueError, match="mixed field sets"):
+        stack_states([_state(dom, 10), _state(dom, 10, with_fields=True)],
+                     64)
+
+
+# ---------------------------------------------------------------------------
+# padded execution is bit-identical (the mechanism everything rests on)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("opts", [
+    {},
+    {"layout": "packed", "strategy": "xpencil"},
+    {"compact": True, "strategy": "xpencil"},
+])
+def test_padded_masked_state_is_bit_identical(opts):
+    dom = _dom()
+    st = _state(dom, 100, with_fields=True)
+    p = plan(dom, positions=st.positions, **opts)
+    f0, u0 = p.execute(st)
+    fp, up = p.execute(pad_state(st, 256))
+    _assert_bitwise(fp[:100], f0)
+    _assert_bitwise(up[:100], u0)
+
+
+def test_fully_invalid_row_is_inert_in_batch():
+    dom = _dom()
+    st = _state(dom, 60)
+    p = plan(dom, positions=st.positions)
+    f0, u0 = p.execute(st)
+    batched = stack_states([st], 64, b_cap=4)  # 3 ghost rows
+    bf, bu = p.execute_batch(batched)
+    _assert_bitwise(bf[0, :60], f0)
+    _assert_bitwise(bu[0, :60], u0)
+    assert not bool(batched.valid[1:].any())
+
+
+# ---------------------------------------------------------------------------
+# packed execute_batch fast path (pack_rows fused under the vmapped jit)
+# ---------------------------------------------------------------------------
+
+def test_packed_batch_parity_vs_per_state_loop():
+    dom = _dom()
+    states = [_state(dom, 60, seed=i, scenario=s)
+              for i, s in enumerate(["uniform", "gaussian_blob",
+                                     "two_phase", "uniform"])]
+    ref_pos = jnp.concatenate([s.positions for s in states])
+    p = plan(dom, positions=ref_pos, layout="packed", strategy="xpencil")
+    bf, bu = p.execute_batch(stack_states(states, 64, 4))
+    for s, (f, u) in zip(states, split_batch(bf, bu, [60] * 4)):
+        f1, u1 = p.execute(s)
+        _assert_bitwise(f, f1)
+        _assert_bitwise(u, u1)
+
+
+# ---------------------------------------------------------------------------
+# the steady-state guarantee (ISSUE 6 acceptance)
+# ---------------------------------------------------------------------------
+
+def _wave(eng, dom, seed0, with_fields=False):
+    """One fixed request mix: two classes (n_cap 64 and 256), 8 requests."""
+    ids = []
+    for i in range(8):
+        n = [50, 60, 200, 250][i % 4]
+        st = _state(dom, n, seed=seed0 + i, with_fields=with_fields)
+        ids.append((eng.submit(dom, st), st, n))
+    eng.flush()
+    resp = {r.req_id: r for r in eng.take_responses()}
+    return [(resp[rid], st, n) for rid, st, n in ids]
+
+
+def test_steady_state_zero_recompiles_zero_retuning_bit_identical():
+    dom = _dom()
+    eng = ServingEngine(max_batch=4, max_wait=0.0)
+    _wave(eng, dom, 0)                      # warmup: traces + plans built
+    assert eng.metrics.recompiles > 0       # warmup did compile something
+
+    reset_counters()
+    at.reset_timing_runs()
+    served = _wave(eng, dom, 100)           # same classes, fresh particles
+
+    assert recompile_count() == 0           # core counter: no new traces
+    assert at.timing_run_count() == 0       # no autotune stopwatch runs
+    for r, st, n in served:
+        assert r.status == "ok"
+        sc = classify(dom, eng.kernel, n, ())
+        p = eng.class_plan(sc)
+        f1, u1 = p.execute(st)              # unbatched reference
+        _assert_bitwise(r.forces, f1)
+        _assert_bitwise(r.potential, u1)
+
+
+def test_prewarm_makes_first_requests_steady_state():
+    dom = _dom()
+    eng = ServingEngine(max_batch=4, max_wait=0.0)
+    eng.prewarm(dom, _state(dom, 60, seed=0))
+    reset_counters()
+    at.reset_timing_runs()
+    # every bucket composition the dispatcher can form: full batch (4),
+    # then a timeout-drained part-full batch (3)
+    for i in range(7):
+        eng.submit(dom, _state(dom, 60, seed=1 + i))
+    eng.flush()
+    assert recompile_count() == 0
+    assert at.timing_run_count() == 0
+    assert all(r.status == "ok" for r in eng.take_responses())
+
+
+def test_responses_trimmed_to_true_n():
+    dom = _dom()
+    eng = ServingEngine(max_batch=4, max_wait=0.0)
+    st = _state(dom, 37)
+    rid = eng.submit(dom, st)
+    eng.flush()
+    (r,) = eng.take_responses()
+    assert r.req_id == rid and r.status == "ok"
+    assert r.forces.shape == (37, 3) and r.potential.shape == (37,)
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+def test_reject_policy_refuses_newcomer_when_full():
+    dom = _dom()
+    eng = ServingEngine(max_batch=100, max_queue=3, admission="reject",
+                        max_wait=1e9)
+    ids = [eng.submit(dom, _state(dom, 20, seed=i)) for i in range(5)]
+    resp = {r.req_id: r for r in eng.take_responses()}
+    assert [resp[i].status for i in ids[3:]] == ["rejected", "rejected"]
+    assert eng.metrics.rejected == 2
+    eng.flush()
+    resp = {r.req_id: r for r in eng.take_responses()}
+    assert all(resp[i].status == "ok" for i in ids[:3])
+
+
+def test_shed_oldest_policy_evicts_head_of_line():
+    dom = _dom()
+    clock = VirtualClock()
+    eng = ServingEngine(max_batch=100, max_queue=2,
+                        admission="shed_oldest", max_wait=1e9, clock=clock)
+    first = eng.submit(dom, _state(dom, 20, seed=0))
+    clock.advance(1.0)
+    second = eng.submit(dom, _state(dom, 20, seed=1))
+    clock.advance(1.0)
+    third = eng.submit(dom, _state(dom, 20, seed=2))  # queue full -> shed
+    resp = {r.req_id: r for r in eng.take_responses()}
+    assert resp[first].status == "shed"
+    assert eng.metrics.shed == 1
+    eng.flush()
+    resp = {r.req_id: r for r in eng.take_responses()}
+    assert resp[second].status == "ok" and resp[third].status == "ok"
+
+
+def test_poll_dispatches_only_timed_out_buckets():
+    dom = _dom()
+    clock = VirtualClock()
+    eng = ServingEngine(max_batch=100, max_wait=0.5, clock=clock)
+    eng.submit(dom, _state(dom, 20))
+    assert eng.poll() == 0                  # too young
+    clock.advance(0.6)
+    assert eng.poll() == 1                  # now overdue
+    (r,) = eng.take_responses()
+    assert r.status == "ok"
+    assert r.queue_latency >= 0.6
+
+
+# ---------------------------------------------------------------------------
+# overflow -> per-class replan
+# ---------------------------------------------------------------------------
+
+def test_overflow_replans_only_that_class():
+    dom = _dom()
+    eng = ServingEngine(max_batch=2, max_wait=0.0)
+    # class A: uniform, plans with tight measured bounds
+    for i in range(2):
+        eng.submit(dom, _state(dom, 60, seed=i))
+    # class B warmed separately
+    for i in range(2):
+        eng.submit(dom, _state(dom, 200, seed=i))
+    eng.flush()
+    eng.take_responses()
+    sc_a = classify(dom, eng.kernel, 60, ())
+    sc_b = classify(dom, eng.kernel, 200, ())
+    plan_a0, plan_b0 = eng.class_plan(sc_a), eng.class_plan(sc_b)
+
+    # a heavily clustered request in class A overflows its uniform m_c
+    clustered = _state(dom, 60, seed=99, scenario="gaussian_blob")
+    assert plan_a0.check_overflow(clustered)
+    rid = eng.submit(dom, clustered)
+    eng.submit(dom, _state(dom, 60, seed=3))
+    eng.flush()
+    resp = {r.req_id: r for r in eng.take_responses()}
+
+    assert eng.metrics.replans >= 1
+    plan_a1 = eng.class_plan(sc_a)
+    assert plan_a1.m_c > plan_a0.m_c            # class A bounds grew
+    assert eng.class_plan(sc_b) is plan_b0      # class B untouched
+    f1, u1 = plan_a1.execute(clustered)
+    _assert_bitwise(resp[rid].forces, f1)
+    _assert_bitwise(resp[rid].potential, u1)
+
+
+# ---------------------------------------------------------------------------
+# executor LRU under many shape classes
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def small_batch_cache():
+    clear_executor_cache()
+    set_executor_cache_size(batch=2)
+    yield
+    set_executor_cache_size(single=128, batch=32)
+    clear_executor_cache()
+
+
+def test_lru_eviction_and_readmission_bit_identical(small_batch_cache):
+    # Three grids -> three distinct plans -> three batch-executor entries.
+    # (Same-grid classes can legitimately *share* an executor when their
+    # measured bounds coincide — the LRU key is the plan, not the class.)
+    eng = ServingEngine(max_batch=2, max_wait=0.0)
+    mixes = [(_dom(3), 40, 0), (_dom(4), 100, 1), (_dom(5), 300, 2)]
+
+    def run_round():
+        out = {}
+        for dom, n, seed in mixes:
+            sts = [_state(dom, n, seed=seed + 10 * j) for j in range(2)]
+            ids = [eng.submit(dom, s) for s in sts]
+            eng.flush()
+            resp = {r.req_id: r for r in eng.take_responses()}
+            out[n] = [(resp[i].forces, resp[i].potential) for i in ids]
+        return out
+
+    first = run_round()
+    info = executor_cache_info()["batch"]
+    assert info.maxsize == 2 and info.currsize == 2    # one class evicted
+    reset_counters()
+    second = run_round()                               # re-admission recompiles
+    assert recompile_count() > 0
+    for n in first:                                    # ... bit-identically
+        for (f0, u0), (f1, u1) in zip(first[n], second[n]):
+            _assert_bitwise(f0, f1)
+            _assert_bitwise(u0, u1)
+
+
+def test_clear_executor_cache_mid_stream_costs_latency_only():
+    dom = _dom()
+    eng = ServingEngine(max_batch=2, max_wait=0.0)
+    sts = [_state(dom, 60, seed=i) for i in range(2)]
+    ids = [eng.submit(dom, s) for s in sts]
+    eng.flush()
+    first = {r.req_id: r for r in eng.take_responses()}
+
+    clear_executor_cache()                  # ops event mid-stream
+    reset_counters()
+    ids2 = [eng.submit(dom, s) for s in sts]
+    eng.flush()
+    second = {r.req_id: r for r in eng.take_responses()}
+
+    assert recompile_count() > 0            # re-trace happened ...
+    for a, b in zip(ids, ids2):             # ... results identical
+        _assert_bitwise(first[a].forces, second[b].forces)
+        _assert_bitwise(first[a].potential, second[b].potential)
+
+
+def test_set_executor_cache_size_validates():
+    with pytest.raises(ValueError):
+        set_executor_cache_size(batch=0)
+
+
+# ---------------------------------------------------------------------------
+# autotuned serving: timing runs happen once, cache hits after
+# ---------------------------------------------------------------------------
+
+def test_autotuned_class_plan_times_once_then_serves_warm(
+        tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path))
+    def fake_time(fn, *args, reps=None, budget_s=3.0):
+        fn(*args)                           # still trace + run once
+        return 1e-3, reps or 1
+    monkeypatch.setattr(at, "time_fn", fake_time)
+
+    dom = _dom()
+    eng = ServingEngine(max_batch=2, max_wait=0.0, autotune=True,
+                        tune_opts=dict(reps=1, budget_s=0.01, top_k=2))
+    for i in range(2):
+        eng.submit(dom, _state(dom, 60, seed=i))
+    eng.flush()
+    eng.take_responses()
+    assert eng.metrics.autotune_timing_runs > 0      # cold: stopwatch ran
+
+    at.reset_timing_runs()
+    tr0 = eng.metrics.autotune_timing_runs
+    for i in range(2):
+        eng.submit(dom, _state(dom, 60, seed=100 + i))
+    eng.flush()
+    assert eng.metrics.autotune_timing_runs == tr0   # warm: zero re-timing
+    assert at.timing_run_count() == 0
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_percentile_and_latency_summaries():
+    xs = list(map(float, range(1, 101)))
+    assert percentile(xs, 50) == pytest.approx(50.5)
+    assert percentile(xs, 99) == pytest.approx(99.01)
+    assert math.isnan(percentile([], 50))
+
+
+def test_virtual_clock_is_monotonic():
+    c = VirtualClock()
+    c.advance(2.0)
+    assert c.now() == 2.0
+    c.advance_to(1.0)                       # never backward
+    assert c.now() == 2.0
+    with pytest.raises(ValueError):
+        c.advance(-1.0)
+
+
+def test_metrics_snapshot_counts_and_fill():
+    dom = _dom()
+    eng = ServingEngine(max_batch=4, max_wait=0.0)
+    for i in range(3):                      # 3 live in a 4-slot batch
+        eng.submit(dom, _state(dom, 60, seed=i))
+    eng.flush()
+    snap = eng.metrics.snapshot()
+    assert snap["served"] == 3 and snap["batches"] == 1
+    assert snap["batch_fill"] == pytest.approx(3 / 4)
+    assert snap["total_latency"]["count"] == 3
+    assert snap["rps"] > 0
+
+
+# ---------------------------------------------------------------------------
+# LM serving relocation shim
+# ---------------------------------------------------------------------------
+
+def test_lm_serving_shim_keeps_old_import_path():
+    from repro.models import serving as new
+    from repro.train import serve as old
+    assert old.generate is new.generate
+    assert old.make_prefill_step is new.make_prefill_step
+    assert old.make_decode_step is new.make_decode_step
