@@ -28,6 +28,14 @@ that changed answers would be worse than a slow one.
 total latency; rps / p50_ms / p99_ms / batch_fill extras); the committed
 ``benchmarks/BENCH_serve.json`` is this module's output on the reference
 container.
+
+``--chaos`` runs the resilience variant instead: the same open-loop
+workload re-driven under a seeded ``repro.testing.chaos`` fault schedule
+(transient dispatch errors, stragglers, non-finite outputs). The gate is
+liveness, not latency: the queue must fully drain with every request
+reaching a definite terminal status. Records carry the fault / retry /
+shed counters (rendered by ``perf_history``'s resilience column) and the
+chaos registry snapshot.
 """
 
 from __future__ import annotations
@@ -187,6 +195,93 @@ def run(csv: bool = True, json_path: Optional[str] = None,
     return rows
 
 
+def run_chaos(csv: bool = True, json_path: Optional[str] = None,
+              record_sink: Optional[List[dict]] = None, division: int = 4,
+              n_requests: int = 100, rate: float = 200.0,
+              max_batch: int = 8, seed: int = 0,
+              fault_seed: int = 1234) -> List[dict]:
+    """The resilience figure: the uniform/clustered workloads re-driven
+    under a seeded fault schedule. Asserts the queue drains and every
+    request terminates with a definite status; returns per-mix rows and
+    (optionally) BENCH records carrying the fault/retry/shed counters."""
+    from collections import Counter
+
+    from repro.serve import RESPONSE_STATUSES
+    from repro.testing import chaos
+
+    dom = Domain.cubic(division, cutoff=1.0)
+    rows: List[dict] = []
+    records: List[dict] = []
+    if csv:
+        print("mix,served,failed,deadline,faults,retries,breaker_opens")
+    for mix_name, mix in MIXES:
+        requests = _sample_requests(dom, mix, n_requests, rate, seed)
+        eng = ServingEngine(max_batch=max_batch, max_wait=2.0 / rate,
+                            max_queue=4 * n_requests)
+        _drive(eng, dom, requests)          # fault-free warmup pass
+        eng.take_responses()
+
+        eng.clock = VirtualClock()
+        eng.metrics = ServeMetrics()
+        specs = (
+            chaos.FaultSpec("serve.dispatch", "error", p=0.15),
+            chaos.FaultSpec("serve.dispatch", "delay", p=0.10, param=0.02),
+            chaos.FaultSpec("serve.dispatch", "nonfinite", p=0.05),
+        )
+        with chaos.inject(*specs, seed=fault_seed):
+            _drive(eng, dom, requests)
+            # drain the retry backlog: advance past backoff holdbacks and
+            # flush until nothing is pending (bounded — every retry has a
+            # finite attempt budget, so this terminates)
+            for _ in range(100 * n_requests):
+                if eng.pending() == 0:
+                    break
+                eng.clock.advance(eng.retry_cap_s)
+                eng.flush()
+            fault_log = chaos.snapshot()
+
+        responses = eng.take_responses()
+        statuses = Counter(r.status for r in responses)
+        snap = eng.metrics.snapshot()
+        if eng.pending() != 0 or len(responses) != n_requests or not all(
+                s in RESPONSE_STATUSES for s in statuses):
+            print(f"fig_serve: {mix_name}: chaos workload did NOT drain "
+                  f"(pending={eng.pending()}, responses={len(responses)}/"
+                  f"{n_requests}, statuses={dict(statuses)}) — not "
+                  "recording", file=sys.stderr)
+            continue
+
+        total = snap["total_latency"]
+        row = {"mix": mix_name, "served": snap["served"],
+               "failed": snap["failed"],
+               "deadline_expired": snap["deadline_expired"],
+               "faults": snap["faults"], "retries": snap["retries"],
+               "shed": snap["shed"],
+               "breaker_opens": snap["breaker_opens"],
+               "statuses": dict(statuses)}
+        rows.append(row)
+        mean_s = total["mean_s"] if snap["served"] else 0.0
+        records.append(dict(
+            bench_record(f"serve_chaos/{mix_name}", "serve", "reference",
+                         mean_s, max(snap["served"], 1)),
+            rps=snap["rps"], faults=snap["faults"],
+            retries=snap["retries"], shed=snap["shed"],
+            failed=snap["failed"],
+            deadline_expired=snap["deadline_expired"],
+            breaker_opens=snap["breaker_opens"],
+            nonfinite_batches=snap["nonfinite_batches"],
+            fault_seed=fault_seed, fault_log=fault_log))
+        if csv:
+            print(f"serve_chaos/{mix_name},{row['served']},{row['failed']},"
+                  f"{row['deadline_expired']},{row['faults']},"
+                  f"{row['retries']},{row['breaker_opens']}")
+    if json_path:
+        write_bench_json(json_path, records)
+    if record_sink is not None:
+        record_sink.extend(records)
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--division", type=int, default=4,
@@ -198,9 +293,20 @@ def main():
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write BENCH_*.json perf records to PATH")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the fault-injection resilience variant")
+    ap.add_argument("--fault-seed", type=int, default=1234,
+                    help="chaos schedule seed (with --chaos)")
     args = ap.parse_args()
-    run(division=args.division, n_requests=args.requests, rate=args.rate,
-        max_batch=args.max_batch, json_path=args.json)
+    if args.chaos:
+        rows = run_chaos(division=args.division, n_requests=args.requests,
+                         rate=args.rate, max_batch=args.max_batch,
+                         json_path=args.json, fault_seed=args.fault_seed)
+        if len(rows) != len(MIXES):
+            sys.exit(1)                  # a mix failed to drain
+    else:
+        run(division=args.division, n_requests=args.requests,
+            rate=args.rate, max_batch=args.max_batch, json_path=args.json)
 
 
 if __name__ == "__main__":

@@ -103,6 +103,25 @@ def serving_of(snapshots: List[Tuple[str, Dict[Key, dict]]],
     return "-", "-"
 
 
+def resilience_of(snapshots: List[Tuple[str, Dict[Key, dict]]],
+                  key: Key) -> str:
+    """Resilience column of a series: the latest record's fault/retry/shed
+    counters as ``f<faults>/r<retries>/s<shed>``. Records predating the
+    counters (or with all three at zero) render as ``-`` so ordinary perf
+    tables stay uncluttered — the column only lights up for chaos runs."""
+    for _, recs in reversed(snapshots):
+        rec = recs.get(key)
+        if rec is not None and any(k in rec
+                                   for k in ("faults", "retries", "shed")):
+            f = int(rec.get("faults", 0))
+            r = int(rec.get("retries", 0))
+            s = int(rec.get("shed", 0))
+            if f == 0 and r == 0 and s == 0:
+                return "-"
+            return f"f{f}/r{r}/s{s}"
+    return "-"
+
+
 def _infer_layout(strategy: str) -> str:
     if strategy.endswith("_packed"):
         return "packed"
@@ -132,7 +151,7 @@ def format_table(snapshots: List[Tuple[str, Dict[Key, dict]]],
     lines = [f"# {len(snapshots)} snapshots: "
              + " -> ".join(label for label, _ in snapshots),
              "case,strategy,backend,first_us,last_us,delta_pct,trajectory,"
-             "rps,p99_ms,layout"]
+             "rps,p99_ms,resilience,layout"]
     for key, vals in ss.items():
         present = [(i, v) for i, v in enumerate(vals) if v is not None]
         if not present:
@@ -142,6 +161,7 @@ def format_table(snapshots: List[Tuple[str, Dict[Key, dict]]],
         rps, p99 = serving_of(snapshots, key)
         lines.append(f"{key[0]},{key[1]},{key[2]},{first:.1f},{last:.1f},"
                      f"{delta:+.1f}%,{sparkline(vals)},{rps},{p99},"
+                     f"{resilience_of(snapshots, key)},"
                      f"{layout_of(snapshots, key)}")
     return "\n".join(lines)
 
@@ -173,6 +193,7 @@ def main(argv=None) -> int:
                         "layout": layout_of(snapshots, k),
                         "rps": serving_of(snapshots, k)[0],
                         "p99_ms": serving_of(snapshots, k)[1],
+                        "resilience": resilience_of(snapshots, k),
                         "us_per_call": v} for k, v in ss.items()],
         }
         with open(args.json, "w") as f:

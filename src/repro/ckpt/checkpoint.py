@@ -26,6 +26,39 @@ import numpy as np
 PyTree = Any
 
 
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint directory exists but is not loadable (truncated
+    manifest, missing leaf file). Subclasses ``RuntimeError`` so the
+    restart driver (``dist.fault.run_with_restarts``) treats it like any
+    other recoverable failure."""
+
+
+def _corruption(d: pathlib.Path) -> Optional[str]:
+    """Why ``step_<N>`` directory ``d`` is not restorable, or None if it
+    looks intact (manifest parses, every manifest key's leaf file
+    exists)."""
+    mpath = d / "manifest.json"
+    if not mpath.exists():
+        return "missing manifest.json"
+    try:
+        manifest = json.loads(mpath.read_text())
+    except (json.JSONDecodeError, OSError, UnicodeDecodeError) as e:
+        return f"unreadable manifest.json ({e})"
+    keys = manifest.get("keys")
+    if not isinstance(keys, list):
+        return "manifest.json has no 'keys' list"
+    for key in keys:
+        if not (d / (str(key).replace("/", "__") + ".npy")).exists():
+            return f"missing leaf file for key {key!r}"
+    return None
+
+
+def is_intact(step_dir: str | pathlib.Path) -> bool:
+    """True if ``step_dir`` is a restorable checkpoint (see module
+    docstring for the commit contract this verifies)."""
+    return _corruption(pathlib.Path(step_dir)) is None
+
+
 def _flatten(tree: PyTree) -> Dict[str, Any]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
@@ -59,12 +92,15 @@ def save(ckpt_dir: str | pathlib.Path, step: int, tree: PyTree,
 
 
 def latest_step(ckpt_dir: str | pathlib.Path) -> Optional[int]:
+    """Newest *intact* committed step, or None. A corrupt newest
+    checkpoint (truncated manifest, missing leaf) is skipped so restarts
+    fall back to the last restorable one instead of crash-looping on it."""
     ckpt_dir = pathlib.Path(ckpt_dir)
     if not ckpt_dir.exists():
         return None
     steps = []
     for d in ckpt_dir.iterdir():
-        if d.name.startswith("step_") and (d / "manifest.json").exists():
+        if d.name.startswith("step_") and _corruption(d) is None:
             steps.append(int(d.name.split("_")[1]))
     return max(steps) if steps else None
 
@@ -80,6 +116,9 @@ def restore(ckpt_dir: str | pathlib.Path, tree_like: PyTree,
         if step is None:
             raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
     d = ckpt_dir / f"step_{step:08d}"
+    why = _corruption(d) if d.exists() else None
+    if why is not None:
+        raise CheckpointCorrupt(f"checkpoint {d} is corrupt: {why}")
     manifest = json.loads((d / "manifest.json").read_text())
 
     flat_spec = _flatten(tree_like)

@@ -8,12 +8,13 @@ and ``compute_interactions`` are compatibility shims over it.
 """
 
 from .domain import Domain
-from .api import (InteractionPlan, ParticleState, active_unit_count,
-                  backend_matrix, choose_strategy, clear_executor_cache,
-                  dispatch_count, executor_cache_info, plan, recompile_count,
-                  register_backend, reset_counters, set_executor_cache_size,
-                  suggest_max_active, suggest_row_cap, supports_compact,
-                  supports_layout)
+from .api import (ExecutionReport, InteractionPlan, ParticleState, PlanHealth,
+                  active_unit_count, backend_matrix, choose_strategy,
+                  clear_executor_cache, degradation_ladder, dispatch_count,
+                  executor_cache_info, fallback_plan, plan, plan_health,
+                  recompile_count, register_backend, reset_counters,
+                  reset_health, set_executor_cache_size, suggest_max_active,
+                  suggest_row_cap, supports_compact, supports_layout)
 from .binning import (CellBins, Occupancy, PackedRows, bin_particles,
                       dense_to_particles, full_pencil_occupancy,
                       gather_pencil_rows, gather_to_particles,
@@ -46,8 +47,10 @@ __all__ = [
     "interior_to_padded", "pack_rows", "packed_to_particles",
     "padded_row_counts", "unpack_scatter", "full_pencil_occupancy",
     "pencil_occupancy", "subbox_occupancy",
-    "InteractionPlan", "ParticleState", "plan", "register_backend",
+    "ExecutionReport", "InteractionPlan", "ParticleState", "PlanHealth",
+    "plan", "register_backend",
     "backend_matrix", "choose_strategy", "clear_executor_cache",
+    "degradation_ladder", "fallback_plan", "plan_health", "reset_health",
     "dispatch_count", "recompile_count", "reset_counters",
     "executor_cache_info", "set_executor_cache_size",
     "active_unit_count", "suggest_max_active",

@@ -35,7 +35,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+import functools
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -306,23 +307,34 @@ class InteractionPlan:
         pass. Padding rows (``state.valid`` False) are excluded — a padded
         request must never trigger a replan its real particles don't
         need."""
+        return self.overflow_class(state) is not None
+
+    def overflow_class(self, state: ParticleState) -> Optional[str]:
+        """Which static bound these positions breach — ``"m_c"``,
+        ``"row_cap"``, ``"shard_cap"``, ``"max_active"``, ``"injected"``
+        (a chaos-forced verdict, ``repro.testing.chaos``) — or None when
+        every bound holds. Same contract, one binning pass, and padding
+        exclusion as :meth:`check_overflow` (which is a thin wrapper)."""
+        from ..testing import chaos
+        if chaos.forced_overflow("core.binning"):
+            return "injected"
         counts = _cell_counts(self.domain, state.positions, state.valid)
         if int(jnp.max(counts)) > self.m_c:
-            return True
+            return "m_c"
         if self.layout == "packed":
             if int(jnp.max(padded_row_counts(self.domain, counts))
                    ) > self.row_cap:
-                return True
+                return "row_cap"
         if self._multi_shard:
-            from ..dist.engine import halo_overflow
-            return halo_overflow(self, counts)
+            from ..dist.engine import halo_overflow_class
+            return halo_overflow_class(self, counts)
         if self.compact:
             n_act = active_unit_count(self.domain, state.positions,
                                       self.strategy, box=self.box,
                                       counts=counts)
             if n_act > self.max_active:
-                return True
-        return False
+                return "max_active"
+        return None
 
     @property
     def _multi_shard(self) -> bool:
@@ -416,6 +428,22 @@ class InteractionPlan:
         while p.check_overflow(state):
             p = p.replan(state)
         return p.execute(state), p
+
+    def execute_checked(self, state: ParticleState, *,
+                        max_replans: int = 4,
+                        max_retries: Optional[int] = None,
+                        sleep=None
+                        ) -> Tuple[Tuple[Array, Array], "ExecutionReport"]:
+        """Guarded execute: never raises, always terminates, and tells you
+        what happened. Returns ``((forces, potential), report)`` where the
+        :class:`ExecutionReport` carries the overflow class, the
+        non-finite output count (one fused ``jnp.isfinite`` reduction),
+        the out-of-domain particle count, and the degradation-ladder /
+        circuit-breaker trajectory; ``report.plan`` is the plan to keep
+        using (replans and elastic shard shrinks applied). See
+        :func:`degradation_ladder` and ARCHITECTURE.md "Resilience"."""
+        return _execute_checked(self, state, max_replans=max_replans,
+                                max_retries=max_retries, sleep=sleep)
 
     # -- distributed execution ---------------------------------------------
 
@@ -950,6 +978,260 @@ def executor_cache_info() -> Dict[str, "_CacheInfo"]:
     (hits / misses / maxsize / currsize, stdlib ``lru_cache`` schema)."""
     return {"single": _executor.cache_info(),
             "batch": _batch_executor.cache_info()}
+
+
+# --------------------------------------------------------------------------
+# guarded execution: ExecutionReport, degradation ladder, circuit breaker
+# --------------------------------------------------------------------------
+
+# The resilience layer's core contract: ``plan.execute_checked`` never
+# raises and never hangs. Failures (transient backend errors, non-finite
+# outputs, injected chaos — repro.testing.chaos) are absorbed by a
+# per-plan circuit breaker with hysteresis: _FAILURE_THRESHOLD consecutive
+# failures step one rung DOWN the degradation ladder
+# (pallas -> reference backend, then packed -> compact -> dense layout);
+# _RECOVERY_THRESHOLD consecutive clean executions step one rung back UP.
+# Every rung is bit-identical to the healthy path by construction (the
+# repo-wide parity guarantee), so degradation costs latency, never
+# answers — tests/test_chaos.py parity-checks it.
+
+_FAILURE_THRESHOLD = 3     # consecutive failures to trip one rung down
+_RECOVERY_THRESHOLD = 8    # consecutive clean calls to climb one rung up
+
+
+@dataclasses.dataclass
+class PlanHealth:
+    """Per-plan circuit-breaker state (see the note above). ``level``
+    indexes into :func:`degradation_ladder`; 0 = healthy."""
+
+    level: int = 0
+    consec_failures: int = 0
+    consec_clean: int = 0
+    trips: int = 0             # lifetime rung-down transitions
+    recoveries: int = 0        # lifetime rung-up transitions
+
+    def note_failure(self, n_rungs: int) -> bool:
+        """Record one failed execution; True if the breaker tripped a
+        rung down (hysteresis: the failure streak resets on the trip)."""
+        self.consec_clean = 0
+        self.consec_failures += 1
+        if (self.consec_failures >= _FAILURE_THRESHOLD
+                and self.level < n_rungs - 1):
+            self.level += 1
+            self.trips += 1
+            self.consec_failures = 0
+            return True
+        return False
+
+    def note_success(self) -> bool:
+        """Record one clean execution; True if the breaker recovered a
+        rung up (after _RECOVERY_THRESHOLD consecutive clean calls)."""
+        self.consec_failures = 0
+        self.consec_clean += 1
+        if self.level > 0 and self.consec_clean >= _RECOVERY_THRESHOLD:
+            self.level -= 1
+            self.recoveries += 1
+            self.consec_clean = 0
+            return True
+        return False
+
+
+@dataclasses.dataclass
+class ExecutionReport:
+    """What one :meth:`InteractionPlan.execute_checked` call observed.
+
+    ``status`` is ``"ok"`` (healthy rung, clean), ``"degraded"`` (results
+    from a lower ladder rung — still bit-identical) or ``"failed"``
+    (every rung exhausted; forces/potential are zeros). ``plan`` is the
+    plan to keep using — replans and elastic shard shrinks applied."""
+
+    status: str = "ok"
+    plan: Optional[InteractionPlan] = None
+    overflow: Optional[str] = None     # bound class that overflowed
+    replans: int = 0                   # bound-growth events this call
+    retries: int = 0                   # extra execution attempts
+    nonfinite: int = 0                 # non-finite output elements seen
+    out_of_domain: int = 0             # valid particles outside the box
+    faults: List[str] = dataclasses.field(default_factory=list)
+    ladder_level: int = 0              # rung that produced the result
+    backend: str = ""                  # backend of that rung
+    layout: str = ""                   # layout of that rung
+    breaker_trips: int = 0             # rung-down transitions this call
+    recovered: bool = False            # rung-up transition this call
+    shard_shrinks: int = 0             # elastic mesh shrinks this call
+
+
+def _health_key(p: InteractionPlan) -> Tuple:
+    """Breaker identity: the plan minus its grown/derived bounds, so a
+    replan (grown m_c/row_cap/...) or an elastic shard shrink keeps the
+    same breaker state instead of resetting to healthy."""
+    return (p.domain, p.kernel, p.strategy, p.backend, p.halo_inner,
+            p.layout, p.compact, p.batch_size, p.interpret)
+
+
+_health: Dict[Tuple, PlanHealth] = {}
+
+
+def plan_health(p: InteractionPlan) -> PlanHealth:
+    """The live circuit-breaker state for a plan (created healthy on
+    first access). Observability + test hook."""
+    return _health.setdefault(_health_key(p), PlanHealth())
+
+
+def reset_health() -> None:
+    """Forget every plan's breaker state (test bookkeeping)."""
+    _health.clear()
+
+
+def degradation_ladder(p: InteractionPlan) -> Tuple[InteractionPlan, ...]:
+    """The rungs ``execute_checked`` steps down under repeated failure:
+    the plan itself, then backend pallas -> reference, then layout
+    packed -> compact -> dense. Every rung computes bit-identical
+    results — only cost and code path change. Rung 0 is always ``p``;
+    plans already on the reference/dense path have a one-rung ladder."""
+    rungs = [p]
+    q = p
+    inner = q.halo_inner if q.backend == "halo" else q.backend
+    if inner == "pallas":
+        if q.backend == "halo":
+            q = dataclasses.replace(q, halo_inner="reference")
+        else:
+            q = dataclasses.replace(q, backend="reference")
+        rungs.append(q)
+    if q.layout == "packed":
+        q = dataclasses.replace(q, layout="dense")
+        rungs.append(q)
+    if q.compact:
+        q = dataclasses.replace(q, compact=False)
+        rungs.append(q)
+    return tuple(rungs)
+
+
+def fallback_plan(p: InteractionPlan) -> InteractionPlan:
+    """The most-degraded rung (reference backend, dense layout) — the
+    serving tier quarantines a broken shape class onto this plan."""
+    return degradation_ladder(p)[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("box",))
+def _output_check(forces: Array, pot: Array, positions: Array,
+                  valid: Optional[Array], box: Tuple[float, float, float]):
+    """One fused reduction over the outputs: (non-finite force/potential
+    elements, valid particles outside the domain box). Padding rows are
+    excluded from both counts."""
+    if valid is None:
+        fmask = jnp.ones(forces.shape[:-1], bool)
+    else:
+        fmask = valid
+    bad = (jnp.sum(jnp.where(fmask[..., None], ~jnp.isfinite(forces), False))
+           + jnp.sum(jnp.where(fmask, ~jnp.isfinite(pot), False)))
+    lim = jnp.asarray(box, positions.dtype)
+    ood = jnp.any((positions < 0.0) | (positions > lim), axis=-1)
+    ood = jnp.sum(jnp.where(fmask, ood, False))
+    return bad, ood
+
+
+class _NonFiniteOutput(RuntimeError):
+    """Internal: an execution produced non-finite forces/potential."""
+
+    def __init__(self, count: int):
+        super().__init__(f"{count} non-finite output element(s)")
+        self.count = int(count)
+
+
+def _execute_checked(base: InteractionPlan, state: ParticleState, *,
+                     max_replans: int = 4,
+                     max_retries: Optional[int] = None,
+                     sleep=None
+                     ) -> Tuple[Tuple[Array, Array], "ExecutionReport"]:
+    """The guarded-dispatch engine behind ``plan.execute_checked``."""
+    from ..testing import chaos
+
+    report = ExecutionReport(plan=base)
+    p = base
+
+    # 1. bounded replan loop — an injected overflow verdict with nothing
+    # to grow must not storm (replan returns an equal plan; stop).
+    for _ in range(max_replans):
+        oc = p.overflow_class(state)
+        if oc is None:
+            break
+        report.overflow = report.overflow or oc
+        grown = p.replan(state)
+        report.replans += 1
+        if grown == p:
+            break
+        p = grown
+    report.plan = p
+
+    rungs = degradation_ladder(p)
+    health = plan_health(p)
+    level = min(health.level, len(rungs) - 1)
+    if max_retries is None:
+        max_retries = _FAILURE_THRESHOLD * len(rungs)
+    attempts = 0
+
+    forces = pot = None
+    while True:
+        rung = rungs[level]
+        try:
+            if sleep is None:
+                chaos.maybe_delay("core.dispatch")
+            else:
+                chaos.maybe_delay("core.dispatch", sleep=sleep)
+            if rung._multi_shard:
+                chaos.maybe_raise("dist.exchange")
+            chaos.maybe_raise("core.dispatch")
+            f, u = rung.execute(state)
+            f = chaos.corrupt("core.dispatch", f)
+            bad, ood = _output_check(f, u, state.positions, state.valid,
+                                     p.domain.box)
+            report.out_of_domain = int(ood)
+            if int(bad):
+                report.nonfinite += int(bad)
+                raise _NonFiniteOutput(int(bad))
+            forces, pot = f, u
+        except chaos.ShardLost as e:
+            report.faults.append(f"shard_loss:{e}")
+            if rung._multi_shard:
+                # elastic shrink: rebuild at the surviving shard count and
+                # re-execute — the existing replan contract re-measures
+                # the per-shard bounds (dist.engine.elastic_shrink)
+                from ..dist.engine import elastic_shrink
+                p = elastic_shrink(p, state)
+                report.plan = p
+                report.shard_shrinks += 1
+                rungs = degradation_ladder(p)
+                health = plan_health(p)      # same key: shrink-stable
+                level = min(level, len(rungs) - 1)
+            elif health.note_failure(len(rungs)):
+                report.breaker_trips += 1
+                level = health.level
+        except (chaos.TransientBackendError, _NonFiniteOutput,
+                RuntimeError, ValueError) as e:
+            report.faults.append(f"{type(e).__name__}: {e}")
+            if health.note_failure(len(rungs)):
+                report.breaker_trips += 1
+                level = health.level
+        else:
+            break                              # clean execution
+        attempts += 1
+        report.retries = attempts
+        if attempts > max_retries:
+            report.status = "failed"
+            report.ladder_level = level
+            report.backend = rung.backend
+            report.layout = rung.layout
+            zeros = jnp.zeros_like(state.positions)
+            return (zeros, jnp.zeros(state.positions.shape[:-1],
+                                     state.positions.dtype)), report
+
+    report.recovered = health.note_success()
+    report.ladder_level = level
+    report.backend = rungs[level].backend
+    report.layout = rungs[level].layout
+    report.status = "ok" if level == 0 else "degraded"
+    return (forces, pot), report
 
 
 # --------------------------------------------------------------------------

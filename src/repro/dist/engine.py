@@ -219,14 +219,81 @@ def halo_overflow(plan, counts: Array) -> bool:
     caller already computed for the ``m_c`` check — the shard reductions
     (max across shards) derive from them, so the whole safety check stays
     one binning pass."""
+    return halo_overflow_class(plan, counts) is not None
+
+
+def halo_overflow_class(plan, counts: Array) -> Optional[str]:
+    """Which shard-level bound overflowed — ``"shard_cap"`` /
+    ``"max_active"`` — or None (:func:`halo_overflow` with the bound
+    named, feeding ``InteractionPlan.overflow_class``)."""
     loads = shard_slab_counts(plan.domain, counts, plan.n_shards)
     if int(jnp.max(loads)) > plan.shard_cap:
-        return True
+        return "shard_cap"
     if plan.compact:
         act = shard_pencil_active(plan.domain, counts, plan.n_shards)
         if int(jnp.max(act)) > plan.max_active:
-            return True
-    return False
+            return "max_active"
+    return None
+
+
+# --------------------------------------------------------------------------
+# elastic shrink: survive a lost shard
+# --------------------------------------------------------------------------
+
+# Re-exported here because shard loss is a *distributed* failure mode even
+# though the exception class lives with the injection registry: callers
+# catching a lost shard should not need to know about repro.testing.
+from ..testing.chaos import ShardLost  # noqa: E402  (re-export)
+
+
+def surviving_shard_count(domain: Domain, n_shards: int,
+                          lost: int = 1) -> int:
+    """The shard count to rebuild at after ``lost`` shards die: the
+    largest divisor of ``nz`` at most ``n_shards - lost`` (>= 1, so a
+    mesh can always shrink to the bit-identical single-device
+    fallback)."""
+    target = max(1, int(n_shards) - int(lost))
+    for n in range(target, 0, -1):
+        if domain.nz % n == 0:
+            return n
+    return 1
+
+
+def elastic_shrink(plan, state=None, lost: int = 1):
+    """A twin of ``plan`` rebuilt at the surviving shard count.
+
+    The shard-loss half of the resilience contract
+    (``InteractionPlan.execute_checked`` calls this when a
+    :class:`ShardLost` surfaces): the Z-slab decomposition is re-cut at
+    :func:`surviving_shard_count` shards, the mesh is dropped (re-resolved
+    over the surviving devices at next dispatch), and the per-shard static
+    bounds are re-measured under the ordinary replan contract —
+    ``suggest_shard_cap`` / ``suggest_shard_max_active`` when
+    representative ``state`` positions are given, a conservative
+    load-ratio scaling of the old bounds otherwise. Shrinking to one
+    shard degrades to the inner backend bit-identically."""
+    if not plan.n_shards or plan.n_shards <= 1:
+        return plan
+    ns = surviving_shard_count(plan.domain, plan.n_shards, lost)
+    if ns <= 1:
+        return dataclasses.replace(plan, n_shards=1, shard_cap=None,
+                                   mesh=None, box=None)
+    pos = state.positions if state is not None else None
+    if pos is not None:
+        shard_cap = H.suggest_shard_cap(plan.domain, pos, ns)
+    else:
+        # fewer shards -> each slab holds at least old_load * old/new
+        ratio = plan.n_shards / ns
+        shard_cap = -(-int(plan.shard_cap * ratio + 0.999) // 8) * 8
+    max_active = plan.max_active
+    if plan.compact:
+        if pos is not None:
+            max_active = H.suggest_shard_max_active(plan.domain, pos, ns)
+        else:
+            max_active = min(-(-int(max_active * ratio + 0.999) // 8) * 8,
+                             plan.domain.nz * plan.domain.ny)
+    return dataclasses.replace(plan, n_shards=ns, shard_cap=shard_cap,
+                               max_active=max_active, mesh=None, box=None)
 
 
 def halo_grown_bounds(plan, state, align: int = 8

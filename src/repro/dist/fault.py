@@ -10,6 +10,7 @@ shardings).
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Any, Callable, Optional, Tuple
@@ -29,17 +30,22 @@ class FaultConfig:
     ckpt_every: int = 50
     step_deadline_s: float = 300.0   # watchdog deadline per step
     max_restarts: int = 10
-    backoff_s: float = 0.0           # sleep between restarts (0 in tests)
+    backoff_s: float = 0.0           # base sleep between restarts (0 in
+                                     # tests); doubles per restart ...
+    backoff_cap_s: float = 60.0      # ... up to this cap
 
 
 class StragglerWatchdog:
     """Per-step deadline monitor (the TPU analogue of a straggling worker:
     one slow participant stalls every collective, so we fail fast and let
-    the restart driver take over)."""
+    the restart driver take over). ``history`` keeps the most recent
+    ``history_len`` step times in a bounded deque — a long run must not
+    grow watchdog state without bound."""
 
-    def __init__(self, deadline_s: float):
+    def __init__(self, deadline_s: float, history_len: int = 1024):
         self.deadline_s = float(deadline_s)
-        self.history: list = []
+        self.history: "collections.deque[float]" = collections.deque(
+            maxlen=int(history_len))
 
     def observe(self, step_seconds: float) -> None:
         self.history.append(float(step_seconds))
@@ -50,26 +56,34 @@ class StragglerWatchdog:
 
 
 def run_with_restarts(train_loop: Callable[[int], Any],
-                      cfg: FaultConfig) -> Any:
+                      cfg: FaultConfig,
+                      sleep: Callable[[float], None] = time.sleep) -> Any:
     """Drive ``train_loop(start_step)`` to completion with restarts.
 
-    On ``StragglerDetected`` (or any RuntimeError), the loop is restarted
-    from the latest committed checkpoint step; the loop itself is
-    responsible for restoring state from ``cfg.ckpt_dir``.
+    On any ``RuntimeError`` — ``StragglerDetected``, a lost shard
+    (``testing.chaos.ShardLost``), a corrupt checkpoint
+    (``ckpt.checkpoint.CheckpointCorrupt``), a transient backend error —
+    the loop is restarted from the latest committed *intact* checkpoint
+    step; the loop itself is responsible for restoring state from
+    ``cfg.ckpt_dir``. Restarts sleep ``cfg.backoff_s * 2**(k-1)`` seconds
+    (capped at ``cfg.backoff_cap_s``) so a crash-looping cluster backs
+    off instead of hammering; ``sleep`` is injectable for tests. After
+    ``cfg.max_restarts`` restarts the last error propagates.
     """
     restarts = 0
     while True:
         start = C.latest_step(cfg.ckpt_dir) or 0
         try:
             return train_loop(start)
-        except StragglerDetected as e:
+        except RuntimeError as e:
             restarts += 1
             if restarts > cfg.max_restarts:
                 raise
             print(f"[fault] restart {restarts}/{cfg.max_restarts} "
                   f"from step {C.latest_step(cfg.ckpt_dir) or 0}: {e}")
             if cfg.backoff_s:
-                time.sleep(cfg.backoff_s)
+                sleep(min(cfg.backoff_s * 2.0 ** (restarts - 1),
+                          cfg.backoff_cap_s))
 
 
 def elastic_restore(ckpt_dir, tree_like: PyTree,

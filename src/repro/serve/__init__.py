@@ -12,12 +12,13 @@ admission/overflow state machine.
 from .bucketing import (MIN_N_CAP, ShapeClass, classify, pad_state,
                         quantize_batch, quantize_n, split_batch,
                         stack_states)
-from .engine import ADMISSION_POLICIES, Request, Response, ServingEngine
+from .engine import (ADMISSION_POLICIES, RESPONSE_STATUSES, Request,
+                     Response, ServingEngine)
 from .metrics import LatencyStats, ServeMetrics, VirtualClock, percentile
 
 __all__ = [
     "ADMISSION_POLICIES", "LatencyStats", "MIN_N_CAP", "Request",
-    "Response", "ServeMetrics", "ServingEngine", "ShapeClass",
-    "VirtualClock", "classify", "pad_state", "percentile",
+    "RESPONSE_STATUSES", "Response", "ServeMetrics", "ServingEngine",
+    "ShapeClass", "VirtualClock", "classify", "pad_state", "percentile",
     "quantize_batch", "quantize_n", "split_batch", "stack_states",
 ]

@@ -130,6 +130,15 @@ class ServeMetrics:
     replans: int = 0                         # per-class bound growth events
     autotune_timing_runs: int = 0            # stopwatch candidate timings
     autotune_cache_hits: int = 0             # warm winner lookups
+    # resilience accounting (the retry/deadline/breaker machinery)
+    deadline_expired: int = 0                # "deadline" terminal responses
+    failed: int = 0                          # retry budget exhausted
+    faults: int = 0                          # failed dispatch attempts
+    nonfinite_batches: int = 0               # dispatches with non-finite out
+    retries: int = 0                         # re-queued request attempts
+    breaker_opens: int = 0                   # class quarantined to fallback
+    breaker_closes: int = 0                  # class restored to primary
+    breaker_open_classes: int = 0            # gauge: currently quarantined
 
     # throughput window
     t_first_submit: Optional[float] = None
@@ -170,6 +179,14 @@ class ServeMetrics:
             "replans": self.replans,
             "autotune_timing_runs": self.autotune_timing_runs,
             "autotune_cache_hits": self.autotune_cache_hits,
+            "deadline_expired": self.deadline_expired,
+            "failed": self.failed,
+            "faults": self.faults,
+            "nonfinite_batches": self.nonfinite_batches,
+            "retries": self.retries,
+            "breaker_opens": self.breaker_opens,
+            "breaker_closes": self.breaker_closes,
+            "breaker_open_classes": self.breaker_open_classes,
             "rps": self.rps,
             "batch_fill": self.batch_fill.mean,
             "queue_latency": self.queue_latency.summary(),

@@ -1,0 +1,12 @@
+"""Test-time machinery that ships with the library.
+
+``repro.testing.chaos`` is the seeded fault-injection registry the
+resilience layer is tested against (tests/test_chaos.py, the chaos-smoke
+CI job, and ``benchmarks/fig_serve.py --chaos``). Production code paths
+call its fault points unconditionally; with no active injection context
+every point is a near-zero-cost no-op.
+"""
+
+from . import chaos
+
+__all__ = ["chaos"]

@@ -1,0 +1,248 @@
+"""Seeded, deterministic fault injection for the particle path.
+
+Every static bound in the fixed-capacity cell layout (``m_c``,
+``max_active``, ``row_cap``, ``shard_cap``) is a latent failure mode, and a
+production serving tier additionally faces non-finite kernel outputs,
+transient backend errors, stragglers, and lost shards. None of that can be
+*tested* without a way to make those faults happen on demand — this module
+is that way.
+
+Production code declares **fault points**: named sites threaded through
+binning (``core.binning``), kernel dispatch (``core.dispatch``), serving
+dispatch (``serve.dispatch``) and the halo path (``dist.exchange``). With
+no active injection context every point is a cheap no-op (one global
+``None`` check), so the fault-free hot path is untouched — the guarantee
+``tests/test_chaos.py`` asserts bit-for-bit. Inside an
+:func:`inject` context, registered :class:`FaultSpec`\\ s fire
+deterministically: each spec draws from its own PRNG stream seeded from
+``(seed, site, kind, index)``, so the same seed replays the same fault
+schedule regardless of unrelated code running in between.
+
+Fault kinds (the injectable failure modes of the ISSUE/ROADMAP):
+
+========== ==============================================================
+``error``     a transient backend exception (:class:`TransientBackendError`)
+``nonfinite`` poison the outputs with a non-finite value (NaN by default)
+``delay``     artificial latency — an emulated straggler (``param`` seconds)
+``overflow``  force the overflow verdict — an emulated static-bound breach
+``shard_loss`` a lost shard (:class:`ShardLost`) — the halo engine reacts
+               with an elastic shrink (``dist.engine.elastic_shrink``)
+========== ==============================================================
+
+All fault points live at the *Python* dispatch boundary, never inside a
+jitted body — a trace-time fault would be baked into the executor forever,
+which is the opposite of a transient fault.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import time as _time
+import zlib
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "FAULT_KINDS", "FaultSpec", "TransientBackendError", "ShardLost",
+    "ChaosState", "inject", "active", "fire", "maybe_raise", "maybe_delay",
+    "corrupt", "forced_overflow", "state", "snapshot",
+]
+
+FAULT_KINDS = ("error", "nonfinite", "delay", "overflow", "shard_loss")
+
+
+class TransientBackendError(RuntimeError):
+    """An injected (or real) transient executor failure — retryable."""
+
+
+class ShardLost(RuntimeError):
+    """A shard of a multi-device halo plan is gone (emulated). The
+    resilience layer reacts by rebuilding at the surviving shard count
+    (``dist.engine.elastic_shrink``) and re-executing."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One injectable fault: *where* (``site``), *what* (``kind``), and a
+    deterministic firing schedule.
+
+    A visit to a matching fault point fires the spec when (a) at least
+    ``after`` earlier visits have been skipped, (b) fewer than
+    ``max_fires`` firings have happened, and (c) a draw from the spec's
+    seeded PRNG stream lands under ``p``. ``param`` is kind-specific:
+    delay seconds for ``delay``, the poison value for ``nonfinite``
+    (NaN when left at the default), ignored otherwise."""
+
+    site: str
+    kind: str
+    p: float = 1.0                     # per-visit firing probability
+    after: int = 0                     # skip the first ``after`` visits
+    max_fires: Optional[int] = None    # stop firing after this many
+    param: float = math.nan            # kind-specific knob
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; have {FAULT_KINDS}")
+        if not 0.0 <= self.p <= 1.0:
+            raise ValueError(f"p must be in [0, 1], got {self.p}")
+
+
+class ChaosState:
+    """The live registry of an :func:`inject` context: specs, per-spec
+    PRNG streams, visit/fire counters, and the firing log."""
+
+    def __init__(self, specs: Tuple[FaultSpec, ...], seed: int):
+        self.specs = tuple(specs)
+        self.seed = int(seed)
+        self._rngs = [
+            np.random.default_rng(
+                zlib.crc32(f"{seed}:{s.site}:{s.kind}:{i}".encode()))
+            for i, s in enumerate(self.specs)]
+        self._visits: List[int] = [0] * len(self.specs)
+        self._fires: List[int] = [0] * len(self.specs)
+        self.log: List[Tuple[str, str, int]] = []   # (site, kind, visit)
+
+    def fire(self, site: str, kind: str) -> Optional[FaultSpec]:
+        """Visit the ``(site, kind)`` fault point; the first spec whose
+        schedule fires wins (and is logged). None = no fault."""
+        hit = None
+        for i, s in enumerate(self.specs):
+            if s.site != site or s.kind != kind:
+                continue
+            self._visits[i] += 1
+            if hit is not None:
+                continue                       # a spec already fired
+            if self._visits[i] <= s.after:
+                continue
+            if s.max_fires is not None and self._fires[i] >= s.max_fires:
+                continue
+            if s.p < 1.0 and self._rngs[i].random() >= s.p:
+                continue
+            self._fires[i] += 1
+            self.log.append((site, kind, self._visits[i]))
+            hit = s
+        return hit
+
+    def fire_count(self, site: Optional[str] = None,
+                   kind: Optional[str] = None) -> int:
+        return sum(n for s, n in zip(self.specs, self._fires)
+                   if (site is None or s.site == site)
+                   and (kind is None or s.kind == kind))
+
+    def snapshot(self) -> Dict[str, object]:
+        """JSON-able fault-counter record (the chaos-smoke CI artifact)."""
+        per_point: Dict[str, int] = {}
+        for s, n in zip(self.specs, self._fires):
+            key = f"{s.site}/{s.kind}"
+            per_point[key] = per_point.get(key, 0) + n
+        return {"seed": self.seed, "fires": per_point,
+                "total_fires": sum(self._fires),
+                "total_visits": sum(self._visits)}
+
+
+# The active context. Module-global on purpose: fault points are called
+# from deep inside the dispatch layers where no injection handle exists,
+# and the whole point of the no-fault fast path is one ``is None`` check.
+_ACTIVE: Optional[ChaosState] = None
+
+
+@contextlib.contextmanager
+def inject(*specs: FaultSpec, seed: int = 0):
+    """Activate a fault schedule for the dynamic extent of the block.
+
+    Yields the live :class:`ChaosState` (counters + firing log). Contexts
+    nest; the previous schedule is restored on exit, and with no active
+    context every fault point is a no-op."""
+    global _ACTIVE
+    prev = _ACTIVE
+    st = ChaosState(specs, seed)
+    _ACTIVE = st
+    try:
+        yield st
+    finally:
+        _ACTIVE = prev
+
+
+def active() -> bool:
+    """True inside an :func:`inject` context (the fast-path check every
+    fault point performs first)."""
+    return _ACTIVE is not None
+
+
+def state() -> Optional[ChaosState]:
+    """The live ChaosState, or None outside any injection context."""
+    return _ACTIVE
+
+
+def snapshot() -> Dict[str, object]:
+    """The active context's fault counters (empty record when inactive)."""
+    if _ACTIVE is None:
+        return {"seed": None, "fires": {}, "total_fires": 0,
+                "total_visits": 0}
+    return _ACTIVE.snapshot()
+
+
+def fire(site: str, kind: str) -> Optional[FaultSpec]:
+    """Visit a fault point: the firing spec, or None (always None when no
+    context is active)."""
+    if _ACTIVE is None:
+        return None
+    return _ACTIVE.fire(site, kind)
+
+
+def maybe_raise(site: str) -> None:
+    """The exception-kind fault point: raises
+    :class:`TransientBackendError` (kind ``error``) or :class:`ShardLost`
+    (kind ``shard_loss``) when a matching spec fires."""
+    if _ACTIVE is None:
+        return
+    if _ACTIVE.fire(site, "shard_loss") is not None:
+        raise ShardLost(f"injected shard loss at {site!r}")
+    if _ACTIVE.fire(site, "error") is not None:
+        raise TransientBackendError(f"injected transient error at {site!r}")
+
+
+def maybe_delay(site: str, sleep=_time.sleep) -> float:
+    """The straggler fault point: sleeps ``spec.param`` seconds (via the
+    injectable ``sleep``) and returns the delay (0.0 = no fault). Callers
+    on a VirtualClock pass ``sleep=clock.advance`` so injected latency is
+    simulated, not burned."""
+    if _ACTIVE is None:
+        return 0.0
+    spec = _ACTIVE.fire(site, "delay")
+    if spec is None:
+        return 0.0
+    dt = 0.0 if math.isnan(spec.param) else float(spec.param)
+    if dt > 0.0:
+        sleep(dt)
+    return dt
+
+
+def corrupt(site: str, *arrays):
+    """The non-finite fault point: when a ``nonfinite`` spec fires, the
+    first array comes back with its first element poisoned (NaN, or
+    ``spec.param`` when set). Operates at the Python boundary on concrete
+    outputs — the trace itself is never corrupted."""
+    if _ACTIVE is None:
+        return arrays if len(arrays) != 1 else arrays[0]
+    spec = _ACTIVE.fire(site, "nonfinite")
+    if spec is not None and arrays:
+        first = arrays[0]
+        poison = spec.param          # NaN by default
+        flat = first.reshape(-1).at[0].set(poison)
+        arrays = (flat.reshape(first.shape),) + tuple(arrays[1:])
+    return arrays if len(arrays) != 1 else arrays[0]
+
+
+def forced_overflow(site: str) -> bool:
+    """The overflow fault point: True when an ``overflow`` spec fires —
+    the caller must behave exactly as if a static bound had been measured
+    as exceeded (emulating a skewed distribution breaching ``m_c`` /
+    ``row_cap`` / ``max_active`` / ``shard_cap``)."""
+    if _ACTIVE is None:
+        return False
+    return _ACTIVE.fire(site, "overflow") is not None

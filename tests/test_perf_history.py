@@ -122,5 +122,32 @@ def test_serving_columns_render_rps_and_p99(tmp_path):
                                  "reference")) == ("150.0", "28.13")
     assert PH.serving_of(snaps, ("a", "xpencil", "reference")) == ("-", "-")
     out = PH.format_table(snaps, PH.series(snaps))
-    assert out.splitlines()[1].endswith(",rps,p99_ms,layout")
+    assert out.splitlines()[1].endswith(",rps,p99_ms,resilience,layout")
     assert any(",150.0,28.13," in line for line in out.splitlines())
+
+
+def test_resilience_column_renders_fault_counters(tmp_path):
+    """Chaos-run records carry faults/retries/shed counters; the
+    trajectory renders them compactly and keeps older records (or
+    fault-free runs) as ``-`` — fully backward compatible."""
+    chaos = dict(_rec("serve/chaos", 7000.0, strategy="serve"),
+                 rps=120.0, p99_ms=31.0, faults=4, retries=9, shed=2)
+    clean = dict(_rec("serve/clean", 6000.0, strategy="serve"),
+                 rps=150.0, p99_ms=28.0, faults=0, retries=0, shed=0)
+    _snap(tmp_path, "BENCH_001.json", [_rec("a", 10.0), chaos, clean])
+    snaps = PH.collect(tmp_path)
+    assert PH.resilience_of(snaps, ("serve/chaos", "serve",
+                                    "reference")) == "f4/r9/s2"
+    assert PH.resilience_of(snaps, ("serve/clean", "serve",
+                                    "reference")) == "-"     # all-zero
+    assert PH.resilience_of(snaps, ("a", "xpencil",
+                                    "reference")) == "-"     # predates
+    out = PH.format_table(snaps, PH.series(snaps))
+    assert any(",f4/r9/s2," in line for line in out.splitlines())
+    # --json payload carries it too
+    rc = PH.main([str(tmp_path), "--json", str(tmp_path / "s.json")])
+    assert rc == 0
+    payload = json.loads((tmp_path / "s.json").read_text())
+    by_case = {s["case"]: s["resilience"] for s in payload["series"]}
+    assert by_case["serve/chaos"] == "f4/r9/s2"
+    assert by_case["a"] == "-"

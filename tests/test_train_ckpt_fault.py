@@ -132,6 +132,87 @@ def test_watchdog_and_restart_driver(tmp_path):
     assert out == 5 and state["restarts"] == 1
 
 
+def test_watchdog_history_is_bounded():
+    wd = StragglerWatchdog(deadline_s=10.0, history_len=16)
+    for i in range(100):
+        wd.observe(0.001 * i)
+    assert len(wd.history) == 16
+    np.testing.assert_allclose(list(wd.history),
+                               [0.001 * i for i in range(84, 100)])
+
+
+def test_restart_driver_catches_runtime_error_with_backoff(tmp_path):
+    """run_with_restarts recovers from *any* RuntimeError (per its
+    docstring), sleeping an exponentially-backed-off, capped interval."""
+    sleeps = []
+    state = {"failures": 3}
+
+    def train_loop(start):
+        if state["failures"] > 0:
+            state["failures"] -= 1
+            raise RuntimeError("transient backend error")
+        return "done"
+
+    cfg = FaultConfig(ckpt_dir=str(tmp_path), backoff_s=0.1,
+                      backoff_cap_s=0.25)
+    out = run_with_restarts(train_loop, cfg, sleep=sleeps.append)
+    assert out == "done"
+    np.testing.assert_allclose(sleeps, [0.1, 0.2, 0.25])  # capped at 3rd
+
+    # budget exhaustion still propagates the error
+    cfg2 = FaultConfig(ckpt_dir=str(tmp_path), max_restarts=2)
+    with pytest.raises(RuntimeError, match="always"):
+        run_with_restarts(
+            lambda start: (_ for _ in ()).throw(RuntimeError("always")),
+            cfg2, sleep=sleeps.append)
+
+
+def test_corrupt_manifest_rejected_and_skipped(tmp_path):
+    """A truncated manifest.json in the newest step_<N> must be rejected
+    by restore and skipped by latest_step (fall back to last intact)."""
+    tree = {"x": jnp.arange(4.0)}
+    C.save(tmp_path, 1, tree, extra={"data_step": 1})
+    C.save(tmp_path, 2, tree, extra={"data_step": 2})
+    mpath = pathlib.Path(tmp_path) / "step_00000002" / "manifest.json"
+    mpath.write_text(mpath.read_text()[:10])            # truncate mid-JSON
+
+    assert not C.is_intact(mpath.parent)
+    with pytest.raises(C.CheckpointCorrupt, match="manifest"):
+        C.restore(tmp_path, tree, step=2)
+    assert C.latest_step(tmp_path) == 1                 # falls back
+    (restored, extra) = C.restore(tmp_path, tree)       # newest intact
+    assert extra["data_step"] == 1
+    np.testing.assert_array_equal(np.asarray(restored["x"]),
+                                  np.asarray(tree["x"]))
+
+
+def test_missing_leaf_rejected_and_skipped(tmp_path):
+    """A step dir whose manifest lists a leaf whose .npy is gone is
+    corrupt, not silently restorable."""
+    tree = {"x": jnp.arange(4.0), "y": jnp.ones(2)}
+    C.save(tmp_path, 1, tree)
+    C.save(tmp_path, 2, tree)
+    (pathlib.Path(tmp_path) / "step_00000002" / "y.npy").unlink()
+
+    with pytest.raises(C.CheckpointCorrupt, match="missing leaf"):
+        C.restore(tmp_path, tree, step=2)
+    assert C.latest_step(tmp_path) == 1
+
+    # and the restart driver rides over it: a loop that trips once on the
+    # corrupt checkpoint restarts from the intact one
+    calls = []
+
+    def train_loop(start):
+        calls.append(start)
+        if len(calls) == 1:
+            C.restore(tmp_path, tree, step=2)   # raises CheckpointCorrupt
+        return start
+
+    out = run_with_restarts(train_loop,
+                            FaultConfig(ckpt_dir=str(tmp_path)))
+    assert out == 1 and calls == [1, 1]
+
+
 def test_grad_compression_error_feedback_converges():
     """SGD on a quadratic with int8-compressed grads + error feedback."""
     key = jax.random.PRNGKey(0)
