@@ -1,0 +1,290 @@
+"""Trajectory figure: fused multi-step engine vs a per-step execute loop.
+
+The trajectory tentpole's claim: at the paper's few-particles-per-cell
+operating point, fusing bin -> force -> integrate under one jitted
+``lax.scan`` with Verlet-skin neighbor reuse beats driving the same
+physics as ``n_steps`` independent ``plan.execute`` dispatches — the skin
+plan re-bins only when the accumulated drift demands it, so the steady
+state pays one binning pass per *many* steps instead of one per step.
+
+Sweep: gaussian-blob scenes at ppc ∈ {2, 4, 8}. Per case:
+
+* **parity gate** (pre-timing): a short ``skin=0`` fused run must match
+  the per-step ``reference_step`` loop *bit for bit* — a fused engine
+  that drifted from the eager baseline is not timed, it is reported.
+* the headline: fused ``skin=0`` vs the **deployed** pre-trajectory path
+  (``traj_execute_api``) — an eager per-step loop where every step pays
+  ``plan.execute``'s own dispatch (separate binning + force programs,
+  Python glue), which is what ``physics.integrators.run`` cost before
+  this engine. Bit-identical arithmetic per the parity gate.
+* the tight baselines, same plan on both sides: the fused engine on the
+  skin plan vs a fully-jitted one-step-per-call loop on the *same* skin
+  plan (``traj_per_step``), and fused ``skin=0`` vs that loop on the
+  base cutoff grid (``traj_per_step_cutoff``). Against a whole-step
+  jitted loop the remaining delta is per-step binning (skipped on
+  non-rebin steps) + one dispatch per step — on this CPU backend that
+  is a wash at tiny n and grows with it (ppc 8: ~1.4×); the rebin
+  counts riding along are the acceptance bar (rebins ≪ n_steps).
+* a small skin sweep records how the rebin rate falls as the skin grows
+  (the skin/rebin trade the ARCHITECTURE contract table documents).
+
+Caveat, stated rather than hidden: on this CPU reference backend the
+force pass dominates and binning is cheap, so *coarsening* the grid for
+a skin costs more force work than the skipped binning saves — the
+coarse-vs-fine trade only pays on accelerators where neighbor rebuilds
+are the expensive part (the paper's regime). The api-loop comparison is
+the backend-independent one: fusion removes per-step program dispatch
+and re-binning whatever the grid.
+
+``--chaos`` additionally runs the fused engine under an injected mid-run
+NaN (``repro.testing.chaos`` site ``traj.step``) and records the
+rollback-recovery counters — the resilience column of ``perf_history``.
+
+The bounded ``low_flop`` kernel drives the dynamics: blob scenes overlap
+particles, and a stiff kernel would measure float-overflow recovery
+instead of scheduling. ``--json`` writes BENCH records (with
+``rebin_rate`` extras); the committed ``benchmarks/BENCH_traj.json`` is
+this module's output on the reference container.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time as _time
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Domain, plan, scenarios
+from repro.core.interactions import make_low_flop
+from repro.physics.integrators import init_state
+from repro.testing import chaos
+from repro.traj import reference_step, run_trajectory, trajectory_plan
+
+from .common import bench_record, write_bench_json
+
+DEFAULT_PPCS = (2, 4, 8)
+SKIN_SWEEP = (0.1, 0.25, 0.5)
+
+
+def _case(division: int, ppc: int, seed: int, sigma_frac: float):
+    dom = Domain.cubic(division, cutoff=1.0, periodic=True)
+    n = ppc * dom.n_cells
+    pos = scenarios.sample_gaussian_blob(
+        dom, jax.random.PRNGKey(seed), n, sigma_frac=sigma_frac)
+    vel = 0.05 * jax.random.normal(jax.random.PRNGKey(seed + 1),
+                                   (n, 3), jnp.float32)
+    p = plan(dom, make_low_flop(), positions=pos)
+    return dom, pos, vel, p
+
+
+def _parity_gate(p, md0, dt: float, steps: int = 8) -> bool:
+    """skin=0 fused vs eager per-step loop, bit for bit."""
+    res = run_trajectory(p, md0, steps, dt, skin=0.0, segment_len=steps)
+    step = jax.jit(reference_step(p))
+    md = md0
+    for _ in range(steps):
+        md = step(md, dt)
+    return all(np.array_equal(np.asarray(getattr(res.state, f)),
+                              np.asarray(getattr(md, f)))
+               for f in ("positions", "velocities", "forces", "potential"))
+
+
+REPS = 3            # best-of-N timing: the box is 1 core, single shots flip
+
+
+def _time_traj(p, md0, n_steps, dt, reps: int = REPS, **kw) -> tuple:
+    """-> (best-of-reps seconds, result); first warm run pays compile."""
+    run_trajectory(p, md0, n_steps, dt, **kw)          # warm the traces
+    best = float("inf")
+    for _ in range(reps):
+        t0 = _time.perf_counter()
+        res = run_trajectory(p, md0, n_steps, dt, **kw)
+        jax.block_until_ready(res.state.positions)
+        best = min(best, _time.perf_counter() - t0)
+    return best, res
+
+
+def _time_loop(p, md0, n_steps, dt, reps: int = REPS) -> float:
+    step = jax.jit(reference_step(p))
+    md = step(md0, dt)                                 # compile
+    jax.block_until_ready(md.positions)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = _time.perf_counter()
+        md = md0
+        for _ in range(n_steps):
+            md = step(md, dt)
+        jax.block_until_ready(md.positions)
+        best = min(best, _time.perf_counter() - t0)
+    return best
+
+
+def _time_api_loop(p, md0, n_steps, dt, reps: int = REPS) -> float:
+    """The pre-trajectory API path: an *eager* per-step loop where every
+    step pays ``plan.execute``'s own dispatch — a separate binning + force
+    program plus the Python glue between them — which is what
+    ``physics.integrators.run`` cost per step before it routed through
+    the fused engine. The jitted ``_time_loop`` above is the *tight*
+    baseline (whole step in one program); this is the *deployed* one."""
+    step = reference_step(p)          # NOT jitted: execute dispatches per call
+    md = step(md0, dt)                # warm plan.execute's executors
+    jax.block_until_ready(md.positions)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = _time.perf_counter()
+        md = md0
+        for _ in range(n_steps):
+            md = step(md, dt)
+        jax.block_until_ready(md.positions)
+        best = min(best, _time.perf_counter() - t0)
+    return best
+
+
+def run(csv: bool = True, json_path: Optional[str] = None,
+        record_sink: Optional[List[dict]] = None, division: int = 6,
+        ppcs: Sequence[int] = DEFAULT_PPCS, sigma_frac: float = 0.25,
+        n_steps: int = 60, dt: float = 1e-3, seed: int = 0,
+        chaos_run: bool = False) -> List[dict]:
+    rows: List[dict] = []
+    records: List[dict] = []
+    if csv:
+        print("name,us_per_call,derived")
+    for ppc in ppcs:
+        case = f"traj/blob_ppc{ppc}"
+        dom, pos, vel, p = _case(division, ppc, seed, sigma_frac)
+        md0 = init_state(p, pos, vel)
+
+        if not _parity_gate(p, md0, dt):
+            print(f"fig_traj: {case}: fused skin=0 run DIVERGED from the "
+                  "per-step loop — not timing a wrong answer",
+                  file=sys.stderr)
+            continue
+
+        tp = trajectory_plan(p, 0.25, pos)
+        md0_t = init_state(tp, pos, vel)
+        t_fused, res = _time_traj(p, md0, n_steps, dt, segment_len=16,
+                                  traj_plan=tp)
+        t_loop = _time_loop(tp, md0_t, n_steps, dt)   # same skin plan
+        t_fused0, _ = _time_traj(p, md0, n_steps, dt, segment_len=16,
+                                 skin=0.0)
+        t_loop0 = _time_loop(p, md0, n_steps, dt)     # base cutoff grid
+        t_api = _time_api_loop(p, md0, n_steps, dt)   # pre-trajectory path
+        sps_fused = n_steps / t_fused
+        rebin_rate = res.rebins / n_steps
+        row = {"case": case, "ppc": ppc, "n": pos.shape[0],
+               "fused_steps_per_s": sps_fused,
+               "loop_steps_per_s": n_steps / t_loop,
+               "speedup": t_loop / t_fused,
+               "speedup_skin0": t_loop0 / t_fused0,
+               "speedup_vs_api": t_api / t_fused0,
+               "rebins": res.rebins,
+               "rebin_rate": rebin_rate, "status": res.status}
+        rows.append(row)
+        records.append(dict(
+            bench_record(case, "traj_fused", "reference",
+                         t_fused / n_steps, n_steps, layout=p.layout),
+            ppc=ppc, steps_per_s=sps_fused, rebins=res.rebins,
+            rebin_rate=rebin_rate, speedup_vs_loop=t_loop / t_fused))
+        records.append(dict(
+            bench_record(case, "traj_execute_api", "reference",
+                         t_api / n_steps, n_steps, layout=p.layout),
+            ppc=ppc, steps_per_s=n_steps / t_api,
+            speedup_fused_vs_api=t_api / t_fused0))
+        records.append(dict(
+            bench_record(case, "traj_per_step", "reference",
+                         t_loop / n_steps, n_steps, layout=p.layout),
+            ppc=ppc, steps_per_s=n_steps / t_loop))
+        records.append(dict(
+            bench_record(case, "traj_fused_skin0", "reference",
+                         t_fused0 / n_steps, n_steps, layout=p.layout),
+            ppc=ppc, rebin_rate=1.0,
+            speedup_vs_loop=t_loop0 / t_fused0))
+        records.append(dict(
+            bench_record(case, "traj_per_step_cutoff", "reference",
+                         t_loop0 / n_steps, n_steps, layout=p.layout),
+            ppc=ppc))
+        if csv:
+            print(f"{case}/traj_fused,{t_fused / n_steps * 1e6:.1f},"
+                  f"steps_per_s={sps_fused:.1f};rebins={res.rebins}"
+                  f"/{n_steps};speedup={t_loop / t_fused:.2f}")
+            print(f"{case}/traj_per_step,{t_loop / n_steps * 1e6:.1f},"
+                  f"steps_per_s={n_steps / t_loop:.1f}")
+            print(f"{case}/traj_fused_skin0,"
+                  f"{t_fused0 / n_steps * 1e6:.1f},"
+                  f"speedup={t_loop0 / t_fused0:.2f}")
+            print(f"{case}/traj_per_step_cutoff,"
+                  f"{t_loop0 / n_steps * 1e6:.1f},base_grid")
+            print(f"{case}/traj_execute_api,{t_api / n_steps * 1e6:.1f},"
+                  f"fused_skin0_speedup={t_api / t_fused0:.2f}")
+
+        # skin sweep: rebin count vs skin (not timed; short runs)
+        for skin in SKIN_SWEEP:
+            r = run_trajectory(p, md0, n_steps, dt, skin=skin,
+                               segment_len=16)
+            rows.append({"case": f"{case}/skin{skin}", "skin": skin,
+                         "rebins": r.rebins,
+                         "rebin_rate": r.rebins / n_steps})
+            if csv:
+                print(f"{case}/skin{skin},0.0,"
+                      f"rebins={r.rebins}/{n_steps}")
+
+    if chaos_run:
+        case = "traj/chaos_nan"
+        dom, pos, vel, p = _case(division, ppcs[0], seed, sigma_frac)
+        md0 = init_state(p, pos, vel)
+        spec = chaos.FaultSpec("traj.step", "nonfinite", p=1.0, after=1,
+                               max_fires=1)
+        run_trajectory(p, md0, n_steps, dt, segment_len=16)  # warm, no fault
+        with chaos.inject(spec, seed=seed):
+            # single timed run INSIDE the fault window: a warm run in here
+            # would consume the one-shot fault and time a clean run instead
+            t0 = _time.perf_counter()
+            res = run_trajectory(p, md0, n_steps, dt, segment_len=16)
+            jax.block_until_ready(res.state.positions)
+            t = _time.perf_counter() - t0
+        finite = bool(jnp.all(jnp.isfinite(res.state.positions)))
+        records.append(dict(
+            bench_record(case, "traj_fused", "reference", t / n_steps,
+                         n_steps, layout=p.layout),
+            faults=len(res.faults), retries=res.retries,
+            rollbacks=res.rollbacks, recovered=finite,
+            rebin_rate=res.rebins / n_steps))
+        rows.append({"case": case, "status": res.status,
+                     "rollbacks": res.rollbacks, "recovered": finite})
+        if csv:
+            print(f"{case}/traj_fused,{t / n_steps * 1e6:.1f},"
+                  f"rollbacks={res.rollbacks};recovered={finite};"
+                  f"status={res.status}")
+        if not finite:
+            print("fig_traj: chaos run did NOT recover to a finite state",
+                  file=sys.stderr)
+
+    if json_path:
+        write_bench_json(json_path, records)
+    if record_sink is not None:
+        record_sink.extend(records)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--division", type=int, default=6)
+    ap.add_argument("--ppc", type=int, nargs="+",
+                    default=list(DEFAULT_PPCS))
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--sigma", type=float, default=0.25,
+                    help="gaussian blob sigma as a fraction of the box")
+    ap.add_argument("--chaos", action="store_true",
+                    help="also run the injected-NaN recovery case")
+    ap.add_argument("--json", metavar="PATH", default=None)
+    args = ap.parse_args()
+    run(division=args.division, ppcs=tuple(args.ppc), n_steps=args.steps,
+        sigma_frac=args.sigma, chaos_run=args.chaos, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -15,7 +15,9 @@ backend) series: first/last us_per_call, total delta, a unicode sparkline
 of the whole trajectory, and the execution-layout tag (dense / compact /
 packed — from the record's ``layout`` field, inferred from the strategy
 suffix for older records) — the visible per-commit perf record the
-ROADMAP asks for. ``--json`` additionally dumps the raw series for
+ROADMAP asks for. Trajectory records (``fig_traj``) additionally render
+their ``rebin`` rate (rebins / n_steps of the fused Verlet-skin engine)
+and chaos records their resilience counters. ``--json`` additionally dumps the raw series for
 downstream plotting.
 
 Record files use the ``benchmarks.common.bench_record`` schema; duplicate
@@ -122,6 +124,19 @@ def resilience_of(snapshots: List[Tuple[str, Dict[Key, dict]]],
     return "-"
 
 
+def rebin_of(snapshots: List[Tuple[str, Dict[Key, dict]]],
+             key: Key) -> str:
+    """Rebin-rate column of a series: the latest record's ``rebin_rate``
+    extra (rebins / n_steps of a fused trajectory run, ``fig_traj``) —
+    the visible cost of the Verlet-skin contract. Non-trajectory records
+    render as ``-``."""
+    for _, recs in reversed(snapshots):
+        rec = recs.get(key)
+        if rec is not None and "rebin_rate" in rec:
+            return f"{float(rec['rebin_rate']):.3f}"
+    return "-"
+
+
 def _infer_layout(strategy: str) -> str:
     if strategy.endswith("_packed"):
         return "packed"
@@ -151,7 +166,7 @@ def format_table(snapshots: List[Tuple[str, Dict[Key, dict]]],
     lines = [f"# {len(snapshots)} snapshots: "
              + " -> ".join(label for label, _ in snapshots),
              "case,strategy,backend,first_us,last_us,delta_pct,trajectory,"
-             "rps,p99_ms,resilience,layout"]
+             "rebin,rps,p99_ms,resilience,layout"]
     for key, vals in ss.items():
         present = [(i, v) for i, v in enumerate(vals) if v is not None]
         if not present:
@@ -160,7 +175,8 @@ def format_table(snapshots: List[Tuple[str, Dict[Key, dict]]],
         delta = (last / first - 1.0) * 100.0 if first > 0 else float("inf")
         rps, p99 = serving_of(snapshots, key)
         lines.append(f"{key[0]},{key[1]},{key[2]},{first:.1f},{last:.1f},"
-                     f"{delta:+.1f}%,{sparkline(vals)},{rps},{p99},"
+                     f"{delta:+.1f}%,{sparkline(vals)},"
+                     f"{rebin_of(snapshots, key)},{rps},{p99},"
                      f"{resilience_of(snapshots, key)},"
                      f"{layout_of(snapshots, key)}")
     return "\n".join(lines)
@@ -191,6 +207,7 @@ def main(argv=None) -> int:
             "snapshots": [label for label, _ in snapshots],
             "series": [{"case": k[0], "strategy": k[1], "backend": k[2],
                         "layout": layout_of(snapshots, k),
+                        "rebin": rebin_of(snapshots, k),
                         "rps": serving_of(snapshots, k)[0],
                         "p99_ms": serving_of(snapshots, k)[1],
                         "resilience": resilience_of(snapshots, k),

@@ -8,6 +8,7 @@
   fig8/*      arithmetic-intensity sweep (paper Fig. 8)
   sparse/*    compacted-schedule speedup vs fill fraction (clustered scenes)
   packed/*    packed-row (CSR) layout speedup vs particles per cell
+  traj/*      fused trajectory engine vs per-step execute loop (skin reuse)
   serve/*     serving-tier open-loop latency/throughput (batching front door)
   halo/*      distributed-backend weak scaling (smoke: whatever devices
               this process sees; full sweeps via ``benchmarks.fig_halo``)
@@ -39,7 +40,7 @@ def main() -> None:
 
     from . import (autotune_bench, fig6_speedup, fig8_flop_sweep,
                    fig_halo, fig_packed, fig_serve, fig_sparse,
-                   lm_roofline, prefix_bench, table1_timing,
+                   fig_traj, lm_roofline, prefix_bench, table1_timing,
                    traffic_model)
 
     print("# traffic model (paper Fig. 7 analogue)", flush=True)
@@ -72,6 +73,10 @@ def main() -> None:
     print("# halo: distributed-backend smoke (local device set)",
           flush=True)
     fig_halo.run(record_sink=records, division=4, ppc=3)
+    print("# traj: fused trajectory vs per-step execute loop", flush=True)
+    fig_traj.run(record_sink=records, division=4,
+                 ppcs=(2, 4) if not args.full else (2, 4, 8),
+                 n_steps=24 if not args.full else 60)
     print("# serve: batching front door, open-loop workload", flush=True)
     fig_serve.run(record_sink=records, n_requests=60 if not args.full
                   else 200)

@@ -6,6 +6,23 @@ data-pipeline cursor). A checkpoint directory is written under a temp name
 and atomically renamed — a crashed writer never leaves a half checkpoint
 that restore would accept (fault-tolerance contract, tested).
 
+Atomicity audit (kill-mid-save contract, ``tests/test_traj.py``):
+
+* the temp dir name carries the writer's pid (``.tmp_<pid>_...``); temp
+  dirs of *dead* writers are swept on the next ``save`` — a hard kill can
+  leak at most one temp dir, and only until the next save. ``latest_step``
+  / ``restore`` never look at dotted names, so a leaked temp dir is
+  invisible to readers.
+* overwriting an existing ``step_<N>`` never deletes it before the new
+  data is committed: the old dir is moved aside to ``.old_<pid>_<N>``,
+  the temp dir is renamed in (atomic), and only then is the old copy
+  removed. A kill in the move-aside window is repaired by the sweep: a
+  dead writer's ``.old`` dir is renamed back when ``step_<N>`` is
+  missing, discarded when the rename-in did commit.
+* a kill at *any* other instant leaves either no ``step_<N>`` or a fully
+  committed one — ``os.replace`` is the only publication point.
+
+
 Restore is resharding-agnostic: leaves come back as host arrays and are
 ``jax.device_put`` against whatever sharding the *new* mesh prescribes —
 this is what makes elastic re-mesh restarts (dist.fault) work.
@@ -68,25 +85,85 @@ def _flatten(tree: PyTree) -> Dict[str, Any]:
     return flat
 
 
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except OSError:
+        return False
+    return True
+
+
+def _writer_pid(name: str) -> Optional[int]:
+    """pid embedded in a ``.tmp_<pid>_...`` / ``.old_<pid>_<step>`` name,
+    or None for legacy / foreign dotted names."""
+    parts = name.split("_")
+    if len(parts) >= 3 and parts[0] in (".tmp", ".old"):
+        try:
+            return int(parts[1])
+        except ValueError:
+            return None
+    return None
+
+
+def sweep_stale(ckpt_dir: str | pathlib.Path) -> int:
+    """Clean up after killed writers: delete ``.tmp`` dirs whose writer
+    pid is dead, and repair ``.old`` dirs — renamed back to their
+    ``step_<N>`` when the kill happened in the move-aside window (the new
+    save never committed), deleted when the commit did land. Returns the
+    number of entries handled. Called by every ``save``; idempotent."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return 0
+    handled = 0
+    for d in ckpt_dir.iterdir():
+        pid = _writer_pid(d.name)
+        if pid is None or _pid_alive(pid):
+            continue
+        if d.name.startswith(".tmp_"):
+            shutil.rmtree(d, ignore_errors=True)
+            handled += 1
+        elif d.name.startswith(".old_"):
+            step_name = "step_" + d.name.split("_", 2)[2]
+            final = ckpt_dir / step_name
+            if final.exists():
+                shutil.rmtree(d, ignore_errors=True)
+            else:
+                os.replace(d, final)    # the new save never committed
+            handled += 1
+    return handled
+
+
 def save(ckpt_dir: str | pathlib.Path, step: int, tree: PyTree,
          extra: Optional[Dict] = None) -> pathlib.Path:
-    """Write ``step_<N>``; atomic rename commit. Returns the final path."""
+    """Write ``step_<N>``; atomic rename commit (see the atomicity audit
+    in the module docstring). Returns the final path."""
+    from ..testing import chaos
+
     ckpt_dir = pathlib.Path(ckpt_dir)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
+    sweep_stale(ckpt_dir)
+    pid = os.getpid()
     final = ckpt_dir / f"step_{step:08d}"
-    tmp = pathlib.Path(tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_"))
+    tmp = pathlib.Path(tempfile.mkdtemp(dir=ckpt_dir,
+                                        prefix=f".tmp_{pid}_"))
     flat = _flatten(tree)
     manifest = {"step": step, "keys": sorted(flat), "extra": extra or {}}
+    old = ckpt_dir / f".old_{pid}_{step:08d}"
     try:
         for key, leaf in flat.items():
             arr = np.asarray(jax.device_get(leaf))
             np.save(tmp / (key.replace("/", "__") + ".npy"), arr)
         (tmp / "manifest.json").write_text(json.dumps(manifest))
+        chaos.maybe_raise("ckpt.save")   # emulated crash before commit
         if final.exists():
-            shutil.rmtree(final)
-        os.replace(tmp, final)          # atomic commit
+            os.replace(final, old)       # move aside, never delete first
+        os.replace(tmp, final)           # atomic commit
+        if old.exists():
+            shutil.rmtree(old, ignore_errors=True)
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
+        if old.exists() and not final.exists():
+            os.replace(old, final)       # undo the move-aside
         raise
     return final
 
@@ -103,6 +180,17 @@ def latest_step(ckpt_dir: str | pathlib.Path) -> Optional[int]:
         if d.name.startswith("step_") and _corruption(d) is None:
             steps.append(int(d.name.split("_")[1]))
     return max(steps) if steps else None
+
+
+def read_extra(ckpt_dir: str | pathlib.Path, step: int) -> Dict:
+    """The ``extra`` dict of a committed step's manifest, without loading
+    any leaves — how a resuming trajectory learns the grown static bounds
+    it must rebuild its restore template with (``repro.traj``)."""
+    d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
+    why = _corruption(d)
+    if why is not None:
+        raise CheckpointCorrupt(f"checkpoint {d} is corrupt: {why}")
+    return json.loads((d / "manifest.json").read_text()).get("extra", {})
 
 
 def restore(ckpt_dir: str | pathlib.Path, tree_like: PyTree,

@@ -445,6 +445,31 @@ class InteractionPlan:
         return _execute_checked(self, state, max_replans=max_replans,
                                 max_retries=max_retries, sleep=sleep)
 
+    # -- fused multi-step simulation (repro.traj) --------------------------
+
+    def trajectory(self, state, n_steps: int, dt: float, *,
+                   integrator: str = "velocity_verlet",
+                   skin: Optional[float] = None, **opts):
+        """Run ``n_steps`` of fused bin -> force -> integrate simulation
+        under one jitted ``lax.scan`` per segment, with Verlet-skin
+        neighbor reuse, invariant monitors, checkpoint/rollback and
+        deterministic resume. Returns a
+        :class:`repro.traj.TrajectoryResult`.
+
+        ``state`` is an ``MDState``, a ``ParticleState`` (+ optional
+        ``velocities=``) or a raw ``(N, 3)`` positions array. ``skin`` is
+        the Verlet margin (default: a quarter cutoff; ``0`` = re-bin
+        every step, bit-identical to a per-step :meth:`execute` loop).
+        Forwarded options (``checkpoint_dir``, ``checkpoint_every``,
+        ``segment_len``, ``energy_budget``, ``mass``, ``gamma``/``kT``
+        for the langevin integrator, ...): see
+        :func:`repro.traj.engine.run_trajectory` — the engine and the
+        canonical contract live there. Requires a cell schedule
+        (``cell_dense`` / ``xpencil`` / ``allin``) on a single shard."""
+        from ..traj.engine import run_trajectory
+        return run_trajectory(self, state, n_steps, dt,
+                              integrator=integrator, skin=skin, **opts)
+
     # -- distributed execution ---------------------------------------------
 
     def distribute(self, mesh=None, *, n_shards: Optional[int] = None,

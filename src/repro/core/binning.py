@@ -220,6 +220,101 @@ def gather_to_particles(bins: CellBins, plane: Array) -> Array:
 
 
 # --------------------------------------------------------------------------
+# Verlet-skin trajectory support: displacement tracking + in-place refresh
+# --------------------------------------------------------------------------
+#
+# The trajectory engine (repro.traj) bins once on a skin-padded grid
+# (domain.skin_domain: cell width >= cutoff + skin) and then *reuses* the
+# slot assignment across timesteps, refreshing slot contents in place each
+# step. The reuse contract: as long as no particle has drifted more than
+# skin/2 from the position it was binned at, the 27-cell neighborhood still
+# covers every pair within the true cutoff, so forces are pair-complete.
+# ``max_displacement`` is the traced predicate; ``refresh_bins`` is the
+# cheap per-step scatter that replaces a full ``bin_particles`` pass on the
+# steps where the predicate says the bins are still valid.
+
+
+def max_displacement(domain: Domain, positions: Array, ref: Array,
+                     valid: Array | None = None) -> Array:
+    """Scalar max over particles of |positions - ref| (minimum image).
+
+    The Verlet-skin rebin predicate: the trajectory engine re-bins when
+    this crosses ``effective_skin / 2``. Padding rows (``valid`` False)
+    contribute zero — they never move and never interact.
+    """
+    delta = domain.minimum_image(positions - ref)
+    mag = jnp.sqrt(jnp.sum(delta * delta, axis=-1))
+    if valid is not None:
+        mag = jnp.where(valid, mag, 0.0)
+    return jnp.max(mag, initial=0.0)
+
+
+def image_positions(domain: Domain, positions: Array, ref: Array) -> Array:
+    """Positions shifted to the periodic image nearest ``ref``.
+
+    Stale bins store each particle near where it was binned; a particle
+    that wrapped across a periodic face since then must be *presented* to
+    its old neighborhood unwrapped, or pair distances against stale-cell
+    neighbors would jump by a box length. The shift is an exact multiple
+    of the box, so for particles that did not wrap it is exactly zero and
+    the returned positions are bit-identical to the input.
+    """
+    if not domain.any_periodic:
+        return positions
+    box = jnp.asarray(domain.box, dtype=positions.dtype)
+    per = jnp.asarray(domain.periodic_axes)
+    delta = positions - ref
+    shift = jnp.where(per, box * jnp.round(delta / box), 0.0)
+    return positions - shift
+
+
+def refresh_bins(domain: Domain, bins: CellBins, positions: Array,
+                 fields: Dict[str, Array] | None = None,
+                 valid: Array | None = None) -> CellBins:
+    """Scatter current particle values into the *existing* slot layout.
+
+    The Verlet-skin fast path: slot assignment (``particle_slot``,
+    ``slot_id``, ``counts``, ``offsets``) is reused from the last full
+    ``bin_particles`` pass; only the SoA value planes are rewritten, then
+    the periodic ghost ring is refilled from the refreshed interior.
+    ``positions`` must already be imaged next to the binned reference
+    (:func:`image_positions`) so wrapped particles land in their old slots
+    with consistent coordinates.
+
+    Particles the original binning dropped (cell overflow past ``m_c``)
+    carry ``particle_slot == 0``; their scatter lands in a ghost-corner
+    slot that the ghost refill immediately rewrites (periodic) or that is
+    masked by ``slot_id == -1`` (open boundaries) — harmless either way,
+    and an overflowed binning is flagged for replan before results are
+    trusted. Padding rows (``valid`` False) are routed out of range and
+    dropped.
+    """
+    total = bins.slot_id.size
+    idx = bins.particle_slot
+    if valid is not None:
+        idx = jnp.where(valid, idx, total)
+
+    planes = {}
+    for name, plane in bins.planes.items():
+        if name == "x":
+            vals = positions[:, 0]
+        elif name == "y":
+            vals = positions[:, 1]
+        elif name == "z":
+            vals = positions[:, 2]
+        else:
+            vals = (fields or {})[name]
+        flat = plane.reshape(-1).at[idx].set(
+            vals.astype(plane.dtype), mode="drop")
+        planes[name] = flat.reshape(plane.shape)
+
+    out = dataclasses.replace(bins, planes=planes)
+    if domain.any_periodic:
+        out = _fill_periodic_ghosts(domain, out)
+    return out
+
+
+# --------------------------------------------------------------------------
 # occupancy: the sparsity summary behind the compacted schedules
 # --------------------------------------------------------------------------
 #

@@ -130,6 +130,43 @@ class Domain:
         return jax.random.uniform(key, (n, 3), dtype=dtype) * box
 
 
+def skin_domain(domain: Domain, skin: float) -> Domain:
+    """The Verlet-skin twin of a domain: same box, cutoff and periodicity,
+    but a grid coarse enough that every cell width is at least
+    ``cutoff + skin`` (``repro.traj``).
+
+    With that margin, bins built once remain *pair-complete* for the true
+    cutoff while every particle has drifted less than ``skin / 2`` from
+    its binned position — two particles within ``cutoff`` of each other
+    now were within ``cutoff + skin`` at bin time, which the 27-cell
+    neighborhood of the coarser grid still covers. The trajectory engine
+    re-bins only when the max displacement predicate crosses ``skin / 2``
+    (:func:`repro.core.binning.max_displacement`).
+
+    The realizable margin is a property of the returned geometry, not the
+    request: ``effective_skin`` reads it back (an axis shorter than
+    ``cutoff + skin`` caps the margin at what its single cell provides).
+    ``skin=0`` returns the domain unchanged — the always-rebin limit.
+    """
+    if skin < 0:
+        raise ValueError(f"skin must be >= 0, got {skin}")
+    if skin == 0:
+        return domain
+    width = domain.cutoff + skin
+    ncells = tuple(max(1, int(length / width + 1e-9))
+                   for length in domain.box)
+    return Domain(box=domain.box, ncells=ncells, cutoff=domain.cutoff,
+                  periodic=domain.periodic)
+
+
+def effective_skin(domain: Domain) -> float:
+    """The Verlet-skin margin a domain's grid actually provides:
+    ``min(cell_width) - cutoff`` (>= 0 by the Domain validation). The
+    trajectory engine's rebin predicate and skin-violation monitor are
+    parameterized by this measured value, never the requested one."""
+    return max(0.0, min(domain.cell_width) - domain.cutoff)
+
+
 def slab_domain(domain: Domain, n_shards: int) -> Domain:
     """The Z-slab subdomain one halo shard owns (``repro.dist``).
 

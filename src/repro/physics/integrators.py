@@ -1,9 +1,18 @@
 """Time integrators driving the interaction engine (MD/SPH substrate).
 
-Ported to the plan/execute API: every entry point accepts either an
-:class:`~repro.core.api.InteractionPlan` (the front door) or the legacy
-``CellListEngine`` shim — both expose the same ``(positions) -> (forces,
-potential)`` hot path under jit.
+Ported onto the fused trajectory engine (``repro.traj``): ``run`` with an
+:class:`~repro.core.api.InteractionPlan` on a cell schedule routes through
+``plan.trajectory`` — one jitted ``lax.scan`` per segment with Verlet-skin
+neighbor reuse — so ``examples/`` and ``physics.sph`` stop paying a full
+binning pass per step. The legacy per-step scan is kept for the
+``CellListEngine`` shim and the non-cell schedules.
+
+Deprecation note: ``velocity_verlet`` / ``leapfrog`` (single-step
+factories) and the legacy ``run`` path recompute forces from scratch
+every step. They remain for compatibility and for engines the trajectory
+contract excludes; new code should call ``plan.trajectory`` (or ``run``,
+which forwards to it) and get neighbor reuse, invariant monitors and
+checkpoint/resume for free.
 """
 
 from __future__ import annotations
@@ -57,7 +66,12 @@ def _wrap(domain: Domain, positions: Array) -> Array:
 
 def velocity_verlet(engine: Engine, dt: float, mass: float = 1.0
                     ) -> Callable[[MDState], MDState]:
-    """Symplectic velocity-Verlet step. One force evaluation per step."""
+    """Symplectic velocity-Verlet step. One force evaluation per step.
+
+    Deprecated for multi-step runs: each step re-bins from scratch. Use
+    ``plan.trajectory`` / :func:`run`, which fuse the loop with
+    Verlet-skin neighbor reuse; this factory remains for single-step use
+    and non-plan engines."""
     inv_m = 1.0 / mass
     compute = _forces_fn(engine)
 
@@ -73,6 +87,8 @@ def velocity_verlet(engine: Engine, dt: float, mass: float = 1.0
 
 def leapfrog(engine: Engine, dt: float, mass: float = 1.0
              ) -> Callable[[MDState], MDState]:
+    """Leapfrog (kick-drift) step. Same deprecation note as
+    :func:`velocity_verlet`: prefer ``plan.trajectory`` for runs."""
     inv_m = 1.0 / mass
     compute = _forces_fn(engine)
 
@@ -87,8 +103,33 @@ def leapfrog(engine: Engine, dt: float, mass: float = 1.0
 
 def run(engine: Engine, state: MDState, n_steps: int, dt: float,
         mass: float = 1.0, integrator: str = "velocity_verlet",
-        ) -> Tuple[MDState, dict]:
-    """Run ``n_steps`` under jit (lax.scan); returns final state + traces."""
+        **traj_opts) -> Tuple[MDState, dict]:
+    """Run ``n_steps`` under jit; returns ``(final_state, traces)``.
+
+    An :class:`InteractionPlan` on a cell schedule (single shard) runs on
+    the fused trajectory engine — Verlet-skin neighbor reuse, invariant
+    monitors, optional checkpointing via ``traj_opts`` (``skin=``,
+    ``checkpoint_dir=``, ``energy_budget=``, ...; see
+    :func:`repro.traj.engine.run_trajectory`). Everything else (the
+    ``CellListEngine`` shim, ``par_part`` / ``naive_n2`` plans) keeps the
+    legacy per-step scan, which recomputes forces from scratch each step.
+    """
+    from ..traj.engine import TRAJ_STRATEGIES
+
+    if (isinstance(engine, InteractionPlan)
+            and engine.strategy in TRAJ_STRATEGIES
+            and not engine._multi_shard):
+        res = engine.trajectory(state, n_steps, dt, integrator=integrator,
+                                mass=mass, **traj_opts)
+        traces = {k: jnp.asarray(res.traces[k])
+                  for k in ("kinetic", "potential", "total")}
+        return res.state, traces
+    if traj_opts:
+        raise ValueError(
+            f"trajectory options {sorted(traj_opts)} need an "
+            "InteractionPlan on a cell schedule; this engine runs the "
+            "legacy per-step scan")
+
     step = (velocity_verlet if integrator == "velocity_verlet"
             else leapfrog)(engine, dt, mass)
 

@@ -15,10 +15,14 @@ from .bucketing import (MIN_N_CAP, ShapeClass, classify, pad_state,
 from .engine import (ADMISSION_POLICIES, RESPONSE_STATUSES, Request,
                      Response, ServingEngine)
 from .metrics import LatencyStats, ServeMetrics, VirtualClock, percentile
+from .trajectory import (TrajectoryRequest, TrajectoryResponse,
+                         TrajectoryService)
 
 __all__ = [
     "ADMISSION_POLICIES", "LatencyStats", "MIN_N_CAP", "Request",
     "RESPONSE_STATUSES", "Response", "ServeMetrics", "ServingEngine",
-    "ShapeClass", "VirtualClock", "classify", "pad_state", "percentile",
-    "quantize_batch", "quantize_n", "split_batch", "stack_states",
+    "ShapeClass", "TrajectoryRequest", "TrajectoryResponse",
+    "TrajectoryService", "VirtualClock", "classify", "pad_state",
+    "percentile", "quantize_batch", "quantize_n", "split_batch",
+    "stack_states",
 ]

@@ -1,0 +1,156 @@
+"""Trajectory serving: multi-step simulation requests without per-dispatch
+re-binning.
+
+The point-interaction front door (:class:`~repro.serve.engine.ServingEngine`)
+treats every dispatch as a one-shot ``execute_batch`` — fine for force
+queries, wasteful for simulation traffic, which used to be served as
+``n_steps`` independent requests, each paying a full binning pass and a
+queue round-trip. :class:`TrajectoryService` gives simulation requests
+their own request class: one submission runs the whole fused trajectory
+(``repro.traj``) under a *cached pair of plans* per
+:class:`~repro.serve.bucketing.ShapeClass`:
+
+* the **base plan** (cutoff grid) answers the parity/force contract;
+* the **skin plan** (coarsened grid, Verlet-skin reuse) is what actually
+  runs — built once per class, then reused, so a warm class performs
+  zero recompiles across requests (asserted via ``api.recompile_count``
+  in ``tests/test_traj.py``).
+
+Requests are padded onto the class cap exactly like point requests
+(``pad_state`` — masked rows bin to nothing, results are bit-identical
+to unpadded execution), so any N in a class shares the cached jit traces.
+When a trajectory replans mid-run (static-bound overflow), the *grown*
+plan from :class:`~repro.traj.engine.TrajectoryResult` replaces the
+cached one — the class absorbs the growth once instead of re-learning it
+per request. With a ``checkpoint_root``, each request gets its own
+checkpoint directory keyed by a caller-stable ``job_id`` and resumes
+automatically on resubmission (crash-resume contract of ``repro.traj``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+from typing import Dict, Optional, Tuple, Union
+
+import jax.numpy as jnp
+
+from ..core import api
+from ..core.api import InteractionPlan, ParticleState, plan as make_plan
+from ..core.domain import Domain
+from ..core.interactions import PairKernel
+from ..physics.integrators import MDState
+from ..traj.engine import (DEFAULT_SKIN_FRACTION, TrajectoryResult,
+                           run_trajectory, trajectory_plan)
+from .bucketing import ShapeClass, classify, pad_state
+
+__all__ = ["TrajectoryRequest", "TrajectoryResponse", "TrajectoryService"]
+
+
+@dataclasses.dataclass
+class TrajectoryRequest:
+    """One multi-step simulation job. ``job_id`` keys the per-request
+    checkpoint directory (stable across resubmissions = resumable)."""
+    job_id: str
+    domain: Domain
+    kernel: PairKernel
+    state: ParticleState
+    n_steps: int
+    dt: float
+    velocities: Optional[jnp.ndarray] = None
+    integrator: str = "velocity_verlet"
+    opts: Dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class TrajectoryResponse:
+    """Terminal outcome. ``state`` is trimmed back to the request's true
+    N; ``result`` keeps the full engine bookkeeping (status, faults,
+    rebins, rollbacks, resumed_from...)."""
+    job_id: str
+    status: str
+    state: Optional[MDState]
+    result: Optional[TrajectoryResult]
+    shape_class: str
+    n: int
+
+
+class TrajectoryService:
+    """Shape-class-cached front door for trajectory jobs.
+
+    Args:
+      skin: Verlet skin passed to the class's skin plan (default
+        ``DEFAULT_SKIN_FRACTION * cutoff`` per domain).
+      checkpoint_root: when given, request ``job_id`` J checkpoints under
+        ``<root>/J`` and resubmitting J resumes from its latest step.
+      plan_opts: forwarded to ``api.plan`` when a class builds its base
+        plan (e.g. ``strategy=``, ``layout=``).
+    """
+
+    def __init__(self, skin: Optional[float] = None,
+                 checkpoint_root: Optional[Union[str, pathlib.Path]] = None,
+                 **plan_opts):
+        self.skin = skin
+        self.checkpoint_root = (pathlib.Path(checkpoint_root)
+                                if checkpoint_root is not None else None)
+        self.plan_opts = plan_opts
+        # class -> (base plan, skin plan); the skin plan entry is replaced
+        # by result.plan after a mid-run replan (growth sticks).
+        self._plans: Dict[Tuple[ShapeClass, str],
+                          Tuple[InteractionPlan, InteractionPlan]] = {}
+        self.jobs_served = 0
+        self.replans_absorbed = 0
+
+    # -- class plan cache --------------------------------------------------
+
+    def _class_plans(self, sc: ShapeClass, integrator: str,
+                     kernel: PairKernel, raw: ParticleState,
+                     padded: ParticleState
+                     ) -> Tuple[InteractionPlan, InteractionPlan]:
+        key = (sc, integrator)
+        if key not in self._plans:
+            # bounds are measured on the real rows; the padded corner of
+            # masked zero rows never occupies slots (weight-0 binning)
+            base = make_plan(sc.domain, kernel, positions=raw.positions,
+                             **self.plan_opts)
+            skin = (self.skin if self.skin is not None
+                    else DEFAULT_SKIN_FRACTION * sc.domain.cutoff)
+            traj = trajectory_plan(base, skin, padded.positions,
+                                   padded.valid)
+            self._plans[key] = (base, traj)
+        return self._plans[key]
+
+    # -- the front door ----------------------------------------------------
+
+    def submit(self, req: TrajectoryRequest) -> TrajectoryResponse:
+        n = req.state.positions.shape[0]
+        sc = classify(req.domain, req.kernel, n, tuple(req.state.fields))
+        padded = pad_state(req.state, sc.n_cap)
+        vel = (req.velocities if req.velocities is not None
+               else jnp.zeros_like(req.state.positions))
+        pad = sc.n_cap - n
+        if pad:
+            vel = jnp.pad(vel, ((0, pad), (0, 0)))
+
+        base, traj = self._class_plans(sc, req.integrator, req.kernel,
+                                       req.state, padded)
+        opts = dict(req.opts)
+        if self.checkpoint_root is not None:
+            opts.setdefault("checkpoint_dir",
+                            self.checkpoint_root / req.job_id)
+        res = run_trajectory(base, padded, req.n_steps, req.dt,
+                             integrator=req.integrator, velocities=vel,
+                             traj_plan=traj, **opts)
+        self.jobs_served += 1
+        if res.plan is not traj:      # mid-run replan grew the bounds
+            self._plans[(sc, req.integrator)] = (base, res.plan)
+            self.replans_absorbed += 1
+
+        state = None
+        if res.state is not None:
+            md = res.state
+            state = MDState(md.positions[:n], md.velocities[:n],
+                            md.forces[:n], md.potential[:n], md.step)
+        return TrajectoryResponse(job_id=req.job_id, status=res.status,
+                                  state=state, result=res,
+                                  shape_class=sc.label(), n=n)

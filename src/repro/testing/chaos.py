@@ -9,7 +9,12 @@ is that way.
 
 Production code declares **fault points**: named sites threaded through
 binning (``core.binning``), kernel dispatch (``core.dispatch``), serving
-dispatch (``serve.dispatch``) and the halo path (``dist.exchange``). With
+dispatch (``serve.dispatch``), the halo path (``dist.exchange``), and the
+trajectory engine's segment boundaries (``traj.step`` — error/delay/
+nonfinite between committed segments, ``traj.rebin`` — forced static-bound
+overflow at the rebin check, ``traj.checkpoint`` and ``ckpt.save`` —
+failures around the checkpoint commit, the latter emulating a crash
+*before* the atomic rename so the kill-mid-save contract is testable). With
 no active injection context every point is a cheap no-op (one global
 ``None`` check), so the fault-free hot path is untouched — the guarantee
 ``tests/test_chaos.py`` asserts bit-for-bit. Inside an

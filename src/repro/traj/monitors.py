@@ -1,0 +1,135 @@
+"""In-loop invariant monitors for the trajectory engine.
+
+A multi-thousand-step `lax.scan` cannot raise, print, or branch to the
+host mid-flight — everything the host needs to know about the health of a
+segment has to ride in the scan carry as a handful of scalars. The
+monitor state is that handful: cumulative counters updated by one fused
+reduction per step (the trajectory-side sibling of `api._output_check`),
+read back once per *segment* on the host, which then decides whether the
+segment commits or rolls back (see `traj.engine`).
+
+Monitor glossary
+----------------
+nonfinite_steps / nonfinite_elems
+    Steps on which any position / velocity / force / potential entry of a
+    valid particle was NaN or Inf, and the total count of such entries.
+    Any increase across a segment is a breach: the segment's states are
+    garbage and must not be committed or checkpointed.
+skin_steps
+    Steps whose *single-step* max displacement exceeded ``skin / 2``.
+    Pair coverage is still exact — the rebin predicate fires on the same
+    step and rebuilds the bins before forces are evaluated — but the
+    configured skin no longer matches the dynamics (the engine is
+    re-binning every step, and step sizes that large usually mean the
+    trajectory is blowing up). Advisory when ``skin == 0`` (always-rebin
+    mode, counter stays 0); a breach otherwise.
+max_drift
+    Running max of relative total-energy drift ``|E - E0| / max(|E0|,1)``
+    against the energy captured at trajectory start (restored across
+    checkpoints). A breach only when it exceeds the caller's
+    ``energy_budget``.
+max_cell_count / max_row_count / max_active_units
+    Running maxima of the quantities the static bounds ``m_c`` /
+    ``row_cap`` / ``max_active`` must cover. A rebin inside the scan
+    cannot replan (shapes are static), so overflow is *recorded* here and
+    the host grows the bounds and replays the segment — the grow-only
+    replan contract, deferred to the segment boundary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MonitorState:
+    """Cumulative invariant counters carried through the trajectory scan."""
+
+    e0: Array                 # () reference total energy (trajectory start)
+    nonfinite_steps: Array    # () int32
+    nonfinite_elems: Array    # () int32
+    skin_steps: Array         # () int32
+    max_drift: Array          # () float32 relative energy drift
+    max_cell_count: Array     # () int32 max particles in any cell seen
+    max_row_count: Array      # () int32 max padded-row load seen (packed)
+    max_active_units: Array   # () int32 max active work units seen (compact)
+
+
+def init_monitors(e0: Array) -> MonitorState:
+    z = jnp.int32(0)
+    return MonitorState(
+        e0=jnp.asarray(e0, jnp.float32), nonfinite_steps=z,
+        nonfinite_elems=z, skin_steps=z,
+        max_drift=jnp.float32(0.0), max_cell_count=z,
+        max_row_count=z, max_active_units=z)
+
+
+def count_nonfinite(positions: Array, velocities: Array, forces: Array,
+                    potential: Array, valid: Optional[Array]) -> Array:
+    """One fused reduction: non-finite entries across the MD state, with
+    padding rows masked out (their values are by construction inert)."""
+    def bad(a, mask):
+        b = ~jnp.isfinite(a)
+        if mask is not None:
+            b = b & mask
+        return jnp.sum(b, dtype=jnp.int32)
+
+    m3 = None if valid is None else valid[:, None]
+    return (bad(positions, m3) + bad(velocities, m3)
+            + bad(forces, m3) + bad(potential, valid))
+
+
+def update(mon: MonitorState, *, positions: Array, velocities: Array,
+           forces: Array, potential: Array, valid: Optional[Array],
+           kinetic: Array, step_disp: Array, eff_skin: float,
+           cell_max: Array, row_max: Array, units: Array) -> MonitorState:
+    """Fold one step's observations into the carry (traced, branch-free)."""
+    bad = count_nonfinite(positions, velocities, forces, potential, valid)
+    pot_total = (jnp.sum(jnp.where(valid, potential, 0.0))
+                 if valid is not None else jnp.sum(potential))
+    energy = (kinetic + pot_total).astype(jnp.float32)
+    drift = jnp.abs(energy - mon.e0) / jnp.maximum(jnp.abs(mon.e0), 1.0)
+    skin_hit = (jnp.int32(1) if eff_skin > 0 else jnp.int32(0)) * (
+        step_disp > eff_skin * 0.5).astype(jnp.int32)
+    return MonitorState(
+        e0=mon.e0,
+        nonfinite_steps=mon.nonfinite_steps + (bad > 0).astype(jnp.int32),
+        nonfinite_elems=mon.nonfinite_elems + bad,
+        skin_steps=mon.skin_steps + skin_hit,
+        # drift of a non-finite energy is meaningless; don't fold NaN into
+        # the running max (the nonfinite counter already flags the step)
+        max_drift=jnp.where(jnp.isfinite(drift),
+                            jnp.maximum(mon.max_drift, drift),
+                            mon.max_drift),
+        max_cell_count=jnp.maximum(mon.max_cell_count,
+                                   cell_max.astype(jnp.int32)),
+        max_row_count=jnp.maximum(mon.max_row_count,
+                                  row_max.astype(jnp.int32)),
+        max_active_units=jnp.maximum(mon.max_active_units,
+                                     units.astype(jnp.int32)))
+
+
+def classify_breach(prev: MonitorState, cur: MonitorState,
+                    energy_budget: Optional[float]) -> Optional[str]:
+    """Host-side segment verdict: compare the carry monitors before and
+    after a segment (both fetched to host) and name the first breached
+    invariant, or None when the segment is healthy.
+
+    Order matters: non-finite values invalidate everything else, and an
+    energy breach on a NaN segment is a symptom, not the cause.
+    """
+    if int(cur.nonfinite_steps) > int(prev.nonfinite_steps):
+        return "nonfinite"
+    if int(cur.skin_steps) > int(prev.skin_steps):
+        return "skin"
+    if (energy_budget is not None
+            and float(cur.max_drift) > float(energy_budget)):
+        return "energy"
+    return None
