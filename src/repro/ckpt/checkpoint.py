@@ -88,6 +88,10 @@ def _flatten(tree: PyTree) -> Dict[str, Any]:
 def _pid_alive(pid: int) -> bool:
     try:
         os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True     # exists, owned by another user: alive
     except OSError:
         return False
     return True
@@ -149,6 +153,7 @@ def save(ckpt_dir: str | pathlib.Path, step: int, tree: PyTree,
     flat = _flatten(tree)
     manifest = {"step": step, "keys": sorted(flat), "extra": extra or {}}
     old = ckpt_dir / f".old_{pid}_{step:08d}"
+    moved_aside = False
     try:
         for key, leaf in flat.items():
             arr = np.asarray(jax.device_get(leaf))
@@ -156,13 +161,17 @@ def save(ckpt_dir: str | pathlib.Path, step: int, tree: PyTree,
         (tmp / "manifest.json").write_text(json.dumps(manifest))
         chaos.maybe_raise("ckpt.save")   # emulated crash before commit
         if final.exists():
+            # a stale .old from an earlier partial cleanup (or pid reuse)
+            # would make os.replace fail with ENOTEMPTY
+            shutil.rmtree(old, ignore_errors=True)
             os.replace(final, old)       # move aside, never delete first
+            moved_aside = True
         os.replace(tmp, final)           # atomic commit
-        if old.exists():
+        if moved_aside:
             shutil.rmtree(old, ignore_errors=True)
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
-        if old.exists() and not final.exists():
+        if moved_aside and not final.exists():
             os.replace(old, final)       # undo the move-aside
         raise
     return final

@@ -130,6 +130,11 @@ def run(engine: Engine, state: MDState, n_steps: int, dt: float,
             "InteractionPlan on a cell schedule; this engine runs the "
             "legacy per-step scan")
 
+    if integrator not in ("velocity_verlet", "leapfrog"):
+        raise ValueError(
+            f"integrator {integrator!r} needs an InteractionPlan on a "
+            "cell schedule (the fused trajectory path); the legacy "
+            "per-step scan only supports 'velocity_verlet' and 'leapfrog'")
     step = (velocity_verlet if integrator == "velocity_verlet"
             else leapfrog)(engine, dt, mass)
 

@@ -119,7 +119,8 @@ class TrajectoryResult:
     plan: InteractionPlan              # traj plan with any grown bounds
     status: str = "ok"                 # ok | degraded | failed
     steps: int = 0                     # committed steps
-    rebins: int = 0                    # in-scan rebin events
+    rebins: int = 0                    # in-scan (skin-contract) rebins
+    forced_rebins: int = 0             # host-forced rebins (rollback/replan)
     replans: int = 0                   # bound-growth events
     rollbacks: int = 0                 # breach-triggered rollbacks
     retries: int = 0                   # segment re-executions after faults
@@ -346,7 +347,8 @@ def _segment_exec(p: InteractionPlan, integrator: str, seg_len: int,
             cell_max, row_max, units = _bound_probes(p, bins)
             mon = M.update(carry.mon, positions=pos, velocities=vel,
                            forces=forces, potential=pot, valid=valid,
-                           kinetic=ke, step_disp=step_disp,
+                           kinetic=ke, potential_energy=pe,
+                           step_disp=step_disp,
                            eff_skin=eff_skin, cell_max=cell_max,
                            row_max=row_max, units=units)
             rebinned = need_rebin.astype(jnp.int32)
@@ -401,7 +403,11 @@ def _rebin_exec(p: InteractionPlan, field_names: Tuple[str, ...],
     """Jitted forced rebin: fresh bins + reference at the carried
     positions; the committed MD state and monitors are untouched. Used on
     rollback (perturb the FP path away from a breach) and after a bound
-    replan (the grown ``m_c`` changes the bins' static shapes)."""
+    replan (the grown ``m_c`` changes the bins' static shapes).
+
+    Does NOT touch ``carry.rebins`` — that counter means skin-contract
+    rebins inside the scan; fault-recovery rebins are counted host-side
+    in ``TrajectoryResult.forced_rebins``."""
     del field_names, has_valid
 
     @jax.jit
@@ -410,7 +416,7 @@ def _rebin_exec(p: InteractionPlan, field_names: Tuple[str, ...],
         bins = bin_particles(p.domain, carry.md.positions, fields,
                              m_c=p.m_c, valid=valid)
         return TrajCarry(md=carry.md, bins=bins, ref=carry.md.positions,
-                         rng=carry.rng, rebins=carry.rebins + 1,
+                         rng=carry.rng, rebins=carry.rebins,
                          mon=carry.mon)
 
     return rebin
@@ -582,6 +588,7 @@ def run_trajectory(base: InteractionPlan, state, n_steps: int, dt: float, *,
     failed = False
 
     def rebin_at(q, c):
+        result.forced_rebins += 1
         return _rebin_exec(q, field_names, has_valid)(c, fields, valid)
 
     def grown_rungs(q):

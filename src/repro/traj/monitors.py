@@ -88,13 +88,18 @@ def count_nonfinite(positions: Array, velocities: Array, forces: Array,
 
 def update(mon: MonitorState, *, positions: Array, velocities: Array,
            forces: Array, potential: Array, valid: Optional[Array],
-           kinetic: Array, step_disp: Array, eff_skin: float,
-           cell_max: Array, row_max: Array, units: Array) -> MonitorState:
-    """Fold one step's observations into the carry (traced, branch-free)."""
+           kinetic: Array, potential_energy: Array, step_disp: Array,
+           eff_skin: float, cell_max: Array, row_max: Array,
+           units: Array) -> MonitorState:
+    """Fold one step's observations into the carry (traced, branch-free).
+
+    ``potential_energy`` must be the already-halved total PE (the
+    pair-counted-twice convention of ``engine._masked_energies``) — the
+    same quantity that seeds ``e0`` and fills the traces' ``total``, so
+    drift compares like with like.
+    """
     bad = count_nonfinite(positions, velocities, forces, potential, valid)
-    pot_total = (jnp.sum(jnp.where(valid, potential, 0.0))
-                 if valid is not None else jnp.sum(potential))
-    energy = (kinetic + pot_total).astype(jnp.float32)
+    energy = (kinetic + potential_energy).astype(jnp.float32)
     drift = jnp.abs(energy - mon.e0) / jnp.maximum(jnp.abs(mon.e0), 1.0)
     skin_hit = (jnp.int32(1) if eff_skin > 0 else jnp.int32(0)) * (
         step_disp > eff_skin * 0.5).astype(jnp.int32)

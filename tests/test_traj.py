@@ -180,6 +180,7 @@ def test_injected_nan_rolls_back_and_recovers(setup):
         res = run_trajectory(p, md0, 32, DT, skin=0.25, segment_len=8)
     assert res.status == "ok"
     assert res.rollbacks >= 1
+    assert res.forced_rebins >= 1      # recovery rebins counted apart
     assert any(f.startswith("breach:nonfinite") for f in res.faults)
     assert res.steps == 32
     assert bool(jnp.all(jnp.isfinite(res.state.positions)))
@@ -276,6 +277,39 @@ def test_energy_budget_breach_fails_to_anchor(setup):
 # monitors
 # ---------------------------------------------------------------------------
 
+def test_monitor_energy_convention_matches_e0():
+    """The drift monitor must use the same halved-PE (pair-counted-twice)
+    convention as the ``e0`` seed: identical state in, zero drift out.
+    Regression: update() once re-summed the raw per-particle potential
+    un-halved, so any nonzero-PE run breached a finite energy budget."""
+    pot = jnp.array([2.0, 4.0], jnp.float32)           # pair-counted twice
+    vel = jnp.ones((2, 3), jnp.float32)
+    ke = 0.5 * jnp.sum(vel ** 2)
+    pe = 0.5 * jnp.sum(pot)
+    assert float(pe) != 0.0                             # premise
+    mon = init_monitors(ke + pe)
+    mon2 = M.update(mon, positions=jnp.zeros((2, 3)), velocities=vel,
+                    forces=jnp.zeros((2, 3)), potential=pot, valid=None,
+                    kinetic=ke, potential_energy=pe,
+                    step_disp=jnp.float32(0.0), eff_skin=0.5,
+                    cell_max=jnp.int32(1), row_max=jnp.int32(0),
+                    units=jnp.int32(0))
+    assert float(mon2.max_drift) == 0.0
+
+
+def test_energy_budget_healthy_run_not_breached(setup):
+    """A healthy run with nonzero PE and a generous finite budget must
+    complete without spurious energy breaches or rollbacks."""
+    dom, pos, vel, kern, p = setup
+    md0 = init_state(p, pos, vel)
+    assert float(jnp.sum(md0.potential)) != 0.0         # premise
+    res = run_trajectory(p, md0, 32, DT, skin=0.25, segment_len=8,
+                         energy_budget=1e-2)
+    assert res.status == "ok"
+    assert res.rollbacks == 0
+    assert not any(f.startswith("breach:energy") for f in res.faults)
+
+
 def test_classify_breach_ordering():
     prev = jax.device_get(init_monitors(jnp.float32(1.0)))
     cur = dataclasses.replace(prev, nonfinite_steps=np.int32(1),
@@ -334,6 +368,38 @@ def test_ckpt_sweep_repairs_dead_writers(tmp_path):
     assert mine.exists()
 
 
+def test_ckpt_resave_over_stale_old_dir(tmp_path):
+    """A leftover .old_<pid>_<step> dir (partial cleanup / pid reuse) must
+    not make a later save of the same step fail with ENOTEMPTY on the
+    move-aside rename."""
+    d = tmp_path / "ck"
+    ckpt.save(d, 7, {"x": jnp.zeros(4)})
+    stale = d / f".old_{os.getpid()}_00000007"   # own pid: sweep skips it
+    stale.mkdir()
+    (stale / "junk.npy").write_bytes(b"x")
+    ckpt.save(d, 7, {"x": jnp.ones(4)})
+    restored, _ = ckpt.restore(d, {"x": jnp.zeros(4)})
+    np.testing.assert_array_equal(restored["x"], np.ones(4))
+    assert not stale.exists()
+
+
+def test_pid_alive_eperm_means_alive(monkeypatch):
+    """EPERM from kill(pid, 0) means the process exists (another user's):
+    sweep_stale must not treat a live foreign writer as dead."""
+    from repro.ckpt.checkpoint import _pid_alive
+
+    def eperm(pid, sig):
+        raise PermissionError
+
+    def esrch(pid, sig):
+        raise ProcessLookupError
+
+    monkeypatch.setattr(os, "kill", eperm)
+    assert _pid_alive(12345) is True
+    monkeypatch.setattr(os, "kill", esrch)
+    assert _pid_alive(12345) is False
+
+
 def test_ckpt_kill_mid_save_subprocess(tmp_path):
     """Actual SIGKILL mid-save: whatever instant the writer dies at,
     latest_step/restore only ever see intact checkpoints."""
@@ -382,6 +448,12 @@ def test_integrators_run_legacy_rejects_traj_opts(setup):
     md0 = init_state(eng, pos, vel)
     with pytest.raises(ValueError, match="legacy per-step scan"):
         integ_run(eng, md0, 4, DT, skin=0.25)
+    # integrators the legacy scan does not implement must raise, not
+    # silently fall back to leapfrog
+    with pytest.raises(ValueError, match="legacy per-step scan"):
+        integ_run(eng, md0, 4, DT, integrator="langevin")
+    with pytest.raises(ValueError, match="legacy per-step scan"):
+        integ_run(eng, md0, 4, DT, integrator="nope")
     state, traces = integ_run(eng, md0, 4, DT)   # legacy path still runs
     assert traces["total"].shape == (4,)
 
