@@ -25,27 +25,46 @@ from repro.core.timing import time_fn  # noqa: F401
 
 
 def bench_record(case: str, strategy: str, backend: str, seconds: float,
-                 reps: int, layout: str | None = None) -> dict:
+                 reps: int, layout: str | None = None,
+                 drift: float | None = None) -> dict:
     """One BENCH_*.json perf record — the schema the perf trajectory
     accumulates across PRs (CI uploads these files as artifacts).
     ``layout`` tags the execution layout (dense / compact / packed) so
     ``perf_history`` can render it; older records without the key are
-    inferred from the strategy suffix."""
+    inferred from the strategy suffix. ``drift`` is the model-vs-measured
+    traffic audit's relative error for this case (repro.obs.audit), when
+    the benchmark computed one."""
     rec = {"case": case, "strategy": strategy, "backend": backend,
            "us_per_call": seconds * 1e6, "reps": reps,
            "platform": jax.default_backend()}
     if layout is not None:
         rec["layout"] = layout
+    if drift is not None:
+        rec["drift"] = float(drift)
     return rec
 
 
 def write_bench_json(path: str | pathlib.Path, records: List[dict]) -> None:
-    """Write perf records as a JSON array (one BENCH_*.json file)."""
+    """Write perf records as a JSON array (one BENCH_*.json file).
+
+    When tracing is on (``obs.enable()`` / ``REPRO_OBS_TRACE=1``), also
+    emits the observability sidecars next to the file: the span buffer as
+    ``<stem>.trace.jsonl`` + Chrome ``<stem>.trace.json``, and the metrics
+    registry snapshot as ``<stem>.metrics.json`` — one traced benchmark
+    run leaves its whole story on disk alongside its numbers."""
     p = pathlib.Path(path)
     p.parent.mkdir(parents=True, exist_ok=True)
     with open(p, "w") as f:
         json.dump(records, f, indent=1)
     print(f"wrote {len(records)} perf records to {p}")
+    from repro import obs
+    if obs.tracing_enabled():
+        stem = p.with_suffix("")
+        n = obs.export_jsonl(stem.with_suffix(".trace.jsonl"))
+        obs.export_chrome_trace(stem.with_suffix(".trace.json"))
+        with open(stem.with_suffix(".metrics.json"), "w") as f:
+            json.dump(obs.snapshot(), f, indent=1, default=str)
+        print(f"wrote {n} spans + metrics sidecars to {stem}.*")
 
 
 def paper_case(division: int, ppc: int, seed: int = 0,

@@ -90,7 +90,7 @@ def run(csv: bool = True, json_path: Optional[str] = None,
         rows.append(row)
         records.append(dict(bench_record(case, "xpencil_compact",
                                          "reference", t_c, r_c,
-                                         layout="dense"),
+                                         layout="compact"),
                             ppc=ppc, m_c=m_c))
         records.append(dict(bench_record(case, "xpencil_packed",
                                          "reference", t_p, r_p,

@@ -50,7 +50,9 @@ this module's output on the reference container.
 from __future__ import annotations
 
 import argparse
+import shutil
 import sys
+import tempfile
 import time as _time
 from typing import List, Optional, Sequence
 
@@ -238,14 +240,21 @@ def run(csv: bool = True, json_path: Optional[str] = None,
         md0 = init_state(p, pos, vel)
         spec = chaos.FaultSpec("traj.step", "nonfinite", p=1.0, after=1,
                                max_fires=1)
-        run_trajectory(p, md0, n_steps, dt, segment_len=16)  # warm, no fault
+        # checkpointed run: the rollback recovers through the checkpoint
+        # path, so a traced run records the full segment / rebin /
+        # rollback / checkpoint span set (the obs-smoke contract)
+        ckpt = tempfile.mkdtemp(prefix="fig_traj_ckpt_")
+        kw = dict(segment_len=16, checkpoint_dir=ckpt, checkpoint_every=16,
+                  resume=False)
+        run_trajectory(p, md0, n_steps, dt, **kw)           # warm, no fault
         with chaos.inject(spec, seed=seed):
             # single timed run INSIDE the fault window: a warm run in here
             # would consume the one-shot fault and time a clean run instead
             t0 = _time.perf_counter()
-            res = run_trajectory(p, md0, n_steps, dt, segment_len=16)
+            res = run_trajectory(p, md0, n_steps, dt, **kw)
             jax.block_until_ready(res.state.positions)
             t = _time.perf_counter() - t0
+        shutil.rmtree(ckpt, ignore_errors=True)
         finite = bool(jnp.all(jnp.isfinite(res.state.positions)))
         records.append(dict(
             bench_record(case, "traj_fused", "reference", t / n_steps,

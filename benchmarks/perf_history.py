@@ -76,17 +76,15 @@ def series(snapshots: List[Tuple[str, Dict[Key, dict]]],
 def layout_of(snapshots: List[Tuple[str, Dict[Key, dict]]],
               key: Key) -> str:
     """Execution-layout tag of a series: the latest record's ``layout``
-    field, else inferred from the strategy suffix (records predating the
-    tag), so the trajectory distinguishes dense / compact / packed rows."""
+    field **verbatim**, else inferred from the strategy suffix (records
+    predating the tag), so the trajectory distinguishes dense / compact /
+    packed rows. An explicit field always wins — second-guessing it from
+    the strategy name would silently mislabel layouts the suffix rule
+    doesn't know (e.g. a future ``sfc`` layout rendering as ``dense``)."""
     for _, recs in reversed(snapshots):
         rec = recs.get(key)
         if rec is not None and "layout" in rec:
-            tag = rec["layout"]
-            # a dense-layout record of a *_compact strategy is the
-            # compacted execution path: render the finer tag
-            if tag == "dense" and key[1].endswith("_compact"):
-                return "compact"
-            return tag
+            return rec["layout"]
     return _infer_layout(key[1])
 
 
@@ -137,11 +135,24 @@ def rebin_of(snapshots: List[Tuple[str, Dict[Key, dict]]],
     return "-"
 
 
+def drift_of(snapshots: List[Tuple[str, Dict[Key, dict]]],
+             key: Key) -> str:
+    """Model-drift column of a series: the latest record's ``drift`` field
+    (relative model-vs-measured traffic error from ``repro.obs.audit``,
+    attached by benchmarks that run the audit). Records without an audit
+    render as ``-``."""
+    for _, recs in reversed(snapshots):
+        rec = recs.get(key)
+        if rec is not None and "drift" in rec:
+            return f"{float(rec['drift']):+.2f}"
+    return "-"
+
+
 def _infer_layout(strategy: str) -> str:
-    if strategy.endswith("_packed"):
-        return "packed"
-    if strategy.endswith("_compact"):
-        return "compact"
+    for suffix, tag in (("_packed", "packed"), ("_compact", "compact"),
+                        ("_sfc", "sfc")):
+        if strategy.endswith(suffix):
+            return tag
     return "dense"
 
 
@@ -166,7 +177,7 @@ def format_table(snapshots: List[Tuple[str, Dict[Key, dict]]],
     lines = [f"# {len(snapshots)} snapshots: "
              + " -> ".join(label for label, _ in snapshots),
              "case,strategy,backend,first_us,last_us,delta_pct,trajectory,"
-             "rebin,rps,p99_ms,resilience,layout"]
+             "rebin,rps,p99_ms,resilience,drift,layout"]
     for key, vals in ss.items():
         present = [(i, v) for i, v in enumerate(vals) if v is not None]
         if not present:
@@ -178,6 +189,7 @@ def format_table(snapshots: List[Tuple[str, Dict[Key, dict]]],
                      f"{delta:+.1f}%,{sparkline(vals)},"
                      f"{rebin_of(snapshots, key)},{rps},{p99},"
                      f"{resilience_of(snapshots, key)},"
+                     f"{drift_of(snapshots, key)},"
                      f"{layout_of(snapshots, key)}")
     return "\n".join(lines)
 
@@ -211,6 +223,7 @@ def main(argv=None) -> int:
                         "rps": serving_of(snapshots, k)[0],
                         "p99_ms": serving_of(snapshots, k)[1],
                         "resilience": resilience_of(snapshots, k),
+                        "drift": drift_of(snapshots, k),
                         "us_per_call": v} for k, v in ss.items()],
         }
         with open(args.json, "w") as f:

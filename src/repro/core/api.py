@@ -50,6 +50,11 @@ from .binning import (CellBins, PackedRows, bin_particles, cell_counts,
                       subbox_occupancy)
 from .domain import Domain, slab_domain
 from .interactions import PairKernel, make_lennard_jones
+# obs imports only its own trace/metrics modules eagerly (no core imports),
+# so the dependency is acyclic: core.api -> obs.{trace,metrics}
+from ..obs import metrics as _obs_metrics
+from ..obs.trace import (event as _obs_event, trace as _obs_trace,
+                         tracing_enabled as _tracing_enabled)
 
 Array = jnp.ndarray
 
@@ -275,8 +280,13 @@ class InteractionPlan:
         trace per (plan, state structure). Total potential energy is
         ``0.5 * potential.sum()`` (each pair counted twice, the paper's
         convention)."""
-        _count_dispatch()
-        return _executor(self, tuple(sorted(state.fields)))(state)
+        _count_dispatch(self)
+        if not _tracing_enabled():       # zero-overhead disabled path
+            return _executor(self, tuple(sorted(state.fields)))(state)
+        with _obs_trace("plan.execute", backend=self.backend,
+                        strategy=self.strategy, layout=self.layout,
+                        n=int(state.positions.shape[0])):
+            return _executor(self, tuple(sorted(state.fields)))(state)
 
     def execute_batch(self, states: ParticleState) -> Tuple[Array, Array]:
         """Batched hot path: one jitted vmapped call over stacked states.
@@ -288,8 +298,13 @@ class InteractionPlan:
         few-particles-per-cell regime) cost one dispatch instead of B.
         Returns ``(forces (B, N, 3), potential (B, N))``, bit-identical to
         executing each system separately."""
-        _count_dispatch()
-        return _batch_executor(self, tuple(sorted(states.fields)))(states)
+        _count_dispatch(self)
+        if not _tracing_enabled():       # zero-overhead disabled path
+            return _batch_executor(self, tuple(sorted(states.fields)))(states)
+        with _obs_trace("plan.execute_batch", backend=self.backend,
+                        strategy=self.strategy, layout=self.layout,
+                        batch=int(states.positions.shape[0])):
+            return _batch_executor(self, tuple(sorted(states.fields)))(states)
 
     def __call__(self, state: ParticleState) -> Tuple[Array, Array]:
         return self.execute(state)
@@ -315,6 +330,13 @@ class InteractionPlan:
         (a chaos-forced verdict, ``repro.testing.chaos``) — or None when
         every bound holds. Same contract, one binning pass, and padding
         exclusion as :meth:`check_overflow` (which is a thin wrapper)."""
+        with _obs_trace("plan.overflow_check", strategy=self.strategy,
+                        layout=self.layout) as sp:
+            oc = self._overflow_class(state)
+            sp.set(result=oc or "ok")
+        return oc
+
+    def _overflow_class(self, state: ParticleState) -> Optional[str]:
         from ..testing import chaos
         if chaos.forced_overflow("core.binning"):
             return "injected"
@@ -413,9 +435,17 @@ class InteractionPlan:
                                                self.strategy, box=box,
                                                align=align, counts=counts)
                 max_active = max(suggested, n_act)
-        return dataclasses.replace(self, m_c=m_c, box=box,
-                                   max_active=max_active,
-                                   shard_cap=shard_cap, row_cap=row_cap)
+        grown = dataclasses.replace(self, m_c=m_c, box=box,
+                                    max_active=max_active,
+                                    shard_cap=shard_cap, row_cap=row_cap)
+        if grown != self:                # no-op replans are not replans
+            _count_replan(self)
+            _obs_event("plan.replan", strategy=self.strategy,
+                       layout=self.layout, m_c=grown.m_c,
+                       m_c_was=self.m_c, row_cap=grown.row_cap,
+                       max_active=grown.max_active,
+                       shard_cap=grown.shard_cap)
+        return grown
 
     def execute_or_replan(self, state: ParticleState
                           ) -> Tuple[Tuple[Array, Array], "InteractionPlan"]:
@@ -829,37 +859,70 @@ def suggest_row_cap(domain: Domain, positions: Array, slack: float = 1.25,
 # counter bump inside it counts traces, not calls). The serving tier's
 # steady-state guarantee — "a warm engine never recompiles" — is asserted
 # against this counter instead of scraping JAX internals.
-_dispatches = 0
-_recompiles = 0
+#
+# Both live in the process metrics registry (``repro.obs``), labeled by
+# (backend, strategy, layout) when the caller has a plan in hand; the
+# functions below are the historical unlabeled views (registry-wide sums),
+# so every pre-existing assertion keeps its semantics while
+# ``obs.render_prom()`` exposes the labeled families.
+DISPATCH_TOTAL = "repro_dispatch_total"
+RECOMPILE_TOTAL = "repro_recompile_total"
+REPLAN_TOTAL = "repro_replan_total"
+
+# live Counter instances keyed by (name, backend, strategy, layout) — a
+# registry ``reset()`` zeroes them in place, so the cache never goes stale
+_metric_cache: Dict[tuple, _obs_metrics.Counter] = {}
+
+
+def _plan_counter(name: str,
+                  p: Optional["InteractionPlan"]) -> _obs_metrics.Counter:
+    key = (name,) if p is None else (name, p.backend, p.strategy, p.layout)
+    c = _metric_cache.get(key)
+    if c is None:
+        labels = ({} if p is None else
+                  {"backend": p.backend, "strategy": p.strategy,
+                   "layout": p.layout})
+        c = _metric_cache[key] = _obs_metrics.registry.counter(name, **labels)
+    return c
 
 
 def dispatch_count() -> int:
-    return _dispatches
+    return int(_obs_metrics.registry.total(DISPATCH_TOTAL))
 
 
 def recompile_count() -> int:
     """Executor traces so far (see the accounting note above): moves only
     when a jitted executor body is (re-)traced — a new plan, a new state
     structure/shape, or an LRU-evicted executor being rebuilt."""
-    return _recompiles
+    return int(_obs_metrics.registry.total(RECOMPILE_TOTAL))
+
+
+def replan_count() -> int:
+    """Replans so far: ``plan.replan`` calls that actually grew a bound."""
+    return int(_obs_metrics.registry.total(REPLAN_TOTAL))
 
 
 def reset_counters() -> None:
-    """Zero both the dispatch and the recompile counter (test/benchmark
-    bookkeeping; the executor caches themselves are untouched)."""
-    global _dispatches, _recompiles
-    _dispatches = 0
-    _recompiles = 0
+    """Zero every steady-state counter in the metrics registry — dispatch,
+    recompile, replan, *and* cross-module counters like the autotuner's
+    ``timing_run_count`` — in one call (test/benchmark bookkeeping; the
+    executor caches themselves are untouched). Historically this cleared
+    only dispatch/recompile and silently left ``autotune.timing_run_count``
+    running; routing everything through ``obs.registry.reset()`` closes
+    that footgun."""
+    _obs_metrics.registry.reset()
 
 
-def _count_dispatch() -> None:
-    global _dispatches
-    _dispatches += 1
+def _count_dispatch(p: Optional["InteractionPlan"] = None) -> None:
+    _plan_counter(DISPATCH_TOTAL, p).inc()
 
 
-def _count_recompile() -> None:
-    global _recompiles
-    _recompiles += 1
+def _count_recompile(p: Optional["InteractionPlan"] = None) -> None:
+    _plan_counter(RECOMPILE_TOTAL, p).inc()
+
+
+def _count_replan(p: Optional["InteractionPlan"] = None) -> None:
+    _plan_counter(REPLAN_TOTAL, p).inc()
 
 
 def _impl(p: InteractionPlan) -> Callable:
@@ -872,7 +935,7 @@ def _impl(p: InteractionPlan) -> Callable:
         inner = halo_impl(p)
 
         def halo_counted(state: ParticleState) -> Tuple[Array, Array]:
-            _count_recompile()           # runs at trace time only
+            _count_recompile(p)          # runs at trace time only
             return inner(state)
         return halo_counted
 
@@ -881,7 +944,7 @@ def _impl(p: InteractionPlan) -> Callable:
     backend = p.halo_inner if p.backend == "halo" else p.backend
 
     def impl(state: ParticleState) -> Tuple[Array, Array]:
-        _count_recompile()               # runs at trace time only
+        _count_recompile(p)              # runs at trace time only
         if p.strategy == "naive_n2":
             if state.valid is not None:
                 raise ValueError(
@@ -1170,6 +1233,23 @@ def _execute_checked(base: InteractionPlan, state: ParticleState, *,
                      sleep=None
                      ) -> Tuple[Tuple[Array, Array], "ExecutionReport"]:
     """The guarded-dispatch engine behind ``plan.execute_checked``."""
+    with _obs_trace("plan.execute_checked", backend=base.backend,
+                    strategy=base.strategy, layout=base.layout) as sp:
+        out, report = _execute_checked_impl(base, state,
+                                            max_replans=max_replans,
+                                            max_retries=max_retries,
+                                            sleep=sleep)
+        sp.set(status=report.status, overflow=report.overflow or "none",
+               replans=report.replans, retries=report.retries,
+               ladder_level=report.ladder_level)
+        return out, report
+
+
+def _execute_checked_impl(base: InteractionPlan, state: ParticleState, *,
+                          max_replans: int = 4,
+                          max_retries: Optional[int] = None,
+                          sleep=None
+                          ) -> Tuple[Tuple[Array, Array], "ExecutionReport"]:
     from ..testing import chaos
 
     report = ExecutionReport(plan=base)
@@ -1226,18 +1306,27 @@ def _execute_checked(base: InteractionPlan, state: ParticleState, *,
                 p = elastic_shrink(p, state)
                 report.plan = p
                 report.shard_shrinks += 1
+                _obs_event("plan.shard_shrink", n_shards=p.n_shards or 1,
+                           fault=str(e))
                 rungs = degradation_ladder(p)
                 health = plan_health(p)      # same key: shrink-stable
                 level = min(level, len(rungs) - 1)
             elif health.note_failure(len(rungs)):
                 report.breaker_trips += 1
                 level = health.level
+                _obs_event("plan.degrade", level=level,
+                           backend=rungs[level].backend,
+                           layout=rungs[level].layout, fault=str(e))
         except (chaos.TransientBackendError, _NonFiniteOutput,
                 RuntimeError, ValueError) as e:
             report.faults.append(f"{type(e).__name__}: {e}")
             if health.note_failure(len(rungs)):
                 report.breaker_trips += 1
                 level = health.level
+                _obs_event("plan.degrade", level=level,
+                           backend=rungs[level].backend,
+                           layout=rungs[level].layout,
+                           fault=type(e).__name__)
         else:
             break                              # clean execution
         attempts += 1
@@ -1252,6 +1341,9 @@ def _execute_checked(base: InteractionPlan, state: ParticleState, *,
                                      state.positions.dtype)), report
 
     report.recovered = health.note_success()
+    if report.recovered:
+        _obs_event("plan.recover", level=level,
+                   backend=rungs[level].backend)
     report.ladder_level = level
     report.backend = rungs[level].backend
     report.layout = rungs[level].layout

@@ -44,6 +44,8 @@ from .api import (InteractionPlan, ParticleState, STRATEGY_NAMES,
 from .domain import Domain
 from .interactions import PairKernel, make_lennard_jones
 from .timing import time_fn
+from ..obs import metrics as _obs_metrics
+from ..obs.trace import event as _obs_event, trace as _obs_trace
 
 Array = jax.Array
 
@@ -67,18 +69,20 @@ DEFAULT_TOP_K = 8
 # Re-tune accounting: one bump per candidate actually timed with the
 # stopwatch (cache hits bump nothing). The serving tier's steady-state
 # guarantee — "a warm engine never re-times" — asserts against this
-# counter, the autotune analogue of ``core.api.recompile_count``.
-_timing_runs = 0
+# counter, the autotune analogue of ``core.api.recompile_count``. Lives in
+# the process metrics registry (``repro.obs``) next to the dispatch /
+# recompile counters, so ``core.api.reset_counters()`` clears it too.
+TIMING_RUNS_TOTAL = "repro_autotune_timing_runs_total"
+CACHE_TOTAL = "repro_autotune_cache_total"
 
 
 def timing_run_count() -> int:
     """Stopwatch candidate timings so far (0 across pure cache hits)."""
-    return _timing_runs
+    return int(_obs_metrics.registry.total(TIMING_RUNS_TOTAL))
 
 
 def reset_timing_runs() -> None:
-    global _timing_runs
-    _timing_runs = 0
+    _obs_metrics.registry.reset(TIMING_RUNS_TOTAL)
 
 
 # --------------------------------------------------------------------------
@@ -211,6 +215,38 @@ def _cost(domain: Domain, avg_ppc: float, c: Candidate,
     return traffic.candidate_cost(domain, c.m_c, avg_ppc, c.strategy,
                                   subbox=c.box, compact=c.compact,
                                   fill=fill, layout=c.layout)
+
+
+def _audit_pruned(domain: Domain, positions: Array,
+                  pruned: Sequence[Candidate], avg_ppc: float,
+                  fill_for, counts_box: list) -> None:
+    """Model-vs-measured audit of every prune decision (repro.obs.audit).
+
+    Records the "model drift" gauge for each pruned candidate — the exact
+    modelled cost that pruned it vs the measured bytes/interaction from the
+    real occupancy — so a wrong prune is visible in the registry instead of
+    lost. Deduplicated on the model's own inputs (batch-size and backend
+    variants share one score); the binning pass is reused from the tuner's
+    memo. Audit failures never fail the tune."""
+    from ..obs.audit import audit_candidate
+    if not counts_box:
+        from .binning import cell_counts
+        counts_box.append(cell_counts(domain, positions))
+    counts = counts_box[0]
+    seen = set()
+    for c in pruned:
+        key = (c.strategy, c.layout, c.compact, c.m_c, c.box)
+        if key in seen:
+            continue
+        seen.add(key)
+        try:
+            audit_candidate(domain, positions, strategy=c.strategy,
+                            m_c=c.m_c, layout=c.layout, compact=c.compact,
+                            subbox=c.box, counts=counts,
+                            modelled=_cost(domain, avg_ppc, c, fill_for))
+        except Exception as e:  # noqa: BLE001 — observability must not
+            print(f"autotune: audit of pruned {c} failed: {e!r}",  # bite
+                  file=sys.stderr)
 
 
 def compact_twins(domain: Domain, positions: Array,
@@ -684,25 +720,42 @@ def tune(domain: Domain, kernel: Optional[PairKernel] = None,
             # requested space — otherwise re-measure
             if (cand.m_c >= max_count and active_safe(cand, strict=False)
                     and cand in set(candidates)):
+                _obs_metrics.registry.counter(CACHE_TOTAL,
+                                              result="hit").inc()
+                _obs_event("autotune.cache", result="hit",
+                           strategy=cand.strategy, layout=cand.layout)
                 return TuneResult(
                     plan=cand.plan(domain, kernel, interpret), candidate=cand,
                     timings={}, reps={}, pruned=(), cache_hit=True,
                     cache_file=str(cfile))
+    _obs_metrics.registry.counter(CACHE_TOTAL, result="miss").inc()
+    _obs_event("autotune.cache", result="miss", candidates=len(candidates))
     kept, pruned = prune_candidates(domain, avg_ppc, candidates,
                                     top_k=top_k, fill_for=fill_for)
+    _audit_pruned(domain, positions, pruned, avg_ppc, fill_for, _counts_box)
 
     state = ParticleState(positions)
     timings: Dict[Candidate, float] = {}
     nreps: Dict[Candidate, int] = {}
-    global _timing_runs
     for cand in kept:
         try:
             p = cand.plan(domain, kernel, interpret)
-            _timing_runs += 1
-            secs, r = time_fn(p.execute, state, reps=reps, budget_s=budget_s)
+            _obs_metrics.registry.counter(
+                TIMING_RUNS_TOTAL, backend=cand.backend,
+                strategy=cand.strategy, layout=cand.layout).inc()
+            with _obs_trace("autotune.time", backend=cand.backend,
+                            strategy=cand.strategy, layout=cand.layout,
+                            compact=cand.compact,
+                            modelled_bpi=_cost(domain, avg_ppc, cand,
+                                               fill_for)) as sp:
+                secs, r = time_fn(p.execute, state, reps=reps,
+                                  budget_s=budget_s)
+                sp.set(seconds_per_call=secs, reps=r)
         except Exception as e:  # noqa: BLE001 — a broken candidate loses,
             print(f"autotune: candidate {cand} failed: {e!r}",  # not the run
                   file=sys.stderr)
+            _obs_event("autotune.candidate_failed", backend=cand.backend,
+                       strategy=cand.strategy, error=type(e).__name__)
             continue
         timings[cand] = secs
         nreps[cand] = r
@@ -711,6 +764,10 @@ def tune(domain: Domain, kernel: Optional[PairKernel] = None,
             f"autotune: all {len(kept)} timed candidates failed (see stderr)")
 
     winner = min(timings, key=timings.get)
+    _obs_event("autotune.winner", backend=winner.backend,
+               strategy=winner.strategy, layout=winner.layout,
+               compact=winner.compact,
+               seconds_per_call=timings[winner])
     _store_cache(cfile, key, {
         "version": CACHE_VERSION,
         "candidate": winner.to_json(),

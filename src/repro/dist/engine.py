@@ -50,7 +50,14 @@ from ..core.binning import (EMPTY_POS, bin_particles, cell_counts,
                             pack_rows, shard_pencil_active,
                             shard_slab_counts)
 from ..core.domain import Domain, slab_domain
+from ..obs import metrics as _obs_metrics
+from ..obs.trace import event as _obs_event, trace as _obs_trace
 from . import halo as H
+
+# ppermute ghost-plane exchanges *staged* per executor trace (the halo
+# body is shard_mapped and traced once per compile, so — like
+# ``core.api.recompile_count`` — this moves at trace time, not per step)
+GHOST_EXCHANGE_TOTAL = "repro_ghost_exchange_total"
 
 Array = jnp.ndarray
 
@@ -151,15 +158,23 @@ def halo_impl(plan):
             coord_shift=coord_shift)
 
         def exchange_planes(planes):
-            out = {}
-            for name, plane in planes.items():
-                if name == "z":
-                    out[name] = exchange(plane, EMPTY_POS, lz_loc)
-                elif name in ("x", "y"):
-                    out[name] = exchange(plane, EMPTY_POS)
-                else:                          # extra per-particle field
-                    out[name] = exchange(plane, 0.0)
-            return out
+            # staging span: the body runs at trace time only, so this
+            # records one span per compile, not per step
+            with _obs_trace("dist.ghost_exchange", phase="trace",
+                            n_shards=n_shards, layout=plan.layout,
+                            planes=len(planes)):
+                _obs_metrics.registry.counter(
+                    GHOST_EXCHANGE_TOTAL,
+                    n_shards=n_shards).inc(len(planes))
+                out = {}
+                for name, plane in planes.items():
+                    if name == "z":
+                        out[name] = exchange(plane, EMPTY_POS, lz_loc)
+                    elif name in ("x", "y"):
+                        out[name] = exchange(plane, EMPTY_POS)
+                    else:                      # extra per-particle field
+                        out[name] = exchange(plane, 0.0)
+                return out
 
         safe_pos = jnp.where(valid[:, None], local_pos, 0.0)
         local_state = ParticleState(safe_pos, fields_blk)
@@ -194,13 +209,20 @@ def halo_impl(plan):
                 jnp.where(valid, pot, 0.0))
 
     def impl(state) -> Tuple[Array, Array]:
+        # like the body, impl itself is traced once per compile: these
+        # are staging spans (phase="trace"), not per-dispatch timings
         n = state.positions.shape[0]
-        gather_idx, pos_part, fields_part = H.partition_by_shard(
-            dom, state.positions, state.fields, n_shards, cap)
+        with _obs_trace("dist.partition", phase="trace",
+                        n_shards=n_shards, shard_cap=cap, n=n):
+            gather_idx, pos_part, fields_part = H.partition_by_shard(
+                dom, state.positions, state.fields, n_shards, cap)
         in_specs = (P(axis), {k: P(axis) for k in fields_part})
         sharded = shard_map(body, mesh=mesh, in_specs=in_specs,
                             out_specs=(P(axis), P(axis)), check_rep=False)
-        f_part, pot_part = sharded(pos_part, fields_part)
+        with _obs_trace("dist.shard_dispatch", phase="trace",
+                        n_shards=n_shards, strategy=plan.strategy,
+                        layout=plan.layout):
+            f_part, pot_part = sharded(pos_part, fields_part)
         forces = H.scatter_from_shards(gather_idx, n, f_part)
         pot = H.scatter_from_shards(gather_idx, n, pot_part)
         return forces, pot

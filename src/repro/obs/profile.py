@@ -1,0 +1,105 @@
+"""Kernel profiling hooks: ``obs.profile(plan, state)``.
+
+A one-call harness around a plan's hot path: times ``plan.execute`` with
+the library stopwatch (compile excluded, ``core.timing.time_fn``), wraps
+the timed region in ``jax.profiler.trace`` when a profiler trace
+directory is requested (and the profiler is actually available — it is
+optional at runtime, so the harness degrades to timing-only instead of
+raising), and runs the model-vs-measured traffic audit
+(:mod:`repro.obs.audit`) on the same positions. Results land in three
+places at once: the returned :class:`ProfileReport`, a
+``plan.profile`` span in the tracer, and the registry
+(``repro_execute_seconds`` histogram + the model-drift gauge), so a
+benchmark, a dashboard and an interactive session all read the same
+numbers.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+from typing import Optional
+
+from . import audit as _audit
+from . import metrics as _metrics
+from .trace import trace as _trace_span
+
+__all__ = ["ProfileReport", "profile"]
+
+EXEC_HIST = "repro_execute_seconds"
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfileReport:
+    """What one :func:`profile` call measured."""
+
+    seconds_per_call: float
+    reps: int
+    backend: str
+    strategy: str
+    layout: str
+    modelled_bpi: float          # traffic model's bytes / interaction
+    measured_bpi: float          # occupancy-probe measured estimate
+    drift: float                 # measured / modelled - 1
+    interactions: float          # measured candidate pair slots
+    profiler_dir: Optional[str]  # jax.profiler trace dir (None = not run)
+
+
+def _jax_profiler(trace_dir: Optional[str]):
+    """``jax.profiler.trace`` as an optional context manager: None
+    ``trace_dir`` (or an unavailable profiler backend) degrades to a
+    null context instead of failing the profile run."""
+    if trace_dir is None:
+        return contextlib.nullcontext(), None
+    try:
+        import jax.profiler
+        return jax.profiler.trace(str(trace_dir)), str(trace_dir)
+    except Exception:                       # pragma: no cover - env specific
+        return contextlib.nullcontext(), None
+
+
+def profile(plan, state, *, reps: Optional[int] = None,
+            budget_s: float = 0.2,
+            trace_dir: Optional[str] = None) -> ProfileReport:
+    """Time one plan on one state, audit the traffic model, record both.
+
+    ``trace_dir`` requests a ``jax.profiler`` trace of the timed region
+    (viewable in TensorBoard / Perfetto); without it — or when the
+    profiler cannot start in this environment — the harness still times
+    and audits. The stopwatch excludes compile exactly as the autotuner's
+    does."""
+    from ..core.timing import time_fn
+
+    ctx, prof_dir = _jax_profiler(trace_dir)
+    with _trace_span("plan.profile", backend=plan.backend,
+                     strategy=plan.strategy, layout=plan.layout) as sp:
+        with ctx:
+            secs, r = time_fn(plan.execute, state, reps=reps,
+                              budget_s=budget_s)
+        sp.set(seconds_per_call=secs, reps=r)
+
+    fill = 1.0
+    if plan.compact:
+        from ..core.api import active_unit_count, n_units
+        fill = (active_unit_count(plan.domain, state.positions,
+                                  plan.strategy, box=plan.box)
+                / max(n_units(plan.domain, plan.strategy, box=plan.box), 1))
+    try:
+        aud = _audit.audit_candidate(
+            plan.domain, state.positions, strategy=plan.strategy,
+            m_c=plan.m_c, layout=plan.layout, compact=plan.compact,
+            subbox=plan.box, fill=fill, valid=state.valid)
+    except ValueError:           # e.g. naive_n2 twins without an estimate
+        aud = {"modelled_bpi": math.nan, "measured_bpi": math.nan,
+               "drift": math.nan, "interactions": math.nan}
+
+    _metrics.registry.histogram(
+        EXEC_HIST, backend=plan.backend, strategy=plan.strategy,
+        layout=plan.layout).observe(secs)
+    return ProfileReport(
+        seconds_per_call=secs, reps=r, backend=plan.backend,
+        strategy=plan.strategy, layout=plan.layout,
+        modelled_bpi=aud["modelled_bpi"], measured_bpi=aud["measured_bpi"],
+        drift=aud["drift"], interactions=aud["interactions"],
+        profiler_dir=prof_dir)

@@ -57,6 +57,7 @@ from ..core import autotune as at
 from ..core.api import InteractionPlan, ParticleState, plan as make_plan
 from ..core.domain import Domain
 from ..core.interactions import PairKernel, make_lennard_jones
+from ..obs.trace import event as _obs_event, trace as _obs_trace
 from ..testing import chaos
 from .bucketing import (MIN_N_CAP, ShapeClass, classify, quantize_batch,
                         split_batch, stack_states)
@@ -216,15 +217,20 @@ class ServingEngine:
         if deadline is not None and deadline <= now:
             self.metrics.deadline_expired += 1
             self._responses.append(Response(req_id, "deadline"))
+            _obs_event("serve.admission", req_id=req_id, outcome="deadline")
             return req_id
         if self._queued_total() >= self.max_queue:
             if self.admission == "reject":
                 self.metrics.rejected += 1
                 self._responses.append(Response(req_id, "rejected"))
+                _obs_event("serve.admission", req_id=req_id,
+                           outcome="rejected")
                 return req_id
             self._shed_oldest()
         sc = classify(domain, kernel, state.positions.shape[0],
                       tuple(state.fields), self.min_n_cap)
+        _obs_event("serve.admission", req_id=req_id, outcome="queued",
+                   shape_class=sc.label())
         self._kernels.setdefault(sc.kernel_id, kernel)
         self._queues.setdefault(sc, []).append(
             Request(req_id, sc, state, kernel, now, deadline=deadline))
@@ -244,6 +250,8 @@ class ServingEngine:
         self.metrics.shed += 1
         self._responses.append(Response(victim.req_id, "shed",
                                         shape_class=sc.label()))
+        _obs_event("serve.shed", req_id=victim.req_id,
+                   shape_class=sc.label())
 
     # -- dispatch ----------------------------------------------------------
 
@@ -378,6 +386,12 @@ class ServingEngine:
             self._dispatch_batch(sc, batch)
 
     def _dispatch_batch(self, sc: ShapeClass, ready: List[Request]) -> None:
+        with _obs_trace("serve.dispatch", shape_class=sc.label(),
+                        requests=len(ready)) as sp:
+            self._dispatch_batch_impl(sc, ready, sp)
+
+    def _dispatch_batch_impl(self, sc: ShapeClass, ready: List[Request],
+                             sp) -> None:
         rc0, tr0 = api.recompile_count(), at.timing_run_count()
         if sc not in self._plans:
             self._plans[sc] = self._build_plan(sc, ready[0])
@@ -429,6 +443,7 @@ class ServingEngine:
 
         if fault is not None:
             self.metrics.faults += 1
+            sp.set(outcome="fault", fault=type(fault).__name__)
             self._note_class_failure(sc)
             self._requeue_failed(sc, ready, t_done)
             return
@@ -436,6 +451,8 @@ class ServingEngine:
         self._note_class_success(sc)
         self.metrics.batches += 1
         self.metrics.batch_fill.record(len(ready) / b_cap)
+        sp.set(outcome="ok", batch_cap=b_cap, fill=len(ready) / b_cap,
+               seconds=elapsed)
         sizes = [r.state.positions.shape[0] for r in ready]
         for req, (f, pot) in zip(ready, split_batch(forces, potential,
                                                     sizes)):
@@ -475,6 +492,9 @@ class ServingEngine:
             else:
                 self.metrics.retries += 1
                 req.not_before = now + self._backoff(req)
+                _obs_event("serve.retry", req_id=req.req_id,
+                           attempts=req.attempts,
+                           not_before=req.not_before)
                 retry.append(req)
         if retry:
             # re-admit at the front: retried requests are the oldest and
@@ -494,6 +514,8 @@ class ServingEngine:
             br.consec_failures = 0
             self.metrics.breaker_opens += 1
             self.metrics.breaker_open_classes += 1
+            _obs_event("serve.breaker", transition="open",
+                       shape_class=sc.label())
             primary = self._plans.get(sc)
             if primary is not None:
                 self._primary[sc] = primary
@@ -511,5 +533,7 @@ class ServingEngine:
                 br.consec_clean = 0
                 self.metrics.breaker_closes += 1
                 self.metrics.breaker_open_classes -= 1
+                _obs_event("serve.breaker", transition="close",
+                           shape_class=sc.label())
                 if sc in self._primary:
                     self._plans[sc] = self._primary.pop(sc)

@@ -21,7 +21,22 @@ import dataclasses
 import math
 from typing import Dict, List, Optional
 
+from ..obs import metrics as _obs_metrics
+
 __all__ = ["LatencyStats", "ServeMetrics", "VirtualClock", "percentile"]
+
+# ServeMetrics int counter fields mirrored into the process metrics
+# registry as ``serve_<field>`` gauges (gauges, not counters: the mirror is
+# last-writer-wins across engines, and ``breaker_open_classes`` already has
+# gauge semantics). The dataclass stays the serving tier's source of truth
+# — the mirror only makes ``obs.render_prom()`` / ``obs.snapshot()`` show
+# serving next to the core counters.
+_MIRRORED_FIELDS = frozenset({
+    "submitted", "served", "rejected", "shed", "batches", "recompiles",
+    "replans", "autotune_timing_runs", "autotune_cache_hits",
+    "deadline_expired", "failed", "faults", "nonfinite_batches", "retries",
+    "breaker_opens", "breaker_closes", "breaker_open_classes",
+})
 
 
 def percentile(samples: List[float], p: float) -> float:
@@ -143,6 +158,11 @@ class ServeMetrics:
     # throughput window
     t_first_submit: Optional[float] = None
     t_last_done: Optional[float] = None
+
+    def __setattr__(self, name: str, value) -> None:
+        object.__setattr__(self, name, value)
+        if name in _MIRRORED_FIELDS:
+            _obs_metrics.registry.gauge(f"serve_{name}").set(value)
 
     def note_submit(self, t: float) -> None:
         self.submitted += 1

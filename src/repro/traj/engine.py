@@ -67,6 +67,8 @@ import numpy as np
 
 from ..core import api
 from ..core.api import InteractionPlan, ParticleState
+from ..obs import metrics as _obs_metrics
+from ..obs.trace import event as _obs_event, trace as _obs_trace
 from ..core.binning import (bin_particles, image_positions, max_displacement,
                             pack_rows, padded_row_counts, pencil_counts,
                             refresh_bins, subbox_counts)
@@ -75,6 +77,10 @@ from ..physics.integrators import MDState
 from ..testing import chaos
 from ..ckpt import checkpoint as _ckpt
 from . import monitors as M
+
+# skin-contract + fault-recovery rebins, registry family next to the
+# dispatch/recompile/replan counters of core.api
+REBIN_TOTAL = "repro_rebin_total"
 
 Array = jnp.ndarray
 
@@ -361,7 +367,7 @@ def _segment_exec(p: InteractionPlan, integrator: str, seg_len: int,
     @jax.jit
     def run(carry: TrajCarry, dt: Array, gamma: Array, kT: Array,
             fields: Dict[str, Array], valid: Optional[Array]):
-        api._count_recompile()          # runs at trace time only
+        api._count_recompile(p)         # runs at trace time only
         body = make_body(dt, gamma, kT, fields, valid)
         return jax.lax.scan(body, carry, None, length=seg_len)
 
@@ -382,7 +388,7 @@ def _init_exec(p: InteractionPlan, mass: float,
     @jax.jit
     def init(positions, velocities, step0, fields, valid, rng,
              forces0, pot0):
-        api._count_recompile()
+        api._count_recompile(p)
         bins = bin_particles(p.domain, positions, fields, m_c=p.m_c,
                              valid=valid)
         if has_forces:
@@ -412,7 +418,7 @@ def _rebin_exec(p: InteractionPlan, field_names: Tuple[str, ...],
 
     @jax.jit
     def rebin(carry: TrajCarry, fields, valid):
-        api._count_recompile()
+        api._count_recompile(p)
         bins = bin_particles(p.domain, carry.md.positions, fields,
                              m_c=p.m_c, valid=valid)
         return TrajCarry(md=carry.md, bins=bins, ref=carry.md.positions,
@@ -556,7 +562,10 @@ def run_trajectory(base: InteractionPlan, state, n_steps: int, dt: float, *,
                                   has_forces)(
                 positions, vels, jnp.int32(step0), fields, valid, rng0,
                 forces0, pot0)
-            carry, _ = _ckpt.restore(checkpoint_dir, template, step=last)
+            with _obs_trace("traj.checkpoint.load", step=last,
+                            dir=str(checkpoint_dir)):
+                carry, _ = _ckpt.restore(checkpoint_dir, template,
+                                         step=last)
             steps_done = int(extra["steps_done"])
             result.resumed_from = last
             result.plan = p
@@ -565,6 +574,9 @@ def run_trajectory(base: InteractionPlan, state, n_steps: int, dt: float, *,
         carry = _init_exec(p, mass, field_names, has_valid, has_forces)(
             positions, vels, jnp.int32(step0), fields, valid, rng0,
             forces0, pot0)
+    # registry baseline: carry.rebins is cumulative across resumes, the
+    # process counter must only count rebins this call performs
+    rebins0 = int(carry.rebins)
 
     if n_steps == 0 or steps_done >= n_steps:
         result.state = carry.md
@@ -589,7 +601,9 @@ def run_trajectory(base: InteractionPlan, state, n_steps: int, dt: float, *,
 
     def rebin_at(q, c):
         result.forced_rebins += 1
-        return _rebin_exec(q, field_names, has_valid)(c, fields, valid)
+        with _obs_trace("traj.rebin", kind="forced", m_c=q.m_c,
+                        strategy=q.strategy):
+            return _rebin_exec(q, field_names, has_valid)(c, fields, valid)
 
     def grown_rungs(q):
         return api.degradation_ladder(q), api.plan_health(q)
@@ -610,8 +624,11 @@ def run_trajectory(base: InteractionPlan, state, n_steps: int, dt: float, *,
             else:
                 chaos.maybe_delay("traj.step", sleep=sleep)
             chaos.maybe_raise("traj.step")
-            carry2, ys = exec_fn(carry, dt_arr, gamma_arr, kT_arr,
-                                 fields, valid)
+            with _obs_trace("traj.segment", steps=this_len,
+                            start=steps_done, backend=rung.backend,
+                            strategy=rung.strategy, level=level):
+                carry2, ys = exec_fn(carry, dt_arr, gamma_arr, kT_arr,
+                                     fields, valid)
             # host-boundary corruption point (the scan itself is traced
             # and must never be poisoned at trace time)
             pos2 = chaos.corrupt("traj.step", carry2.md.positions)
@@ -648,6 +665,10 @@ def run_trajectory(base: InteractionPlan, state, n_steps: int, dt: float, *,
                 break
             else:
                 result.replans += 1
+                api._count_replan(p)
+                _obs_event("traj.replan", m_c=grown.m_c, m_c_was=p.m_c,
+                           row_cap=grown.row_cap,
+                           max_active=grown.max_active)
                 p = grown
                 result.plan = p
                 rungs, health = grown_rungs(p)
@@ -668,6 +689,8 @@ def run_trajectory(base: InteractionPlan, state, n_steps: int, dt: float, *,
             result.faults.append(f"breach:{breach}@{steps_done}")
             rollbacks += 1
             result.rollbacks = rollbacks
+            _obs_event("traj.rollback", breach=breach, step=steps_done,
+                       anchor_step=anchor[1])
             if health.note_failure(len(rungs)):
                 level = health.level
             if rollbacks > max_rollbacks:
@@ -693,14 +716,17 @@ def run_trajectory(base: InteractionPlan, state, n_steps: int, dt: float, *,
             if at_ck and checkpoint_dir is not None:
                 try:
                     chaos.maybe_raise("traj.checkpoint")
-                    _ckpt.save(checkpoint_dir, steps_done, carry,
-                               extra={"steps_done": steps_done,
-                                      "ncells": list(p.domain.ncells),
-                                      "integrator": integrator,
-                                      "m_c": p.m_c,
-                                      "row_cap": p.row_cap,
-                                      "max_active": p.max_active,
-                                      "segment_len": seg})
+                    with _obs_trace("traj.checkpoint.save",
+                                    step=steps_done,
+                                    dir=str(checkpoint_dir)):
+                        _ckpt.save(checkpoint_dir, steps_done, carry,
+                                   extra={"steps_done": steps_done,
+                                          "ncells": list(p.domain.ncells),
+                                          "integrator": integrator,
+                                          "m_c": p.m_c,
+                                          "row_cap": p.row_cap,
+                                          "max_active": p.max_active,
+                                          "segment_len": seg})
                     result.checkpoints += 1
                 except (chaos.TransientBackendError, OSError) as e:
                     # a failed checkpoint must never kill the run; the
@@ -720,6 +746,10 @@ def run_trajectory(base: InteractionPlan, state, n_steps: int, dt: float, *,
     result.steps = steps_done
     result.rebins = int(carry.rebins)
     result.ladder_level = level
+    _obs_metrics.registry.counter(
+        REBIN_TOTAL, backend=p.backend, strategy=p.strategy,
+        layout=p.layout).inc(max(0, result.rebins - rebins0)
+                             + result.forced_rebins)
     if segments:
         result.traces = {k: np.concatenate([s[k] for s in segments])
                          for k in ("kinetic", "potential", "total")}

@@ -100,7 +100,7 @@ def test_layout_column_distinguishes_dense_compact_packed(tmp_path):
     assert PH.layout_of(snaps, ("p", "xpencil_packed",
                                 "reference")) == "packed"
     out = PH.format_table(snaps, ss)
-    assert out.splitlines()[1].endswith(",layout")
+    assert out.splitlines()[1].endswith(",drift,layout")
     assert any(line.endswith(",packed") for line in out.splitlines())
     # --json payload carries the tag too
     import json as _json
@@ -109,6 +109,40 @@ def test_layout_column_distinguishes_dense_compact_packed(tmp_path):
     payload = _json.loads((tmp_path / "s.json").read_text())
     by_case = {s["case"]: s["layout"] for s in payload["series"]}
     assert by_case == {"a": "dense", "c": "compact", "p": "packed"}
+
+
+def test_layout_field_wins_over_suffix_inference(tmp_path):
+    """An explicit ``layout`` field is trusted verbatim — suffix inference
+    is only a fallback for untagged records, so a future layout (``sfc``)
+    on a suffix-less strategy doesn't silently render as ``dense``."""
+    sfc = dict(_rec("s", 9.0, strategy="xpencil"), layout="sfc")
+    _snap(tmp_path, "BENCH_001.json",
+          [sfc, _rec("z", 4.0, strategy="cell_sfc")])
+    snaps = PH.collect(tmp_path)
+    assert PH.layout_of(snaps, ("s", "xpencil", "reference")) == "sfc"
+    # untagged records with a known suffix still infer
+    assert PH.layout_of(snaps, ("z", "cell_sfc", "reference")) == "sfc"
+    assert PH._infer_layout("xpencil_packed") == "packed"
+    assert PH._infer_layout("xpencil") == "dense"
+
+
+def test_drift_column_renders_model_audit(tmp_path):
+    """Records carrying the model-vs-measured audit's ``drift`` field
+    render it as a column; audit-less records render ``-``. The latest
+    tagged snapshot wins, mirroring the other extras columns."""
+    drifted = dict(_rec("d", 8.0), drift=-0.021)
+    _snap(tmp_path, "BENCH_001.json", [_rec("a", 10.0), _rec("d", 7.0)])
+    _snap(tmp_path, "BENCH_002.json", [drifted])
+    snaps = PH.collect(tmp_path)
+    assert PH.drift_of(snaps, ("d", "xpencil", "reference")) == "-0.02"
+    assert PH.drift_of(snaps, ("a", "xpencil", "reference")) == "-"
+    out = PH.format_table(snaps, PH.series(snaps))
+    assert any(",-0.02," in line for line in out.splitlines())
+    rc = PH.main([str(tmp_path), "--json", str(tmp_path / "s.json")])
+    assert rc == 0
+    payload = json.loads((tmp_path / "s.json").read_text())
+    by_case = {s["case"]: s["drift"] for s in payload["series"]}
+    assert by_case == {"a": "-", "d": "-0.02"}
 
 
 def test_serving_columns_render_rps_and_p99(tmp_path):
@@ -122,7 +156,7 @@ def test_serving_columns_render_rps_and_p99(tmp_path):
                                  "reference")) == ("150.0", "28.13")
     assert PH.serving_of(snaps, ("a", "xpencil", "reference")) == ("-", "-")
     out = PH.format_table(snaps, PH.series(snaps))
-    assert out.splitlines()[1].endswith(",rps,p99_ms,resilience,layout")
+    assert out.splitlines()[1].endswith(",rps,p99_ms,resilience,drift,layout")
     assert any(",150.0,28.13," in line for line in out.splitlines())
 
 

@@ -1,0 +1,107 @@
+"""Trace viewer: JSONL span exports -> Chrome trace_event + a summary.
+
+The tracer (``repro.obs.trace``) exports its ring buffer two ways: raw
+JSONL (one span/event record per line, seconds since enable) and Chrome's
+``trace_event`` JSON (microseconds, loadable in ``chrome://tracing`` /
+Perfetto). Benchmarks emit both as sidecars; this tool works on the JSONL
+form after the fact::
+
+    python tools/trace_view.py RUN.trace.jsonl                 # summary
+    PYTHONPATH=src python tools/trace_view.py RUN.trace.jsonl \
+        --chrome OUT.json                  # needs repro for the converter
+    python tools/trace_view.py RUN.trace.jsonl --name serve.dispatch
+
+The summary aggregates complete spans (``ph == "X"``) per name: count,
+total/mean/max duration in ms — the quick "where did the time go" read
+without leaving the terminal. ``--name`` filters both the summary and the
+conversion to spans whose name contains the substring. Instant events
+(``ph == "i"``) are listed by count only; they carry no duration.
+
+Exit code 0 on success, 1 on an unreadable or empty input file.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Dict, List
+
+
+def load_jsonl(path: str | pathlib.Path) -> List[dict]:
+    """-> span/event records; malformed lines are skipped with a warning
+    (a truncated trace from a killed run should still mostly render)."""
+    records: List[dict] = []
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                records.append(json.loads(line))
+            except json.JSONDecodeError:
+                print(f"trace_view: {path}:{lineno}: skipping malformed "
+                      "line", file=sys.stderr)
+    return records
+
+
+def summarize(records: List[dict]) -> str:
+    """-> per-name duration table (spans) + event counts, as text."""
+    spans: Dict[str, List[float]] = {}
+    events: Dict[str, int] = {}
+    for r in records:
+        name = r.get("name", "?")
+        if r.get("ph") == "X":
+            spans.setdefault(name, []).append(float(r.get("dur", 0.0)))
+        else:
+            events[name] = events.get(name, 0) + 1
+    lines = ["name,count,total_ms,mean_ms,max_ms"]
+    for name in sorted(spans, key=lambda n: -sum(spans[n])):
+        ds = spans[name]
+        total = sum(ds)
+        lines.append(f"{name},{len(ds)},{total * 1e3:.3f},"
+                     f"{total / len(ds) * 1e3:.3f},{max(ds) * 1e3:.3f}")
+    if events:
+        lines.append("# events")
+        for name in sorted(events):
+            lines.append(f"{name},{events[name]},-,-,-")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="JSONL span export (obs.export_jsonl)")
+    ap.add_argument("--chrome", metavar="PATH", default=None,
+                    help="also write the Chrome trace_event conversion")
+    ap.add_argument("--name", default=None,
+                    help="only spans/events whose name contains this")
+    args = ap.parse_args(argv)
+
+    try:
+        records = load_jsonl(args.trace)
+    except OSError as e:
+        print(f"trace_view: {e}", file=sys.stderr)
+        return 1
+    if args.name:
+        records = [r for r in records if args.name in r.get("name", "")]
+    if not records:
+        print(f"trace_view: no records in {args.trace}"
+              + (f" matching {args.name!r}" if args.name else ""),
+              file=sys.stderr)
+        return 1
+
+    print(summarize(records))
+    if args.chrome:
+        from repro.obs import chrome_events
+        payload = {"traceEvents": chrome_events(records),
+                   "displayTimeUnit": "ms"}
+        with open(args.chrome, "w") as f:
+            json.dump(payload, f)
+        print(f"wrote {len(payload['traceEvents'])} trace events to "
+              f"{args.chrome}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
