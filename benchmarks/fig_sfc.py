@@ -1,0 +1,142 @@
+"""SFC figure: space-filling-curve cluster layout vs packed rows by fill.
+
+The packed-row layout (``fig_packed``) strips slot padding inside active
+pencils but still visits every pencil window dense in the stencil; the SFC
+cluster layout (``plan(..., strategy="cell_dense", layout="sfc")``) bins
+cells into Morton-ordered clusters and compresses the *schedule* itself — a
+static ``pair_cap``-bounded list of (cluster, stencil-slot) codes that only
+names cluster pairs where both sides hold particles. On clustered scenes
+the kept-pair list collapses with the occupied fraction, so the win grows
+as the blob tightens. This benchmark sweeps ppc ∈ {1, 2, 4, 8} on the
+gaussian-blob scenario and reports
+
+    speedup = t(compacted packed xpencil) / t(sfc cell_dense)
+
+per case, with the measured ``pair_cap`` / kept-pair count alongside, plus
+the model-vs-measured traffic drift of the sfc candidate (``repro.obs
+.audit``) so the perf history renders the sfc rows with their audit.
+
+Both timed paths are executed once on the same positions and checked
+bit-for-bit against their own strategy's dense schedule before anything is
+timed — a benchmark that silently drifted from the oracle would be worse
+than no benchmark.
+
+``--json PATH`` writes the timings as BENCH_*.json perf records (with a
+``layout`` tag and ppc/m_c/pair_cap/speedup/drift extras); the committed
+``benchmarks/BENCH_sfc.json`` is this module's output on the reference
+container and is diffed (report-only) by the CI docs job.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core import (Domain, ParticleState, make_lennard_jones, plan,
+                        scenarios, suggest_m_c)
+from repro.obs import audit
+
+from .common import bench_record, time_fn, write_bench_json
+
+DEFAULT_PPCS = (1, 2, 4, 8)
+
+
+def run(csv: bool = True, json_path: Optional[str] = None,
+        record_sink: Optional[List[dict]] = None, division: int = 12,
+        ppcs: Sequence[int] = DEFAULT_PPCS, sigma_frac: float = 0.18,
+        seed: int = 0, budget_s: float = 1.0) -> List[dict]:
+    dom = Domain.cubic(division, cutoff=1.0)
+    kern = make_lennard_jones()
+    rows: List[dict] = []
+    records: List[dict] = []
+    if csv:
+        print("name,us_per_call,derived")
+    for ppc in ppcs:
+        case = f"sfc/blob_ppc{ppc}"
+        n = ppc * dom.n_cells
+        pos = scenarios.sample_gaussian_blob(
+            dom, jax.random.PRNGKey(seed), n, sigma_frac=sigma_frac)
+        m_c = suggest_m_c(dom, pos)
+        state = ParticleState(pos)
+        p_cell = plan(dom, kern, m_c=m_c, strategy="cell_dense",
+                      backend="reference")
+        p_sfc = plan(dom, kern, m_c=m_c, strategy="cell_dense",
+                     backend="reference", layout="sfc", positions=pos)
+        p_pack = plan(dom, kern, m_c=m_c, strategy="xpencil",
+                      backend="reference", compact=True, layout="packed",
+                      positions=pos)
+        p_xp = plan(dom, kern, m_c=m_c, strategy="xpencil",
+                    backend="reference")
+
+        # correctness gate: each timed path must agree with its own
+        # strategy's dense schedule bit-for-bit on the scene it is about
+        # to be timed on
+        anchors = {"cell_dense": p_cell.execute(state),
+                   "xpencil": p_xp.execute(state)}
+        ok = True
+        for name, p in (("sfc", p_sfc), ("packed", p_pack)):
+            f_a, q_a = anchors[p.strategy]
+            f, q = p.execute(state)
+            if not (np.array_equal(np.asarray(f_a), np.asarray(f))
+                    and np.array_equal(np.asarray(q_a), np.asarray(q))):
+                print(f"fig_sfc: {case}: {name} result DIVERGED from its "
+                      "dense anchor — not timing a wrong answer",
+                      file=sys.stderr)
+                ok = False
+        if not ok:
+            continue
+
+        t_p, r_p = time_fn(p_pack.execute, state, budget_s=budget_s)
+        t_s, r_s = time_fn(p_sfc.execute, state, budget_s=budget_s)
+        speedup = t_p / t_s
+        drift = audit.audit_candidate(dom, pos, strategy="cell_dense",
+                                      m_c=m_c, layout="sfc")["drift"]
+        row = {"case": case, "ppc": ppc, "m_c": m_c,
+               "pair_cap": p_sfc.pair_cap, "packed_s": t_p, "sfc_s": t_s,
+               "speedup": speedup, "drift": drift}
+        rows.append(row)
+        records.append(dict(bench_record(case, "xpencil_packed",
+                                         "reference", t_p, r_p,
+                                         layout="packed"),
+                            ppc=ppc, m_c=m_c, row_cap=p_pack.row_cap))
+        records.append(dict(bench_record(case, "cell_sfc", "reference",
+                                         t_s, r_s, layout="sfc",
+                                         drift=drift),
+                            ppc=ppc, m_c=m_c, pair_cap=p_sfc.pair_cap,
+                            speedup_vs_packed=speedup))
+        if csv:
+            print(f"{case}/xpencil_packed,{t_p * 1e6:.1f},"
+                  f"row_cap={p_pack.row_cap}")
+            print(f"{case}/cell_sfc,{t_s * 1e6:.1f},"
+                  f"pair_cap={p_sfc.pair_cap};speedup={speedup:.2f};"
+                  f"drift={drift:+.2f}")
+    if json_path:
+        write_bench_json(json_path, records)
+    if record_sink is not None:
+        record_sink.extend(records)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--division", type=int, default=12,
+                    help="cells per axis")
+    ap.add_argument("--ppc", type=int, nargs="+", default=list(DEFAULT_PPCS),
+                    help="global particles-per-cell sweep")
+    ap.add_argument("--sigma", type=float, default=0.18,
+                    help="gaussian blob sigma as a fraction of the box")
+    ap.add_argument("--budget", type=float, default=1.0,
+                    help="stopwatch budget per case (seconds)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write BENCH_*.json perf records to PATH")
+    args = ap.parse_args()
+    run(division=args.division, ppcs=tuple(args.ppc),
+        sigma_frac=args.sigma, budget_s=args.budget, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,7 @@
   fig8/*      arithmetic-intensity sweep (paper Fig. 8)
   sparse/*    compacted-schedule speedup vs fill fraction (clustered scenes)
   packed/*    packed-row (CSR) layout speedup vs particles per cell
+  sfc/*       SFC cluster layout (compressed pair list) vs packed rows
   traj/*      fused trajectory engine vs per-step execute loop (skin reuse)
   serve/*     serving-tier open-loop latency/throughput (batching front door)
   halo/*      distributed-backend weak scaling (smoke: whatever devices
@@ -39,7 +40,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (autotune_bench, fig6_speedup, fig8_flop_sweep,
-                   fig_halo, fig_packed, fig_serve, fig_sparse,
+                   fig_halo, fig_packed, fig_serve, fig_sfc, fig_sparse,
                    fig_traj, lm_roofline, prefix_bench, table1_timing,
                    traffic_model)
 
@@ -70,6 +71,9 @@ def main() -> None:
     print("# packed: CSR-row layout speedup vs ppc", flush=True)
     fig_packed.run(record_sink=records, division=8, ppcs=(1, 2),
                    budget_s=0.3)
+    print("# sfc: cluster pair-list layout vs packed rows", flush=True)
+    fig_sfc.run(record_sink=records, division=6, ppcs=(1, 2),
+                budget_s=0.3)
     print("# halo: distributed-backend smoke (local device set)",
           flush=True)
     fig_halo.run(record_sink=records, division=4, ppc=3)

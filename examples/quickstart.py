@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (Domain, ParticleState, backend_matrix,
-                        make_lennard_jones, plan)
+                        make_lennard_jones, plan, supports_layout)
 
 
 def main():
@@ -43,11 +43,17 @@ def main():
 
     for backend, strategies in sorted(backend_matrix().items()):
         for strategy in strategies:
+            # some pairs exist only under a non-dense layout (the pallas
+            # cell_dense runner is the sfc cluster kernel)
+            layout = ("dense" if supports_layout(backend, strategy, "dense")
+                      else "sfc")
             p = plan(domain, kernel, m_c=auto.m_c, strategy=strategy,
-                     backend=backend, interpret=True)
+                     backend=backend, layout=layout, positions=positions,
+                     interpret=True)
             forces, pot = p.execute(state)
             err = float(jnp.max(jnp.abs(forces - f_ref))) / fscale
-            print(f"{backend:9s} {strategy:11s}: "
+            tag = strategy if layout == "dense" else f"{strategy}/{layout}"
+            print(f"{backend:9s} {tag:14s}: "
                   f"E = {0.5 * float(jnp.sum(pot)):+.4e} rel|dF| = {err:.2e}")
             np.testing.assert_allclose(np.asarray(forces) / fscale,
                                        np.asarray(f_ref) / fscale,

@@ -14,13 +14,17 @@ from .api import (ExecutionReport, InteractionPlan, ParticleState, PlanHealth,
                   executor_cache_info, fallback_plan, plan, plan_health,
                   recompile_count, register_backend, reset_counters,
                   reset_health, set_executor_cache_size, suggest_max_active,
-                  suggest_row_cap, supports_compact, supports_layout)
-from .binning import (CellBins, Occupancy, PackedRows, bin_particles,
-                      dense_to_particles, full_pencil_occupancy,
-                      gather_pencil_rows, gather_to_particles,
-                      interior_to_padded, pack_rows, packed_to_particles,
-                      padded_row_counts, pencil_occupancy, subbox_occupancy,
-                      unpack_scatter)
+                  suggest_pair_cap, suggest_row_cap, supports_compact,
+                  supports_layout)
+from .binning import (CellBins, Occupancy, PackedRows, SfcClusters,
+                      bin_particles, build_sfc_clusters, decode_pair_codes,
+                      dense_to_particles, encode_pair_masks,
+                      full_pencil_occupancy, gather_pencil_rows,
+                      gather_to_particles, hilbert_decode, hilbert_encode,
+                      interior_to_padded, morton_decode, morton_encode,
+                      pack_rows, packed_to_particles, padded_row_counts,
+                      pencil_occupancy, sfc_cluster_tables, sfc_pair_count,
+                      sfc_to_particles, subbox_occupancy, unpack_scatter)
 from .engine import CellListEngine, compute_interactions, suggest_m_c
 from .interactions import (
     PairKernel,
@@ -47,6 +51,10 @@ __all__ = [
     "interior_to_padded", "pack_rows", "packed_to_particles",
     "padded_row_counts", "unpack_scatter", "full_pencil_occupancy",
     "pencil_occupancy", "subbox_occupancy",
+    "SfcClusters", "build_sfc_clusters", "sfc_cluster_tables",
+    "sfc_pair_count", "sfc_to_particles", "encode_pair_masks",
+    "decode_pair_codes", "morton_encode", "morton_decode",
+    "hilbert_encode", "hilbert_decode", "suggest_pair_cap",
     "ExecutionReport", "InteractionPlan", "ParticleState", "PlanHealth",
     "plan", "register_backend",
     "backend_matrix", "choose_strategy", "clear_executor_cache",

@@ -43,11 +43,12 @@ import jax.numpy as jnp
 
 from . import strategies as S
 from . import traffic
-from .binning import (CellBins, PackedRows, bin_particles, cell_counts,
-                      dense_to_particles, full_pencil_occupancy,
-                      pack_rows, packed_to_particles, padded_row_counts,
-                      pencil_counts, pencil_occupancy, subbox_counts,
-                      subbox_occupancy)
+from .binning import (CellBins, PackedRows, SfcClusters, bin_particles,
+                      build_sfc_clusters, cell_counts, dense_to_particles,
+                      full_pencil_occupancy, pack_rows, packed_to_particles,
+                      padded_row_counts, pencil_counts, pencil_occupancy,
+                      sfc_n_clusters, sfc_pair_count, sfc_to_particles,
+                      subbox_counts, subbox_occupancy)
 from .domain import Domain, slab_domain
 from .interactions import PairKernel, make_lennard_jones
 # obs imports only its own trace/metrics modules eagerly (no core imports),
@@ -98,10 +99,11 @@ class ParticleState:
 
 # (backend, strategy, layout) -> fn(plan, bins, state) -> (forces, pot).
 # ``layout`` is the execution layout the implementation reads: "dense"
-# implementations receive a CellBins, "packed" ones a binning.PackedRows.
+# implementations receive a CellBins, "packed" ones a binning.PackedRows,
+# "sfc" ones a binning.SfcClusters (compressed cluster-pair list).
 _BACKENDS: Dict[Tuple[str, str, str], Callable] = {}
 
-LAYOUT_NAMES = ("dense", "packed")
+LAYOUT_NAMES = ("dense", "packed", "sfc")
 
 # (backend, strategy, layout) triples whose implementation honours
 # ``plan.compact`` (occupancy-compacted iteration). By register_backend.
@@ -199,8 +201,9 @@ class InteractionPlan:
     interpret: Optional[bool] = None             # pallas: None = auto
     compact: bool = False                        # occupancy-compacted path
     max_active: Optional[int] = None             # static active-unit bound
-    layout: str = "dense"                        # slot layout: dense | packed
+    layout: str = "dense"                 # layout: dense | packed | sfc
     row_cap: Optional[int] = None                # static packed-row bound
+    pair_cap: Optional[int] = None               # static sfc pair-list bound
     # -- distributed halo execution (backend="halo"; repro.dist.engine) ----
     halo_inner: str = "reference"                # per-shard backend
     n_shards: Optional[int] = None               # Z-slabs on the mesh axis
@@ -271,6 +274,16 @@ class InteractionPlan:
             if not self.row_cap or self.row_cap < 1:
                 raise ValueError(
                     'layout="packed" needs a positive static row_cap bound '
+                    "(plan(..., positions=...) measures one)")
+        if self.layout == "sfc":
+            if self.strategy not in S.SFC_STRATEGIES:
+                raise ValueError(
+                    f'layout="sfc" is not defined for '
+                    f"{self.strategy!r}; sfc strategies: "
+                    f"{sorted(S.SFC_STRATEGIES)}")
+            if not self.pair_cap or self.pair_cap < 1:
+                raise ValueError(
+                    'layout="sfc" needs a positive static pair_cap bound '
                     "(plan(..., positions=...) measures one)")
 
     # -- hot path ----------------------------------------------------------
@@ -347,6 +360,11 @@ class InteractionPlan:
             if int(jnp.max(padded_row_counts(self.domain, counts))
                    ) > self.row_cap:
                 return "row_cap"
+        if self.layout == "sfc" and not self._multi_shard:
+            # multi-shard sfc plans check pair_cap per shard (slab-local
+            # cluster orders) inside halo_overflow_class below
+            if sfc_pair_count(self.domain, counts=counts) > self.pair_cap:
+                return "pair_cap"
         if self._multi_shard:
             from ..dist.engine import halo_overflow_class
             return halo_overflow_class(self, counts)
@@ -379,6 +397,8 @@ class InteractionPlan:
           (``suggest_max_active``),
         * ``row_cap`` — particles per packed pencil row of a
           ``layout="packed"`` plan (``suggest_row_cap``),
+        * ``pair_cap`` — compressed cluster-pair list length of a
+          ``layout="sfc"`` plan (``suggest_pair_cap``),
         * ``shard_cap`` — per-shard particle load of a multi-shard halo
           plan (``dist.halo.suggest_shard_cap``; halo plans also apply
           per-shard reductions to ``max_active``).
@@ -415,6 +435,23 @@ class InteractionPlan:
                 row_cap = max(suggest_row_cap(self.domain, state.positions,
                                               align=align, counts=counts),
                               grow)
+        pair_cap = self.pair_cap
+        if self.layout == "sfc":
+            if self._multi_shard:
+                # the bound is per shard: each slab has its own cluster
+                # order, so the busiest shard's pair list sets the cap
+                from ..dist.engine import shard_sfc_pairs
+                n_pairs = int(max(shard_sfc_pairs(self.domain, counts,
+                                                  self.n_shards)))
+                suggested = -(-max(1, int(n_pairs * 1.25 + 0.999))
+                              // align) * align
+            else:
+                n_pairs = sfc_pair_count(self.domain, counts=counts)
+                suggested = suggest_pair_cap(self.domain, align=align,
+                                             counts=counts)
+            if n_pairs > pair_cap:
+                grow = -(-(pair_cap + 1) // align) * align
+                pair_cap = max(suggested, grow, n_pairs)
         max_active = self.max_active
         shard_cap = self.shard_cap
         if self._multi_shard:
@@ -437,12 +474,14 @@ class InteractionPlan:
                 max_active = max(suggested, n_act)
         grown = dataclasses.replace(self, m_c=m_c, box=box,
                                     max_active=max_active,
-                                    shard_cap=shard_cap, row_cap=row_cap)
+                                    shard_cap=shard_cap, row_cap=row_cap,
+                                    pair_cap=pair_cap)
         if grown != self:                # no-op replans are not replans
             _count_replan(self)
             _obs_event("plan.replan", strategy=self.strategy,
                        layout=self.layout, m_c=grown.m_c,
                        m_c_was=self.m_c, row_cap=grown.row_cap,
+                       pair_cap=grown.pair_cap,
                        max_active=grown.max_active,
                        shard_cap=grown.shard_cap)
         return grown
@@ -574,6 +613,7 @@ def plan(domain: Domain, kernel: Optional[PairKernel] = None, *,
          interpret: Optional[bool] = None,
          compact: bool = False, max_active: Optional[int] = None,
          layout: str = "dense", row_cap: Optional[int] = None,
+         pair_cap: Optional[int] = None,
          m_c_slack: float = 1.5,
          halo_inner: str = "reference", n_shards: Optional[int] = None,
          shard_axis: str = "halo", shard_cap: Optional[int] = None,
@@ -614,17 +654,22 @@ def plan(domain: Domain, kernel: Optional[PairKernel] = None, *,
       max_active: static bound on active work units for ``compact=True``;
         measured from ``positions`` (with slack) when omitted.
       layout: slot layout the schedule reads — ``"dense"`` (every cell
-        owns ``m_c`` slots) or ``"packed"`` (CSR pencil rows: particles
+        owns ``m_c`` slots), ``"packed"`` (CSR pencil rows: particles
         stored contiguously per row under ``row_cap``, bytes proportional
         to the particles instead of the padding — the few-particles-per-
-        cell fix; ``xpencil`` only). Composes with ``compact`` (packed
-        rows *and* only active rows) and with ``backend="halo"`` (ghost
-        planes exchanged packed). Bit-identical to dense.
-        ``strategy="autotune"`` explores packed candidates on its own and
-        ignores this flag (and ``row_cap``), exactly like ``compact``.
+        cell fix; ``xpencil`` only), or ``"sfc"`` (space-filling-curve
+        cell clusters driven by a compressed cluster-pair neighbor list
+        under ``pair_cap`` — the schedule itself shrinks to the occupied
+        stencil pairs; ``cell_dense`` only). Composes with ``compact``
+        and with ``backend="halo"``. Bit-identical to dense.
+        ``strategy="autotune"`` explores packed/sfc candidates on its own
+        and ignores this flag (and ``row_cap``/``pair_cap``), exactly
+        like ``compact``.
       row_cap: static particles-per-packed-row bound for
         ``layout="packed"``; measured from ``positions`` (with slack)
         when omitted.
+      pair_cap: static compressed-pair-list bound for ``layout="sfc"``;
+        measured from ``positions`` (with slack) when omitted.
       halo_inner: per-shard backend for ``backend="halo"``
         (``"reference"``/``"pallas"``).
       n_shards: Z-slab count for ``backend="halo"`` (must divide ``nz``);
@@ -677,6 +722,8 @@ def plan(domain: Domain, kernel: Optional[PairKernel] = None, *,
                      else ("cell_dense", "xpencil", "allin"))
         if layout == "packed":
             among = tuple(S.PACKED_STRATEGIES)
+        if layout == "sfc":
+            among = tuple(S.SFC_STRATEGIES)
         strategy = choose_strategy(domain, m_c,
                                    positions.shape[0] / domain.n_cells,
                                    among=among)
@@ -713,6 +760,27 @@ def plan(domain: Domain, kernel: Optional[PairKernel] = None, *,
                                  "positions (to measure the packed-row "
                                  "bound)")
             row_cap = suggest_row_cap(domain, positions)
+    if layout == "sfc":
+        if not supports_layout(inner_backend, strategy, "sfc"):
+            raise ValueError(
+                f"backend {inner_backend!r} has no sfc path for "
+                f"strategy {strategy!r}; sfc-capable pairs: "
+                f"{sorted(k[:2] for k in _BACKENDS if k[2] == 'sfc')}")
+        if pair_cap is None:
+            if positions is None:
+                raise ValueError('layout="sfc" needs either pair_cap or '
+                                 "positions (to measure the pair-list "
+                                 "bound)")
+            if backend == "halo" and n_shards > 1:
+                # per-shard bound: each slab has its own cluster order,
+                # so the busiest shard's measured pair list sets the cap
+                from ..dist.engine import shard_sfc_pairs
+                counts_ = _cell_counts(domain, positions)
+                n_pairs = int(max(shard_sfc_pairs(domain, counts_,
+                                                  n_shards)))
+                pair_cap = -(-max(1, int(n_pairs * 1.25 + 0.999)) // 8) * 8
+            else:
+                pair_cap = suggest_pair_cap(domain, positions)
     if compact:
         if not supports_compact(inner_backend, strategy, layout):
             raise ValueError(
@@ -740,7 +808,7 @@ def plan(domain: Domain, kernel: Optional[PairKernel] = None, *,
                         strategy=strategy, backend=backend,
                         batch_size=batch_size, box=box, interpret=interpret,
                         compact=compact, max_active=max_active,
-                        layout=layout, row_cap=row_cap,
+                        layout=layout, row_cap=row_cap, pair_cap=pair_cap,
                         halo_inner=halo_inner, n_shards=n_shards,
                         shard_axis=shard_axis, shard_cap=shard_cap,
                         mesh=mesh)
@@ -843,6 +911,22 @@ def suggest_row_cap(domain: Domain, positions: Array, slack: float = 1.25,
     mx = int(jnp.max(padded_row_counts(domain, counts)))
     cap = max(1, int(mx * slack + 0.999))
     return -(-cap // align) * align
+
+
+def suggest_pair_cap(domain: Domain, positions: Optional[Array] = None,
+                     slack: float = 1.25, align: int = 8,
+                     counts: Optional[Array] = None) -> int:
+    """One-off static ``pair_cap`` bound for ``layout="sfc"``: the measured
+    compressed cluster-pair list length (``binning.sfc_pair_count``) with
+    slack, rounded up to ``align``, clipped to the all-pairs total
+    ``n_clusters * 27`` (the bound degrades gracefully to the dense
+    stencil). The SFC-layout counterpart of ``suggest_row_cap``; obeys the
+    replan contract (:meth:`InteractionPlan.replan`). Pass precomputed
+    per-cell ``counts`` to skip the binning pass."""
+    n_pairs = sfc_pair_count(domain, positions, counts=counts)
+    cap = max(1, int(n_pairs * slack + 0.999))
+    cap = -(-cap // align) * align
+    return max(min(cap, sfc_n_clusters(domain) * 27), n_pairs)
 
 
 # --------------------------------------------------------------------------
@@ -958,6 +1042,9 @@ def _impl(p: InteractionPlan) -> Callable:
             packed = pack_rows(p.domain, bins, row_cap=p.row_cap)
             return get_backend(backend, p.strategy, "packed")(p, packed,
                                                               state)
+        if p.layout == "sfc":
+            sfc = build_sfc_clusters(p.domain, bins, pair_cap=p.pair_cap)
+            return get_backend(backend, p.strategy, "sfc")(p, sfc, state)
         return get_backend(backend, p.strategy)(p, bins, state)
 
     return impl
@@ -1174,7 +1261,7 @@ def reset_health() -> None:
 def degradation_ladder(p: InteractionPlan) -> Tuple[InteractionPlan, ...]:
     """The rungs ``execute_checked`` steps down under repeated failure:
     the plan itself, then backend pallas -> reference, then layout
-    packed -> compact -> dense. Every rung computes bit-identical
+    packed/sfc -> compact -> dense. Every rung computes bit-identical
     results — only cost and code path change. Rung 0 is always ``p``;
     plans already on the reference/dense path have a one-rung ladder."""
     rungs = [p]
@@ -1186,7 +1273,7 @@ def degradation_ladder(p: InteractionPlan) -> Tuple[InteractionPlan, ...]:
         else:
             q = dataclasses.replace(q, backend="reference")
         rungs.append(q)
-    if q.layout == "packed":
+    if q.layout in ("packed", "sfc"):
         q = dataclasses.replace(q, layout="dense")
         rungs.append(q)
     if q.compact:
@@ -1405,3 +1492,14 @@ def _ref_xpencil_packed(p: InteractionPlan, packed: PackedRows,
     out = S.xpencil_packed(p.domain, packed, p.kernel, occ,
                            batch_size=p.batch_size)
     return packed_to_particles(p.domain, packed, *out)
+
+
+@register_backend("reference", "cell_dense", compact=True, layout="sfc")
+def _ref_cell_sfc(p: InteractionPlan, sfc: SfcClusters,
+                  state: ParticleState):
+    """SFC cluster reference backend. ``compact=True`` is accepted as a
+    no-op: the compressed pair list *is* the occupancy compaction (empty
+    neighborhoods never enter ``codes``), so the compacted plan runs the
+    same schedule and stays bit-identical by construction."""
+    out = S.cell_sfc(p.domain, sfc, p.kernel, batch_size=p.batch_size)
+    return sfc_to_particles(p.domain, sfc, *out)

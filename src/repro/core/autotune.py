@@ -58,7 +58,10 @@ Array = jax.Array
 #     ppc and occupancy buckets already separate the regimes the layout
 #     decision depends on; the version bump retires v3 entries whose
 #     candidate space lacked packed twins.
-CACHE_VERSION = 4
+# v5: SFC cluster layout axis (Candidate.layout="sfc"/pair_cap): the
+#     compressed cluster-pair-list twins of every sfc-capable candidate.
+#     Retires v4 entries whose candidate space lacked sfc twins.
+CACHE_VERSION = 5
 
 _CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 _CACHE_FILE = "autotune_cache.json"
@@ -102,8 +105,9 @@ class Candidate:
     max_active: Optional[int] = None             # static active-unit bound
     n_shards: Optional[int] = None               # halo Z-slabs (None = 1)
     shard_cap: Optional[int] = None              # halo per-shard capacity
-    layout: str = "dense"                        # slot layout: dense|packed
+    layout: str = "dense"                        # layout: dense|packed|sfc
     row_cap: Optional[int] = None                # static packed-row bound
+    pair_cap: Optional[int] = None               # static sfc pair-list bound
 
     @property
     def distributed(self) -> bool:
@@ -121,14 +125,15 @@ class Candidate:
                 halo_inner=self.backend, batch_size=self.batch_size,
                 box=None, interpret=interpret, compact=self.compact,
                 max_active=self.max_active, layout=self.layout,
-                row_cap=self.row_cap, n_shards=self.n_shards,
-                shard_cap=self.shard_cap)
+                row_cap=self.row_cap, pair_cap=self.pair_cap,
+                n_shards=self.n_shards, shard_cap=self.shard_cap)
         return InteractionPlan(domain=domain, kernel=kernel, m_c=self.m_c,
                                strategy=self.strategy, backend=self.backend,
                                batch_size=self.batch_size, box=self.box,
                                interpret=interpret, compact=self.compact,
                                max_active=self.max_active,
-                               layout=self.layout, row_cap=self.row_cap)
+                               layout=self.layout, row_cap=self.row_cap,
+                               pair_cap=self.pair_cap)
 
     def to_json(self) -> dict:
         return {"strategy": self.strategy, "backend": self.backend,
@@ -136,7 +141,8 @@ class Candidate:
                 "box": list(self.box) if self.box else None,
                 "compact": self.compact, "max_active": self.max_active,
                 "n_shards": self.n_shards, "shard_cap": self.shard_cap,
-                "layout": self.layout, "row_cap": self.row_cap}
+                "layout": self.layout, "row_cap": self.row_cap,
+                "pair_cap": self.pair_cap}
 
     @classmethod
     def from_json(cls, d: dict) -> "Candidate":
@@ -152,7 +158,9 @@ class Candidate:
                               if d.get("shard_cap") else None),
                    layout=d.get("layout", "dense"),
                    row_cap=(int(d["row_cap"])
-                            if d.get("row_cap") else None))
+                            if d.get("row_cap") else None),
+                   pair_cap=(int(d["pair_cap"])
+                             if d.get("pair_cap") else None))
 
 
 def enumerate_candidates(domain: Domain, m_c_choices: Sequence[int], *,
@@ -300,6 +308,30 @@ def packed_twins(domain: Domain, positions: Array,
 def _supports_packed_compact(c: Candidate) -> bool:
     from .api import supports_compact
     return supports_compact(c.backend, c.strategy, "packed")
+
+
+def sfc_twins(domain: Domain, positions: Array,
+              candidates: Sequence[Candidate], *, slack: float = 1.25,
+              align: int = 8) -> List[Candidate]:
+    """The SFC cluster-layout axis: for every candidate whose
+    (backend, strategy) implements the compressed cluster-pair list, a
+    twin with ``layout="sfc"`` and a ``pair_cap`` bound measured from
+    ``positions`` (the same slack-plus-alignment contract as ``m_c`` /
+    ``row_cap``). Only dense, undistributed candidates get a twin: the
+    pair list *is* the compaction (a compact twin would be redundant),
+    and the distributed axis composes via :func:`halo_twins` afterwards."""
+    from .api import suggest_pair_cap, supports_layout
+    twins: List[Candidate] = []
+    bound: Optional[int] = None
+    for c in candidates:
+        if (c.layout != "dense" or c.compact or c.distributed
+                or not supports_layout(c.backend, c.strategy, "sfc")):
+            continue
+        if bound is None:
+            bound = suggest_pair_cap(domain, positions, slack=slack,
+                                     align=align)
+        twins.append(dataclasses.replace(c, layout="sfc", pair_cap=bound))
+    return list(dict.fromkeys(twins))
 
 
 def halo_twins(domain: Domain, positions: Array,
@@ -515,6 +547,7 @@ def tune(domain: Domain, kernel: Optional[PairKernel] = None,
          m_c_slack: float = 1.5,
          include_compact: bool = True,
          include_packed: bool = True,
+         include_sfc: bool = True,
          shard_counts: Optional[Sequence[int]] = None,
          top_k: int = DEFAULT_TOP_K,
          reps: Optional[int] = None, budget_s: float = 0.5,
@@ -549,6 +582,10 @@ def tune(domain: Domain, kernel: Optional[PairKernel] = None,
         ``row_cap`` measured from ``positions``) for every candidate —
         dense *and* compacted — whose (backend, strategy) implements the
         packed layout: the dense-vs-packed axis of the search.
+      include_sfc: add an SFC cluster-layout twin (``layout="sfc"``,
+        ``pair_cap`` measured from ``positions``) for every dense
+        candidate whose (backend, strategy) implements the compressed
+        cluster-pair list: the dense-vs-sfc axis of the search.
       shard_counts: halo shard counts to sweep (the distributed axis —
         every cell-schedule candidate gets a ``backend="halo"`` twin per
         viable count). Default: the full visible device count when more
@@ -631,6 +668,19 @@ def tune(domain: Domain, kernel: Optional[PairKernel] = None,
                 padded_row_counts(domain, _counts_box[0]))))
         return _row_max[0]
 
+    # measured pair-list size, memoized — the pair_cap analogue of
+    # max_row_count for the sfc-layout candidates
+    _pair_max: list = []
+
+    def max_pair_count() -> int:
+        if not _pair_max:
+            from .binning import cell_counts, sfc_pair_count
+            if not _counts_box:
+                _counts_box.append(cell_counts(domain, positions))
+            _pair_max.append(int(sfc_pair_count(domain,
+                                                counts=_counts_box[0])))
+        return _pair_max[0]
+
     def active_safe(c: Candidate, strict: bool = True) -> bool:
         if c.layout == "packed":
             if c.row_cap is None:
@@ -640,6 +690,15 @@ def tune(domain: Domain, kernel: Optional[PairKernel] = None,
                         "(repro.core.suggest_row_cap measures one)")
                 return False
             if c.row_cap < max_row_count():
+                return False
+        if c.layout == "sfc":
+            if c.pair_cap is None:
+                if strict:
+                    raise ValueError(
+                        f"sfc candidate {c} has no pair_cap bound "
+                        "(repro.core.suggest_pair_cap measures one)")
+                return False
+            if c.pair_cap < max_pair_count():
                 return False
         if c.distributed:
             ns = c.n_shards
@@ -689,6 +748,9 @@ def tune(domain: Domain, kernel: Optional[PairKernel] = None,
                 domain, positions, candidates)
         if include_packed:
             candidates = list(candidates) + packed_twins(
+                domain, positions, candidates)
+        if include_sfc:
+            candidates = list(candidates) + sfc_twins(
                 domain, positions, candidates)
         if shard_counts is None:
             # default distributed axis: the full local mesh (one extra

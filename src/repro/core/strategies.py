@@ -32,7 +32,8 @@ import jax
 import jax.numpy as jnp
 
 from .binning import (EMPTY_POS, CellBins, Occupancy, PackedRows,
-                      gather_pencil_rows)
+                      SfcClusters, gather_pencil_rows, sfc_cluster_tables,
+                      sfc_slot_tables)
 from .domain import Domain
 from .interactions import PairKernel, pair_contribution
 
@@ -652,6 +653,80 @@ def xpencil_packed(domain: Domain, packed: PackedRows, kernel: PairKernel,
     return tuple(scatter(o) for o in outs)
 
 
+# --------------------------------------------------------------------------
+# SFC cluster schedule: compressed cluster-pair list over curve clusters
+# --------------------------------------------------------------------------
+#
+# The cluster-vs-stencil-slot runner behind layout="sfc"
+# (``binning.SfcClusters``). Bit-identity with ``cell_dense`` is by
+# construction: for every interior cell, slot k of the dense sweep reduces
+# the same m_c x m_c masked tile against the same padded source slab, and
+# the per-cell accumulator adds the 27 slot terms in ascending k — here the
+# kept-k loop runs in the same ascending order and a dropped k contributes
+# the exact float the dense sweep adds for an empty slab (an all-masked
+# ``pair_contribution`` reduces each row to the same signed zero), so the
+# per-cell float sums associate identically. The only way to lose a pair is
+# ``pair_cap`` truncation, which is detected and replanned, never silent.
+
+
+def cell_sfc(domain: Domain, sfc: SfcClusters, kernel: PairKernel,
+             batch_size: int = 64) -> ForceOut:
+    """Reference SFC cluster schedule -> (n_clusters, csize*m_c) tiles.
+
+    ``batch_size`` is accepted for signature parity with the other
+    schedules but unused — the pair list itself is the work compaction
+    (the 27-slot python loop is the static stencil, not a chunk axis).
+    """
+    del batch_size
+    m_c, csize = sfc.bins.m_c, sfc.csize
+    t = sfc_cluster_tables(domain, csize, sfc.curve)
+    tgt_base, src_base = sfc_slot_tables(domain, m_c, csize, sfc.curve)
+    n_clusters = t.n_clusters
+    cut2 = domain.cutoff ** 2
+    dt = sfc.bins.planes["x"].dtype
+
+    # kept-pair bitmask recovered from the codes; the sentinel decodes to
+    # cluster n_clusters and is dropped. Kept codes are unique, so the
+    # integer scatter-add is an exact bitwise OR.
+    kept = jnp.zeros((n_clusters,), jnp.int32).at[sfc.codes >> 5].add(
+        jnp.int32(1) << (sfc.codes & 31), mode="drop")
+
+    # flat padded planes + one appended sentinel cell (always empty)
+    def ext(plane, fill):
+        return jnp.concatenate(
+            [plane.reshape(-1),
+             jnp.full((m_c,), fill, plane.dtype)])
+
+    xs = ext(sfc.bins.planes["x"], EMPTY_POS)
+    ys = ext(sfc.bins.planes["y"], EMPTY_POS)
+    zs = ext(sfc.bins.planes["z"], EMPTY_POS)
+    ids = ext(sfc.bins.slot_id, -1)
+
+    rank = jnp.arange(m_c, dtype=jnp.int32)
+    tidx = jnp.asarray(tgt_base)[:, :, None] + rank     # (n_cl, csize, m_c)
+    tx, ty, tz = xs[tidx], ys[tidx], zs[tidx]
+    tid = ids[tidx]
+
+    src_base = jnp.asarray(src_base)
+    acc = tuple(jnp.zeros((n_clusters, csize, m_c), dtype=dt)
+                for _ in range(4))
+    for k in range(27):
+        sidx = src_base[:, k, :, None] + rank           # (n_cl, csize, m_c)
+        sx, sy, sz, sid = xs[sidx], ys[sidx], zs[sidx], ids[sidx]
+        use = ((kept >> k) & 1).astype(bool)
+        ddx = tx[..., :, None] - sx[..., None, :]
+        ddy = ty[..., :, None] - sy[..., None, :]
+        ddz = tz[..., :, None] - sz[..., None, :]
+        mask = ((sid[..., None, :] != tid[..., :, None])
+                & (sid[..., None, :] >= 0) & (tid[..., :, None] >= 0)
+                & use[:, None, None, None])
+        fx, fy, fz, pot = pair_contribution(kernel, ddx, ddy, ddz, mask,
+                                            cut2)
+        out = (fx.sum(-1), fy.sum(-1), fz.sum(-1), pot.sum(-1))
+        acc = tuple(a + o for a, o in zip(acc, out))
+    return tuple(a.reshape(n_clusters, csize * m_c) for a in acc)
+
+
 STRATEGIES = {
     "par_part": par_part,
     "cell_dense": cell_dense,
@@ -667,4 +742,8 @@ SPARSE_STRATEGIES = {
 
 PACKED_STRATEGIES = {
     "xpencil": xpencil_packed,
+}
+
+SFC_STRATEGIES = {
+    "cell_dense": cell_sfc,
 }

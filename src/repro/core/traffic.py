@@ -138,6 +138,41 @@ def packed_report(report: TrafficReport, m_c: int,
     )
 
 
+def sfc_report(domain: Domain, m_c: int, avg_ppc: float,
+               csize: int | None = None, fill: float = 1.0) -> TrafficReport:
+    """SFC cluster layout cost of the Par-Cell schedule.
+
+    The SFC layout replaces the dense 27-stencil sweep with the compressed
+    cluster-pair list: the grid iterates only the *kept* pairs (``fill``
+    fraction of the ``27 * n_clusters`` stencil slots), so empty stencil
+    work disappears from both the step count and the HBM loads — the same
+    effect occupancy compaction has on pencils, but at cluster-pair
+    granularity and paid for by one int32 pair code per step instead of a
+    per-pencil occupancy scan. Per kept pair the kernel stages the
+    ``csize`` source cells (the target tile stays resident across the
+    cluster's consecutive pairs and is amortized over them); each staged
+    source byte is reused by the cluster's ``csize * m_c`` targets.
+    """
+    if csize is None:
+        from .binning import DEFAULT_CSIZE
+        csize = DEFAULT_CSIZE
+    fill = min(max(float(fill), 1e-3), 1.0)
+    ppc = max(avg_ppc, 1e-3)
+    n_cells = domain.n_cells
+    n_clusters = -(-n_cells // csize)
+    total_inter = n_cells * 27.0 * ppc * ppc
+    pad2 = (m_c / ppc) ** 2
+    cell_bytes = m_c * FIELD_BYTES
+    kept_pairs = 27.0 * fill                      # kept pairs per cluster
+    # target tile once per cluster + (sources + pair code) per kept pair
+    loads = n_clusters * (csize * cell_bytes
+                          + kept_pairs * (csize * cell_bytes + 4))
+    return TrafficReport(
+        "cell_dense_sfc", loads / max(total_inter, 1e-9),
+        2 * csize * cell_bytes, csize * ppc, 1.0 - 1.0 / pad2,
+        max(1, int(round(n_clusters * kept_pairs))))
+
+
 def candidate_cost(domain: Domain, m_c: int, avg_ppc: float, strategy: str,
                    subbox: Tuple[int, int, int] | None = None,
                    compact: bool = False, fill: float = 1.0,
@@ -155,11 +190,17 @@ def candidate_cost(domain: Domain, m_c: int, avg_ppc: float, strategy: str,
     active-work-unit ``fill`` fraction (see :func:`compact_report`);
     ``layout="packed"`` scores the packed-row layout
     (see :func:`packed_report`); the two axes compose multiplicatively.
+    ``layout="sfc"`` scores the compressed cluster-pair list
+    (see :func:`sfc_report`) — there ``fill`` is intrinsic to the pair
+    list, and ``compact`` is a no-op, exactly as in the execution path.
     """
     if strategy == "naive_n2":
         n = domain.n_cells * max(avg_ppc, 1e-3)
         total_inter = domain.n_cells * 27.0 * max(avg_ppc, 1e-3) ** 2
         return n * n * FIELD_BYTES / max(total_inter, 1e-9)
+    if layout == "sfc":
+        return sfc_report(domain, m_c, max(avg_ppc, 1e-3),
+                          fill=fill).hbm_bytes_per_interaction
     reports = model(domain, m_c, max(avg_ppc, 1e-3), subbox=subbox)
     report = reports[strategy]
     if layout == "packed":

@@ -46,9 +46,9 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from ..core.binning import (EMPTY_POS, bin_particles, cell_counts,
-                            pack_rows, shard_pencil_active,
-                            shard_slab_counts)
+from ..core.binning import (EMPTY_POS, bin_particles, build_sfc_clusters,
+                            cell_counts, pack_rows, sfc_pair_count,
+                            shard_pencil_active, shard_slab_counts)
 from ..core.domain import Domain, slab_domain
 from ..obs import metrics as _obs_metrics
 from ..obs.trace import event as _obs_event, trace as _obs_trace
@@ -200,6 +200,20 @@ def halo_impl(plan):
                 row_counts=exchange(packed.row_counts[..., None],
                                     0)[..., 0])
             f, pot = inner_fn(inner, packed, local_state)
+        elif plan.layout == "sfc":
+            # exchange the dense binned planes first — the SFC pair-list
+            # bitmask is occupancy-driven (built from slot_id), so ghost
+            # planes arriving as dense slots feed the compressed pair
+            # list with no extra bookkeeping; each shard then builds its
+            # own slab-local cluster order under the plan's static
+            # pair_cap (a per-shard bound, checked per shard by
+            # halo_overflow_class)
+            bins = dataclasses.replace(bins,
+                                       planes=exchange_planes(bins.planes),
+                                       slot_id=exchange(sid, -1))
+            sfc = build_sfc_clusters(local_dom, bins,
+                                     pair_cap=plan.pair_cap)
+            f, pot = inner_fn(inner, sfc, local_state)
         else:
             bins = dataclasses.replace(bins,
                                        planes=exchange_planes(bins.planes),
@@ -246,16 +260,46 @@ def halo_overflow(plan, counts: Array) -> bool:
 
 def halo_overflow_class(plan, counts: Array) -> Optional[str]:
     """Which shard-level bound overflowed — ``"shard_cap"`` /
-    ``"max_active"`` — or None (:func:`halo_overflow` with the bound
-    named, feeding ``InteractionPlan.overflow_class``)."""
+    ``"max_active"`` / ``"pair_cap"`` — or None (:func:`halo_overflow`
+    with the bound named, feeding ``InteractionPlan.overflow_class``)."""
     loads = shard_slab_counts(plan.domain, counts, plan.n_shards)
     if int(jnp.max(loads)) > plan.shard_cap:
         return "shard_cap"
+    if plan.layout == "sfc":
+        if max(shard_sfc_pairs(plan.domain, counts,
+                               plan.n_shards)) > plan.pair_cap:
+            return "pair_cap"
     if plan.compact:
         act = shard_pencil_active(plan.domain, counts, plan.n_shards)
         if int(jnp.max(act)) > plan.max_active:
             return "max_active"
     return None
+
+
+def shard_sfc_pairs(domain: Domain, counts: Array, n_shards: int) -> list:
+    """Per-shard compressed pair-list lengths of an SFC halo plan.
+
+    Each shard builds its pair list over its *slab* domain's cluster
+    order, with the Z ghost planes holding the neighbouring shard's
+    boundary occupancy (periodic wrap across the ring, empty on open Z
+    boundaries) — exactly the occupancy the exchanged planes carry at
+    run time, so this probe bounds every shard's traced ``n_pairs``
+    the way ``sfc_pair_count`` bounds the single-device one."""
+    nx, ny, nz = domain.ncells
+    nz_loc = nz // n_shards
+    grid = np.asarray(counts).reshape(nz, ny, nx)
+    local_dom = slab_domain(domain, n_shards)
+    pz = domain.periodic_axes[2]
+    empty = np.zeros((ny, nx), grid.dtype)
+    out = []
+    for s in range(n_shards):
+        lo, hi = s * nz_loc - 1, (s + 1) * nz_loc
+        below = grid[lo % nz] if (pz or lo >= 0) else empty
+        above = grid[hi % nz] if (pz or hi < nz) else empty
+        out.append(sfc_pair_count(
+            local_dom, counts=grid[s * nz_loc:(s + 1) * nz_loc],
+            ghost_z=(below, above)))
+    return out
 
 
 # --------------------------------------------------------------------------

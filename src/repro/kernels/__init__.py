@@ -20,14 +20,14 @@ through exactly the API users already select strategies with.
 """
 
 from ..core.api import InteractionPlan, ParticleState, register_backend
-from ..core.binning import CellBins, PackedRows
-from .ops import (allin_interactions, prefix_sum, window_attention,
-                  xpencil_interactions, xpencil_packed_interactions,
-                  xpencil_sparse_interactions)
+from ..core.binning import CellBins, PackedRows, SfcClusters
+from .ops import (allin_interactions, cell_sfc_interactions, prefix_sum,
+                  window_attention, xpencil_interactions,
+                  xpencil_packed_interactions, xpencil_sparse_interactions)
 
-__all__ = ["allin_interactions", "prefix_sum", "window_attention",
-           "xpencil_interactions", "xpencil_packed_interactions",
-           "xpencil_sparse_interactions"]
+__all__ = ["allin_interactions", "cell_sfc_interactions", "prefix_sum",
+           "window_attention", "xpencil_interactions",
+           "xpencil_packed_interactions", "xpencil_sparse_interactions"]
 
 
 # -- plan/execute backend registration (normalized signature) ---------------
@@ -57,3 +57,12 @@ def _pallas_xpencil_packed(plan: InteractionPlan, packed: PackedRows,
         plan.domain, packed, plan.kernel,
         max_active=plan.max_active if plan.compact else None,
         interpret=plan.interpret)
+
+
+@register_backend("pallas", "cell_dense", compact=True, layout="sfc")
+def _pallas_cell_sfc(plan: InteractionPlan, sfc: SfcClusters,
+                     state: ParticleState):
+    # compact=True is a no-op for the SFC layout: the compressed pair list
+    # IS the compaction (mirrors the reference registration in core.api).
+    return cell_sfc_interactions(plan.domain, sfc, plan.kernel,
+                                 interpret=plan.interpret)

@@ -12,14 +12,19 @@ from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
-from ..core.binning import (CellBins, PackedRows, dense_to_particles,
-                            full_pencil_occupancy, packed_to_particles,
-                            pencil_occupancy)
+import numpy as np
+
+from ..core.binning import (EMPTY_POS, CellBins, PackedRows, SfcClusters,
+                            dense_to_particles, full_pencil_occupancy,
+                            packed_to_particles, pencil_occupancy,
+                            sfc_cluster_tables, sfc_slot_tables,
+                            sfc_to_particles)
 from ..core.domain import Domain
 from ..core.interactions import PairKernel
 from ._platform import resolve_interpret as _interpret
 from .allin import allin_forces
 from .prefix_sum import prefix_sum as _prefix_sum
+from .sfc import cell_sfc_forces
 from .window_attn import window_attention as _window_attention
 from .xpencil import (xpencil_forces, xpencil_packed_forces,
                       xpencil_sparse_forces)
@@ -97,6 +102,74 @@ def xpencil_packed_interactions(domain: Domain, packed: PackedRows,
 
     fx, fy, fz, pot = (scatter(r) for r in compact)
     return packed_to_particles(domain, packed, fx, fy, fz, pot)
+
+
+def cell_sfc_interactions(domain: Domain, sfc: SfcClusters,
+                          kernel: PairKernel,
+                          interpret: Optional[bool] = None
+                          ) -> Tuple[Array, Array]:
+    """SFC cluster-pair kernel -> per-particle (forces (N,3), potential (N,)).
+
+    Gathers the cluster target tiles (plus one all-sentinel ghost row the
+    pair-list padding decodes to), stages the flattened padded planes with
+    one appended sentinel cell, and runs the compressed-pair-list Pallas
+    kernel (``kernels.sfc``). Clusters with no kept pair are never visited
+    by the grid, so their output rows are explicitly zeroed from the kept
+    mask before scattering back to particle order — identical to the
+    reference runner, whose fully-masked stencil terms accumulate exact
+    (+0.0) zeros.
+    """
+    bins = sfc.bins
+    m_c, csize = bins.m_c, sfc.csize
+    tables = sfc_cluster_tables(domain, csize, sfc.curve)
+    tgt_base, src_base = sfc_slot_tables(domain, m_c, csize, sfc.curve)
+    n_clusters = tables.n_clusters
+    total = bins.slot_id.size
+    tile_w = csize * m_c
+
+    def ext(plane: Array, fill) -> Array:   # flatten + one sentinel cell
+        flat = plane.reshape(-1)
+        return jnp.concatenate(
+            [flat, jnp.full((m_c,), fill, flat.dtype)])[None, :]
+
+    flats = {"x": ext(bins.planes["x"], EMPTY_POS),
+             "y": ext(bins.planes["y"], EMPTY_POS),
+             "z": ext(bins.planes["z"], EMPTY_POS),
+             "id": ext(bins.slot_id, -1)}
+
+    rank = jnp.arange(m_c, dtype=jnp.int32)
+    tidx = (jnp.asarray(tgt_base)[:, :, None] + rank).reshape(
+        n_clusters, tile_w)
+
+    def tile(flat: Array, fill) -> Array:   # gather tiles + ghost row
+        rows = flat[0][tidx]
+        ghost = jnp.full((1, tile_w), fill, rows.dtype)
+        return jnp.concatenate([rows, ghost], axis=0)
+
+    tiles = {"x": tile(flats["x"], EMPTY_POS),
+             "y": tile(flats["y"], EMPTY_POS),
+             "z": tile(flats["z"], EMPTY_POS),
+             "id": tile(flats["id"], -1)}
+
+    src_off = np.concatenate(
+        [np.asarray(src_base).reshape(-1),
+         np.full((27 * csize,), total, np.int32)]).astype(np.int32)
+
+    codes = sfc.codes.astype(jnp.int32)
+    first = jnp.concatenate(
+        [jnp.ones((1,), jnp.int32),
+         ((codes[1:] >> 5) != (codes[:-1] >> 5)).astype(jnp.int32)])
+
+    fx, fy, fz, pot = cell_sfc_forces(
+        tiles, flats, codes, first, jnp.asarray(src_off), csize=csize,
+        m_c=m_c, kernel=kernel, cutoff2=float(domain.cutoff) ** 2,
+        interpret=_interpret(interpret))
+
+    kept = jnp.zeros((n_clusters + 1,), jnp.int32).at[codes >> 5].add(1)
+    has = (kept[:n_clusters] > 0)[:, None]
+    fx, fy, fz, pot = (jnp.where(has, o[:n_clusters], 0.0)
+                       for o in (fx, fy, fz, pot))
+    return sfc_to_particles(domain, sfc, fx, fy, fz, pot)
 
 
 def allin_interactions(domain: Domain, bins: CellBins, kernel: PairKernel,

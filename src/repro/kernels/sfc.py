@@ -1,0 +1,147 @@
+"""SFC cluster-pair interaction kernel (compressed neighbor list) in Pallas.
+
+The dense/compacted kernels iterate a *grid-shaped* schedule (every pencil,
+or every active pencil); this kernel iterates the **compressed cluster-pair
+list** of the SFC layout (``binning.SfcClusters``) directly:
+
+  grid = (pair_cap,)
+    one program per compressed pair code ``cluster * 32 + k`` — the codes
+    array is *scalar-prefetched* (``pltpu.PrefetchScalarGridSpec``), so the
+    output/target BlockSpec index maps decode the cluster id from the code
+    before each step and DMA exactly that cluster's ``csize * m_c`` target
+    tile. Codes are sorted (cluster-major, k-minor), so consecutive
+    programs of one cluster revisit the same resident output block and
+    accumulate stencil terms in ascending-k order — the exact float
+    association of the dense Par-Cell sweep, which is what makes the
+    kernel bit-identical to ``cell_dense`` (see strategies.cell_sfc).
+
+  Source staging: the padded SoA planes are staged whole (flattened, plus
+  one appended always-empty sentinel cell); per stencil slot k and cluster
+  cell j, the scalar-prefetched slot-offset table gives the flat base of
+  the k-shifted cell and a dynamic ``pl.ds`` slice reads its ``m_c`` slots
+  from the staged block — the cluster-tile-from-shared-memory evaluation
+  of the CSCS follow-up. Sentinel pair codes (pair-list padding) decode to
+  the ghost cluster row, whose targets and sources are all sentinels, so
+  they accumulate exact zeros and the row is stripped by the wrapper.
+
+VMEM note: staging the whole padded planes costs ``4 * total`` floats —
+fine at the repo's benchmark scales (a division-12 box at m_c=16 is
+~700 KB); a production-scale TPU variant would DMA per-cluster halo tiles
+instead. Interpret mode (CPU tests) is unaffected.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.interactions import PairKernel
+from ._platform import resolve_interpret
+
+Array = jnp.ndarray
+
+
+def _sfc_kernel(codes_ref, first_ref, off_ref,       # scalar-prefetched
+                xt_ref, yt_ref, zt_ref, it_ref,      # target cluster tile
+                xs_ref, ys_ref, zs_ref, is_ref,      # staged flat planes
+                fx_ref, fy_ref, fz_ref, pot_ref,
+                *, csize: int, m_c: int, kernel: PairKernel,
+                cutoff2: float):
+    p = pl.program_id(0)
+    code = codes_ref[p]
+    a = code >> 5
+    k = code & 31
+
+    @pl.when(first_ref[p] == 1)
+    def _init():                 # first pair of this cluster: zero the tile
+        fx_ref[...] = jnp.zeros_like(fx_ref)
+        fy_ref[...] = jnp.zeros_like(fy_ref)
+        fz_ref[...] = jnp.zeros_like(fz_ref)
+        pot_ref[...] = jnp.zeros_like(pot_ref)
+
+    for j in range(csize):       # static unroll over the cluster's cells
+        base = off_ref[(a * 27 + k) * csize + j]
+        sx = xs_ref[0, pl.ds(base, m_c)]
+        sy = ys_ref[0, pl.ds(base, m_c)]
+        sz = zs_ref[0, pl.ds(base, m_c)]
+        sid = is_ref[0, pl.ds(base, m_c)]
+        lo = j * m_c
+        tx = xt_ref[0, lo:lo + m_c]
+        ty = yt_ref[0, lo:lo + m_c]
+        tz = zt_ref[0, lo:lo + m_c]
+        tid = it_ref[0, lo:lo + m_c]
+
+        ddx = tx[:, None] - sx[None, :]
+        ddy = ty[:, None] - sy[None, :]
+        ddz = tz[:, None] - sz[None, :]
+        r2 = ddx * ddx + ddy * ddy + ddz * ddz
+        mask = ((sid[None, :] != tid[:, None]) & (sid[None, :] >= 0)
+                & (tid[:, None] >= 0) & (r2 < cutoff2) & (r2 > 0.0))
+        r2s = jnp.where(mask, r2, 1.0)
+        w = mask.astype(ddx.dtype)
+        s = kernel.coeff(r2s) * w
+        pot = kernel.potential(r2s) * w
+        fx_ref[0, lo:lo + m_c] += (s * ddx).sum(-1)
+        fy_ref[0, lo:lo + m_c] += (s * ddy).sum(-1)
+        fz_ref[0, lo:lo + m_c] += (s * ddz).sum(-1)
+        pot_ref[0, lo:lo + m_c] += pot.sum(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("csize", "m_c", "kernel",
+                                             "cutoff2", "interpret"))
+def cell_sfc_forces(tiles: dict, flats: dict, codes: Array, first: Array,
+                    src_off: Array, *, csize: int, m_c: int,
+                    kernel: PairKernel, cutoff2: float,
+                    interpret: Optional[bool] = None
+                    ) -> Tuple[Array, Array, Array, Array]:
+    """Run the SFC pair-list kernel over the compressed codes.
+
+    Args:
+      tiles: field name ("x","y","z","id") -> ``(n_clusters + 1,
+        csize * m_c)`` target cluster tiles, last row the all-sentinel
+        ghost cluster the pair-list padding decodes to.
+      flats: same fields -> ``(1, total + m_c)`` flattened padded planes
+        with one appended sentinel cell.
+      codes: (pair_cap,) int32 sorted compressed pair codes.
+      first: (pair_cap,) int32, 1 where a program is its cluster's first
+        pair (zero-initializes the resident output tile).
+      src_off: ((n_clusters + 1) * 27 * csize,) int32 flat slot base of
+        cell j of cluster a shifted by stencil k (ghost row -> sentinel).
+    Returns:
+      (fx, fy, fz, pot), each ``(n_clusters + 1, csize * m_c)`` — rows of
+      clusters with no kept pair are *unwritten* (the wrapper masks them).
+    """
+    interpret = resolve_interpret(interpret)
+    xt = tiles["x"]
+    n_rows, tile_w = xt.shape
+    flat_w = flats["x"].shape[-1]
+
+    def tile_map(p, codes, first, off):
+        return (codes[p] >> 5, 0)
+
+    tile_block = pl.BlockSpec((1, tile_w), tile_map)
+    flat_block = pl.BlockSpec((1, flat_w), lambda p, codes, first, off: (0, 0))
+    out_shape = jax.ShapeDtypeStruct((n_rows, tile_w), xt.dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(codes.shape[0],),
+        in_specs=[tile_block] * 4 + [flat_block] * 4,
+        out_specs=[tile_block] * 4,
+    )
+    body = functools.partial(_sfc_kernel, csize=csize, m_c=m_c,
+                             kernel=kernel, cutoff2=float(cutoff2))
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=[out_shape] * 4,
+        interpret=interpret,
+    )(codes.astype(jnp.int32), first.astype(jnp.int32),
+      src_off.astype(jnp.int32),
+      tiles["x"], tiles["y"], tiles["z"], tiles["id"],
+      flats["x"], flats["y"], flats["z"], flats["id"])

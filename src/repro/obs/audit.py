@@ -124,8 +124,25 @@ def measured_traffic(domain: Domain, positions=None, *, strategy: str,
     elif strategy == "par_part":
         hbm = n * 27 * cell_bytes + n * FIELD_BYTES
     elif strategy == "cell_dense":
-        units = float((grid > 0).sum()) if compact else float(grid.size)
-        hbm = units * (27 + 1) * cell_bytes
+        if layout == "sfc":
+            # measured pair list: the exact kept-pair count the replan
+            # probe uses, plus one target tile per cluster that holds any
+            # particle (a cluster with no particles has no kept pairs)
+            from ..core.binning import (DEFAULT_CSIZE, DEFAULT_CURVE,
+                                        sfc_cluster_tables, sfc_pair_count)
+            csize = DEFAULT_CSIZE
+            tables = sfc_cluster_tables(domain, csize, DEFAULT_CURVE)
+            pairs = float(sfc_pair_count(domain, counts=counts))
+            occ_cells = (np.asarray(counts, np.float64).reshape(-1)
+                         > 0).astype(np.float64)
+            kept_clusters = float((np.bincount(
+                np.asarray(tables.cell_cluster), weights=occ_cells,
+                minlength=tables.n_clusters) > 0).sum())
+            hbm = (kept_clusters * csize * cell_bytes
+                   + pairs * (csize * cell_bytes + 4))
+        else:
+            units = float((grid > 0).sum()) if compact else float(grid.size)
+            hbm = units * (27 + 1) * cell_bytes
     elif strategy == "xpencil":
         per_row = grid.sum(axis=2)                     # (nz, ny)
         active = per_row > 0

@@ -1,0 +1,128 @@
+"""Cross-layout differential test harness (ISSUE 10).
+
+Every registered ``(backend, strategy, layout)`` combination — dense and
+occupancy-compacted, open and periodic — runs on the same clustered scene
+and is held to two bars at once:
+
+* **bit-identity within a strategy**: every backend / layout / compaction
+  of a strategy must reproduce the strategy's reference dense runner
+  bit-for-bit — a layout may move bytes, never change a value;
+* **correctness across strategies**: everything must match the naive
+  O(n^2) oracle to float tolerance.
+
+The combination list is enumerated from the live backend registry, so a
+newly registered layout or backend is covered by adding nothing here.
+This file replaces the per-layout parity tests that used to live in
+test_packed.py / test_sparse.py (compact parity, packed parity, naive
+oracle cross-checks) with one shared fixture.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (Domain, ParticleState, make_lennard_jones, plan,
+                        scenarios, supports_compact)
+from repro.core.api import _BACKENDS
+import repro.kernels  # noqa: F401  (register the pallas backends)
+
+KERN = make_lennard_jones()
+N = 280
+DIVISION = 6
+
+# the full matrix: every registered triple, with a compacted twin whenever
+# the triple implements the compacted path
+COMBOS = [
+    (backend, strategy, layout, compact)
+    for (backend, strategy, layout) in sorted(_BACKENDS)
+    for compact in ((False, True)
+                    if supports_compact(backend, strategy, layout)
+                    else (False,))
+]
+
+_ids = [f"{b}-{s}-{lay}{'-compact' if c else ''}"
+        for (b, s, lay, c) in COMBOS]
+
+# per-session caches: the baselines are shared by every matrix entry
+_scenes = {}
+_baselines = {}
+_oracles = {}
+
+
+def _scene(periodic):
+    if periodic not in _scenes:
+        dom = Domain.cubic(DIVISION, cutoff=1.0, periodic=periodic)
+        pos = scenarios.sample_gaussian_blob(
+            dom, jax.random.PRNGKey(3), N, sigma_frac=0.08)
+        _scenes[periodic] = (dom, pos)
+    return _scenes[periodic]
+
+
+def _baseline(strategy, periodic):
+    """The strategy's reference dense result — the bit-identity anchor."""
+    if (strategy, periodic) not in _baselines:
+        dom, pos = _scene(periodic)
+        f, q = plan(dom, KERN, positions=pos, strategy=strategy,
+                    backend="reference").execute(ParticleState(pos))
+        _baselines[(strategy, periodic)] = (np.asarray(f), np.asarray(q))
+    return _baselines[(strategy, periodic)]
+
+
+def _oracle(periodic):
+    """The naive O(n^2) all-pairs result — the correctness anchor."""
+    if periodic not in _oracles:
+        dom, pos = _scene(periodic)
+        f, q = plan(dom, KERN, positions=pos,
+                    strategy="naive_n2").execute(ParticleState(pos))
+        _oracles[periodic] = (np.asarray(f), np.asarray(q))
+    return _oracles[periodic]
+
+
+@pytest.mark.parametrize("periodic", [False, True],
+                         ids=["open", "periodic"])
+@pytest.mark.parametrize("backend,strategy,layout,compact", COMBOS,
+                         ids=_ids)
+def test_layout_matrix(backend, strategy, layout, compact, periodic):
+    dom, pos = _scene(periodic)
+    p = plan(dom, KERN, positions=pos, strategy=strategy, backend=backend,
+             layout=layout, compact=compact, interpret=True)
+    f, q = p.execute(ParticleState(pos))
+    f, q = np.asarray(f), np.asarray(q)
+
+    f_ref, q_ref = _baseline(strategy, periodic)
+    np.testing.assert_array_equal(f, f_ref)
+    np.testing.assert_array_equal(q, q_ref)
+
+    f_o, q_o = _oracle(periodic)
+    np.testing.assert_allclose(f, f_o, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(q, q_o, rtol=3e-4, atol=3e-5)
+
+
+def test_matrix_covers_every_registered_layout():
+    """The harness only proves what it enumerates: the registry must
+    contain the dense, packed, and sfc layouts on both backends."""
+    triples = set(_BACKENDS)
+    assert ("reference", "xpencil", "packed") in triples
+    assert ("pallas", "xpencil", "packed") in triples
+    assert ("reference", "cell_dense", "sfc") in triples
+    assert ("pallas", "cell_dense", "sfc") in triples
+    layouts = {lay for (_, _, lay) in triples}
+    assert layouts == {"dense", "packed", "sfc"}
+
+
+def test_sfc_layouts_agree_across_backends():
+    """Reference sfc and pallas sfc are bit-identical to each other (both
+    anchor to the dense cell_dense sweep, so transitivity already implies
+    it — asserted directly so a failure names the sfc pair, not an
+    anchor)."""
+    for periodic in (False, True):
+        dom, pos = _scene(periodic)
+        state = ParticleState(pos)
+        f_r, q_r = plan(dom, KERN, positions=pos, strategy="cell_dense",
+                        layout="sfc", backend="reference",
+                        interpret=True).execute(state)
+        f_p, q_p = plan(dom, KERN, positions=pos, strategy="cell_dense",
+                        layout="sfc", backend="pallas",
+                        interpret=True).execute(state)
+        np.testing.assert_array_equal(np.asarray(f_r), np.asarray(f_p))
+        np.testing.assert_array_equal(np.asarray(q_r), np.asarray(q_p))

@@ -32,15 +32,6 @@ def _blob(division=6, n=300, seed=0, sigma_frac=0.08, periodic=False):
     return dom, pos
 
 
-SCENES = [
-    ("uniform", lambda dom, key, n: dom.sample_uniform(key, n)),
-    ("gaussian_blob", lambda dom, key, n: scenarios.sample_gaussian_blob(
-        dom, key, n, sigma_frac=0.08)),
-    ("power_law", lambda dom, key, n: scenarios.sample_power_law_cluster(
-        dom, key, n, n_clusters=2, alpha=2.0, r_min_frac=0.05)),
-]
-
-
 # ---------------------------------------------------------------------------
 # pack_rows / unpack_scatter algebra
 # ---------------------------------------------------------------------------
@@ -126,35 +117,9 @@ def test_row_cap_hit_exactly_no_overflow():
 
 
 # ---------------------------------------------------------------------------
-# bit-parity with the dense oracles (the acceptance bar)
+# layout-specific edge geometry (generic packed-vs-dense parity across
+# scenes/backends/compaction lives in test_layout_matrix.py)
 # ---------------------------------------------------------------------------
-
-@pytest.mark.parametrize("scene,sample", SCENES)
-@pytest.mark.parametrize("compact", [False, True])
-def test_reference_packed_bit_parity(scene, sample, compact):
-    dom = Domain.cubic(6, cutoff=1.0)
-    pos = sample(dom, jax.random.PRNGKey(3), 300)
-    state = ParticleState(pos)
-    f_d, q_d = plan(dom, KERN, positions=pos, strategy="xpencil").execute(
-        state)
-    f_p, q_p = plan(dom, KERN, positions=pos, strategy="xpencil",
-                    layout="packed", compact=compact).execute(state)
-    np.testing.assert_array_equal(np.asarray(f_p), np.asarray(f_d))
-    np.testing.assert_array_equal(np.asarray(q_p), np.asarray(q_d))
-
-
-@pytest.mark.parametrize("compact", [False, True])
-def test_pallas_packed_bit_parity(compact):
-    dom, pos = _blob(n=250, seed=4)
-    state = ParticleState(pos)
-    f_d, q_d = plan(dom, KERN, positions=pos, strategy="xpencil").execute(
-        state)
-    f_p, q_p = plan(dom, KERN, positions=pos, strategy="xpencil",
-                    backend="pallas", layout="packed", compact=compact,
-                    interpret=True).execute(state)
-    np.testing.assert_array_equal(np.asarray(f_p), np.asarray(f_d))
-    np.testing.assert_array_equal(np.asarray(q_p), np.asarray(q_d))
-
 
 def test_packed_periodic_thin_axes_bit_parity():
     """Periodic 1-cell-thick axes (the issue's hardest ghost case): the
@@ -180,18 +145,6 @@ def test_packed_periodic_thin_axes_bit_parity():
     f_p2, _ = plan(dom2, KERN, positions=pos2, strategy="xpencil",
                    layout="packed").execute(state2)
     np.testing.assert_array_equal(np.asarray(f_p2), np.asarray(f_d2))
-
-
-def test_packed_matches_naive_oracle_periodic():
-    dom, pos = _blob(division=4, n=200, seed=5, sigma_frac=0.12,
-                     periodic=True)
-    state = ParticleState(pos)
-    f_o, _ = plan(dom, KERN, positions=pos, strategy="naive_n2").execute(
-        state)
-    f_p, _ = plan(dom, KERN, positions=pos, strategy="xpencil",
-                  layout="packed", compact=True).execute(state)
-    np.testing.assert_allclose(np.asarray(f_p), np.asarray(f_o),
-                               rtol=3e-4, atol=3e-4)
 
 
 def test_packed_with_fields_binned():

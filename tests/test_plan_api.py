@@ -61,7 +61,7 @@ def test_pallas_backend_parity_periodic(strategy):
 
 def test_backend_matrix_covers_paper_kernels():
     m = backend_matrix()
-    assert set(m["pallas"]) == {"xpencil", "allin"}
+    assert set(m["pallas"]) == {"xpencil", "allin", "cell_dense"}
     assert set(m["reference"]) == {"par_part", "cell_dense", "xpencil",
                                    "allin"}
 

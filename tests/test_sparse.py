@@ -27,15 +27,6 @@ def _blob(division=6, n=300, seed=0, sigma_frac=0.08):
     return dom, pos
 
 
-SCENES = [
-    ("uniform", lambda dom, key, n: dom.sample_uniform(key, n)),
-    ("gaussian_blob", lambda dom, key, n: scenarios.sample_gaussian_blob(
-        dom, key, n, sigma_frac=0.08)),
-    ("power_law", lambda dom, key, n: scenarios.sample_power_law_cluster(
-        dom, key, n, n_clusters=2, alpha=2.0, r_min_frac=0.05)),
-]
-
-
 # ---------------------------------------------------------------------------
 # occupancy summaries
 # ---------------------------------------------------------------------------
@@ -100,52 +91,8 @@ def test_gather_pencil_rows_matches_plane_rows():
                 np.asarray(bins.planes["x"][z + 1 + dz, y + 1 + dy]))
 
 
-# ---------------------------------------------------------------------------
-# bit-parity with the dense oracles (the acceptance bar)
-# ---------------------------------------------------------------------------
-
-@pytest.mark.parametrize("scene,sample", SCENES)
-@pytest.mark.parametrize("strategy", ["xpencil", "cell_dense", "allin"])
-def test_reference_compact_bit_parity(strategy, scene, sample):
-    dom = Domain.cubic(6, cutoff=1.0)
-    pos = sample(dom, jax.random.PRNGKey(3), 300)
-    kern = make_lennard_jones()
-    state = ParticleState(pos)
-    f_d, q_d = plan(dom, kern, positions=pos, strategy=strategy).execute(
-        state)
-    f_c, q_c = plan(dom, kern, positions=pos, strategy=strategy,
-                    compact=True).execute(state)
-    np.testing.assert_array_equal(np.asarray(f_c), np.asarray(f_d))
-    np.testing.assert_array_equal(np.asarray(q_c), np.asarray(q_d))
-
-
-@pytest.mark.parametrize("scene,sample", SCENES)
-def test_pallas_compact_bit_parity(scene, sample):
-    dom = Domain.cubic(6, cutoff=1.0)
-    pos = sample(dom, jax.random.PRNGKey(4), 250)
-    kern = make_lennard_jones()
-    state = ParticleState(pos)
-    f_d, q_d = plan(dom, kern, positions=pos, strategy="xpencil").execute(
-        state)
-    f_p, q_p = plan(dom, kern, positions=pos, strategy="xpencil",
-                    backend="pallas", compact=True,
-                    interpret=True).execute(state)
-    np.testing.assert_array_equal(np.asarray(f_p), np.asarray(f_d))
-    np.testing.assert_array_equal(np.asarray(q_p), np.asarray(q_d))
-
-
-def test_compact_matches_naive_oracle_periodic():
-    dom = Domain.cubic(4, cutoff=1.0, periodic=True)
-    pos = scenarios.sample_gaussian_blob(dom, jax.random.PRNGKey(5), 200,
-                                         sigma_frac=0.12)
-    kern = make_lennard_jones()
-    state = ParticleState(pos)
-    f_o, _ = plan(dom, kern, positions=pos, strategy="naive_n2").execute(
-        state)
-    f_c, _ = plan(dom, kern, positions=pos, strategy="xpencil",
-                  compact=True).execute(state)
-    np.testing.assert_allclose(np.asarray(f_c), np.asarray(f_o),
-                               rtol=3e-4, atol=3e-4)
+# (compact-vs-dense parity across scenes/strategies/backends lives in
+# test_layout_matrix.py — the shared cross-layout differential harness)
 
 
 # ---------------------------------------------------------------------------
